@@ -1,0 +1,84 @@
+"""Kernel-level microbenchmarks: jnp oracle wall time (the CPU execution
+path) + interpret-mode parity spot check.  Native Pallas timings require a
+TPU; on this host the derived column reports oracle μs and the achieved
+GFLOP/s of the XLA path for context."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.kernels import ref
+from repro.kernels.fused_scorer import fused_topk_l2_pallas
+
+
+def _time(fn, *args, repeats=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_kernels():
+    rng = np.random.default_rng(0)
+    rows = []
+    for B, n, d in ((256, 4096, 64), (512, 8192, 128)):
+        q = rng.standard_normal((B, d)).astype(np.float32)
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        t = _time(lambda a, b: ref.pairwise_l2(a, b), q, x)
+        gflops = 2 * B * n * d / t / 1e9
+        rows.append(f"kernels/pairwise_l2_B{B}_n{n}_d{d},{t * 1e6:.0f},"
+                    f"gflops={gflops:.1f}")
+        t = _time(lambda a, b: ref.fused_topk_l2(a, b, k=32), q, x)
+        rows.append(f"kernels/fused_topk_B{B}_n{n}_d{d},{t * 1e6:.0f},"
+                    f"gflops={2 * B * n * d / t / 1e9:.1f}")
+    # interpret-mode parity spot check rides along as a correctness canary
+    q = rng.standard_normal((32, 32)).astype(np.float32)
+    x = rng.standard_normal((128, 32)).astype(np.float32)
+    dd, ii = fused_topk_l2_pallas(q, x, k=8, bq=16, bn=32, interpret=True)
+    dr, ir = ref.fused_topk_l2(q, x, k=8)
+    ok = bool(np.array_equal(np.asarray(ii), np.asarray(ir)))
+    rows.append(f"kernels/interpret_parity,{0.0:.1f},ids_match={ok}")
+    for r in rows:
+        print(r)
+    return rows
+
+
+def bench_engine():
+    """Continuous batching vs static batching on a skewed stream."""
+    from .common import get_context
+    from repro.serving.engine import WaveEngine, EngineStats
+    ctx = get_context()
+    q = ctx.wl.sample(256)
+    eng = WaveEngine(ctx.dqf, wave_size=64, tick_hops=16)
+    # warmup: compiles the tick/hot-phase functions outside the timing
+    eng.submit(ctx.wl.sample(64))
+    eng.run_until_drained()
+    eng.stats = EngineStats()
+    rids = eng.submit(q)
+    out = eng.run_until_drained()
+    assert all(r in out["results"] for r in rids)
+    import time as _t
+    import numpy as _np
+    ctx.dqf.search(q, record=False)          # warmup (compile at B=256)
+    t0 = _t.perf_counter()
+    res = ctx.dqf.search(q, record=False)
+    _np.asarray(res.ids)                     # block on the device result
+    static_s = _t.perf_counter() - t0
+    rows = [
+        f"engine/continuous,{out['wall_s'] / 256 * 1e6:.0f},"
+        f"qps={out['qps']:.0f};p99_ms={out['p99_ms']:.1f};"
+        f"straggled={out['straggled']}",
+        f"engine/static,{static_s / 256 * 1e6:.0f},"
+        f"qps={256 / static_s:.0f}",
+    ]
+    for r in rows:
+        print(r)
+    return rows

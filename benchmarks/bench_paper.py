@@ -1,0 +1,210 @@
+"""Per-table/figure benchmarks reproducing the paper's experiment grid.
+
+Each function prints ``name,us_per_call,derived`` CSV rows (the harness
+contract) and returns a list of rows for run.py's summary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import recall_at_k, ground_truth
+from repro.core.decision_tree import FEATURE_NAMES
+
+from .common import (default_config, eval_row, get_context, timed_search,
+                     N_QUERIES)
+
+
+def _rows(*rows):
+    for r in rows:
+        print(r)
+    return list(rows)
+
+
+# ---------------------------------------------------------- Fig 3 / Fig 5
+def bench_ablation():
+    """NSSG vs DQF+beam vs DQF+decision-tree (paper Fig 3)."""
+    ctx = get_context()
+    d = ctx.dqf
+    r1, t1 = timed_search(lambda q: d.search_baseline(q), ctx.queries)
+    r2, t2 = timed_search(lambda q: d.search_dual_beam(q), ctx.queries)
+    r3, t3 = timed_search(lambda q: d.search(q, record=False), ctx.queries)
+    rows = [
+        eval_row("ablation/nssg_beam", r1, t1, ctx.gt),
+        eval_row("ablation/dqf_beam", r2, t2, ctx.gt),
+        eval_row("ablation/dqf_tree", r3, t3, ctx.gt),
+    ]
+    # headline speedup at matched recall (dist-comp ratio, hw-independent)
+    dc1 = float(np.mean(np.asarray(r1.stats.dist_count)))
+    dc3 = float(np.mean(np.asarray(r3.stats.dist_count)))
+    rows.append(f"ablation/speedup_dist_comps,{0.0:.1f},"
+                f"nssg_over_dqf={dc1 / max(dc3, 1):.2f}x")
+    return _rows(*rows)
+
+
+def bench_recall_qps():
+    """Recall vs QPS curves by sweeping pool size (paper Fig 5)."""
+    ctx = get_context()
+    rows = []
+    for pool in (16, 24, 32, 48, 64, 96):
+        cfg = dataclasses.replace(ctx.dqf.cfg, full_pool=pool,
+                                  hot_pool=min(32, pool))
+        ctx.dqf.cfg = cfg
+        r_b, t_b = timed_search(
+            lambda q: ctx.dqf.search_baseline(q, pool_size=pool), ctx.queries)
+        rows.append(eval_row(f"recall_qps/nssg_pool{pool}", r_b, t_b, ctx.gt))
+        r_d, t_d = timed_search(
+            lambda q: ctx.dqf.search(q, record=False), ctx.queries)
+        rows.append(eval_row(f"recall_qps/dqf_pool{pool}", r_d, t_d, ctx.gt))
+    ctx.dqf.cfg = default_config()
+    return _rows(*rows)
+
+
+# ------------------------------------------------------------- Tables 5/6
+def bench_construction():
+    ctx = get_context()
+    full_s = ctx.dqf.timings.full_build
+    t0 = time.perf_counter()
+    ctx.dqf.rebuild_hot()
+    hot_s = time.perf_counter() - t0
+    return _rows(
+        f"construction/full_index,{full_s * 1e6:.0f},seconds={full_s:.2f}",
+        f"construction/hot_index,{hot_s * 1e6:.0f},seconds={hot_s:.3f};"
+        f"speedup_vs_full={full_s / max(hot_s, 1e-9):.0f}x")
+
+
+def bench_index_size():
+    ctx = get_context()
+    s = ctx.dqf.index_nbytes()
+    return _rows(
+        f"index_size/full,{0.0:.1f},bytes={s['full']}",
+        f"index_size/hot,{0.0:.1f},bytes={s['hot']};"
+        f"ratio={s['hot'] / s['full']:.4f}")
+
+
+# ------------------------------------------------------------------ Fig 6
+def bench_k():
+    ctx = get_context()
+    rows = []
+    for k in (1, 5, 10, 20, 50):
+        cfg = default_config(k=k, full_pool=max(64, 2 * k),
+                             hot_pool=max(32, k))
+        ctx.dqf.cfg = cfg
+        gt = ground_truth(ctx.x, ctx.queries, k)
+        r, t = timed_search(lambda q: ctx.dqf.search(q, record=False),
+                            ctx.queries)
+        rows.append(eval_row(f"effect_k/k{k}", r, t, gt))
+    ctx.dqf.cfg = default_config()
+    return _rows(*rows)
+
+
+# ------------------------------------------------------------------ Fig 7
+def bench_ir():
+    from repro.core.complexity import optimal_ir_numeric
+    ctx = get_context()
+    rows = []
+    for ir in (0.001, 0.005, 0.01, 0.05, 0.1):
+        ctx.dqf.cfg = default_config(index_ratio=ir)
+        ctx.dqf.rebuild_hot()
+        r, t = timed_search(lambda q: ctx.dqf.search(q, record=False),
+                            ctx.queries)
+        rows.append(eval_row(f"index_ratio/ir{ir}", r, t, ctx.gt))
+    ctx.dqf.cfg = default_config()
+    ctx.dqf.rebuild_hot()
+    n = ctx.x.shape[0]
+    rows.append(f"index_ratio/theory_optimum,{0.0:.1f},"
+                f"eq12_ir={optimal_ir_numeric(n, 1.2):.5f}")
+    return _rows(*rows)
+
+
+# ------------------------------------------------------------- Figs 8 + 9
+def bench_depth_freq():
+    ctx = get_context()
+    rows = []
+    for depth in (2, 5, 10, 20):
+        ctx.dqf.cfg = default_config(tree_depth=depth)
+        ctx.dqf.fit_tree(ctx.history, max_depth=depth)
+        r, t = timed_search(lambda q: ctx.dqf.search(q, record=False),
+                            ctx.queries)
+        rows.append(eval_row(f"tree_depth/d{depth}", r, t, ctx.gt))
+    ctx.dqf.cfg = default_config()
+    ctx.dqf.fit_tree(ctx.history)
+    for gap in (20, 50, 100, 200, 500):
+        ctx.dqf.cfg = default_config(eval_gap=gap)
+        r, t = timed_search(lambda q: ctx.dqf.search(q, record=False),
+                            ctx.queries)
+        rows.append(eval_row(f"eval_gap/g{gap}", r, t, ctx.gt))
+    ctx.dqf.cfg = default_config()
+    return _rows(*rows)
+
+
+# ------------------------------------------------------------------ Fig 10
+def bench_addstep():
+    ctx = get_context()
+    rows = []
+    for step in (0, 100, 200, 300, 400):
+        ctx.dqf.cfg = default_config(add_step=step)
+        r, t = timed_search(lambda q: ctx.dqf.search(q, record=False),
+                            ctx.queries)
+        rows.append(eval_row(f"add_step/s{step}", r, t, ctx.gt))
+    ctx.dqf.cfg = default_config()
+    return _rows(*rows)
+
+
+# -------------------------------- DESIGN §2.1: hot layer graph vs MXU mode
+def bench_hot_mode():
+    """Paper-faithful hot NSSG vs the beyond-paper MXU brute-force layer."""
+    ctx = get_context()
+    rows = []
+    for mode in ("graph", "mxu"):
+        ctx.dqf.cfg = default_config(hot_mode=mode)
+        r, t = timed_search(lambda q: ctx.dqf.search(q, record=False),
+                            ctx.queries)
+        rows.append(eval_row(f"hot_mode/{mode}", r, t, ctx.gt))
+    ctx.dqf.cfg = default_config()
+    return _rows(*rows)
+
+
+# ----------------------------------------------------------------- Table 2
+def bench_features():
+    ctx = get_context()
+    imp = ctx.dqf.tree.feature_importance
+    rows = [f"feature_importance/{n},{0.0:.1f},share={imp[i]:.3f}"
+            for i, n in enumerate(FEATURE_NAMES)]
+    return _rows(*rows)
+
+
+# ----------------------------------------------- drift adaptation (claim 3)
+def bench_drift():
+    """Hot-rebuild-only adaptation under a full popularity drift."""
+    ctx = get_context()
+    d, wl = ctx.dqf, ctx.wl
+    r0, _ = timed_search(lambda q: d.search(q, record=False), ctx.queries)
+    dc_before = float(np.mean(np.asarray(r0.stats.dist_count)))
+    wl.drift(1.0)
+    q2 = wl.sample(N_QUERIES)
+    gt2 = ground_truth(ctx.x, q2, d.cfg.k)
+    r_stale, _ = timed_search(lambda q: d.search(q, record=False), q2)
+    dc_stale = float(np.mean(np.asarray(r_stale.stats.dist_count)))
+    # adapt: counters → hot rebuild (full index untouched)
+    d.counter.counts[:] = 0
+    _, t2 = wl.sample(N_HISTORY // 2, with_targets=True)
+    d.counter.record(t2)
+    t0 = time.perf_counter()
+    d.rebuild_hot()
+    rebuild_s = time.perf_counter() - t0
+    r_fresh, _ = timed_search(lambda q: d.search(q, record=False), q2)
+    dc_fresh = float(np.mean(np.asarray(r_fresh.stats.dist_count)))
+    return _rows(
+        f"drift/before,{0.0:.1f},dist_comps={dc_before:.0f}",
+        f"drift/stale_hot,{0.0:.1f},dist_comps={dc_stale:.0f};"
+        f"recall={recall_at_k(np.asarray(r_stale.ids), gt2):.4f}",
+        f"drift/rebuilt_hot,{0.0:.1f},dist_comps={dc_fresh:.0f};"
+        f"recall={recall_at_k(np.asarray(r_fresh.ids), gt2):.4f};"
+        f"rebuild_s={rebuild_s:.3f}")
+
+
+from .common import N_HISTORY  # noqa: E402  (used by bench_drift)

@@ -1,0 +1,96 @@
+"""Shared benchmark context: one dataset + one DQF build reused everywhere.
+
+CPU-scale stand-ins for the paper's datasets (SIFT1M etc. are not available
+offline — DESIGN.md §0): clustered Gaussians, n=8k, d=32, Zipf(1.2) query
+stream.  Every figure-level benchmark reports both wall-clock QPS (this
+host) and mean distance computations per query — the hardware-independent
+work measure the speedups are judged on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core import DQF, DQFConfig, ZipfWorkload, ground_truth, recall_at_k
+
+N = 8_000
+D = 32
+N_QUERIES = 512
+N_HISTORY = 20_000
+SEED = 7
+
+
+def make_dataset(n=N, d=D, clusters=32, seed=SEED, spread=1.5):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((clusters, d)).astype(np.float32) * spread
+    x = centers[rng.integers(0, clusters, n)] \
+        + rng.standard_normal((n, d)).astype(np.float32)
+    return np.ascontiguousarray(x, np.float32)
+
+
+@dataclasses.dataclass
+class BenchContext:
+    x: np.ndarray
+    dqf: DQF
+    wl: ZipfWorkload
+    queries: np.ndarray
+    gt: np.ndarray
+    history: np.ndarray
+
+
+_CTX = {}
+
+
+def default_config(**over) -> DQFConfig:
+    base = dict(knn_k=24, out_degree=24, index_ratio=0.005, k=10,
+                hot_pool=32, full_pool=64, eval_gap=50, tree_depth=10,
+                add_step=0, max_hops=400, n_query_trigger=10 ** 9)
+    base.update(over)
+    return DQFConfig(**base)
+
+
+def get_context(**cfg_over) -> BenchContext:
+    key = tuple(sorted(cfg_over.items()))
+    if key in _CTX:
+        return _CTX[key]
+    x = make_dataset()
+    cfg = default_config(**cfg_over)
+    dqf = DQF(cfg).build(x)
+    wl = ZipfWorkload(x, beta=1.2, sigma=0.05, seed=SEED)
+    _, targets = wl.sample(N_HISTORY, with_targets=True)
+    dqf.counter.record(targets)
+    dqf.rebuild_hot()
+    history = wl.sample(1500)
+    dqf.fit_tree(history)
+    queries = wl.sample(N_QUERIES)
+    gt = ground_truth(x, queries, cfg.k)
+    ctx = BenchContext(x=x, dqf=dqf, wl=wl, queries=queries, gt=gt,
+                       history=history)
+    _CTX[key] = ctx
+    return ctx
+
+
+def timed_search(fn, queries, repeats: int = 3):
+    """(result, best_seconds) with a warmup call (jit compile excluded)."""
+    res = fn(queries)               # warmup/compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn(queries)
+        np.asarray(res.ids)         # block
+        best = min(best, time.perf_counter() - t0)
+    return res, best
+
+
+def eval_row(name, res, seconds, gt, extra=""):
+    ids = np.asarray(res.ids)
+    rec = recall_at_k(ids, gt)
+    qps = ids.shape[0] / seconds
+    dc = float(np.mean(np.asarray(res.stats.dist_count)))
+    us = seconds / ids.shape[0] * 1e6
+    return (f"{name},{us:.1f},recall={rec:.4f};qps={qps:.0f};"
+            f"dist_comps={dc:.0f}{(';' + extra) if extra else ''}")

@@ -1,0 +1,61 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (the harness contract).  Scale is
+CPU-sized (DESIGN.md §0): the dataset is a clustered stand-in for SIFT1M
+and the speedups are judged on distance computations (hardware-independent)
+alongside this host's wall-clock QPS.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only SUBSTR]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+
+    from . import bench_paper as bp
+    from . import bench_kernels as bk
+
+    benches = [
+        ("construction", bp.bench_construction),      # Table 5
+        ("index_size", bp.bench_index_size),          # Table 6
+        ("ablation", bp.bench_ablation),              # Fig 3
+        ("recall_qps", bp.bench_recall_qps),          # Fig 5
+        ("effect_k", bp.bench_k),                     # Fig 6
+        ("index_ratio", bp.bench_ir),                 # Fig 7
+        ("depth_freq", bp.bench_depth_freq),          # Figs 8-9
+        ("add_step", bp.bench_addstep),               # Fig 10
+        ("hot_mode", bp.bench_hot_mode),              # DESIGN §2.1
+        ("features", bp.bench_features),              # Table 2
+        ("drift", bp.bench_drift),                    # claim 3
+        ("kernels", bk.bench_kernels),                # Pallas layer
+        ("engine", bk.bench_engine),                  # serving layer
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# section {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,failed")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

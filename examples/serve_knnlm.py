@@ -1,0 +1,77 @@
+"""Serving example: LM decode with DQF retrieval (kNN-LM interpolation).
+
+Exercises the full serving integration (DESIGN.md §4): a small decoder LM
+produces hidden-state query embeddings at each decode step; the DQF-backed
+RetrievalService returns nearest datastore entries whose payload tokens are
+interpolated into the LM distribution.  The datastore's query traffic is
+Zipf-skewed, so the hot index absorbs most lookups.
+
+Run:  PYTHONPATH=src python examples/serve_knnlm.py
+"""
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import DQFConfig
+from repro.models import lm
+from repro.serving.retrieval import KNNLMHead, RetrievalService
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_config("qwen3-0.6b"), num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=1024,
+        dtype="float32", max_seq_len=512)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    # --- datastore: (hidden-state embedding -> next token) pairs ---------
+    rng = np.random.default_rng(0)
+    n_store = 5000
+    store_embeds = rng.standard_normal((n_store, cfg.d_model)) \
+        .astype(np.float32)
+    store_tokens = rng.integers(0, cfg.vocab_size, n_store).astype(np.int32)
+    svc = RetrievalService.build(
+        store_embeds, store_tokens,
+        DQFConfig(knn_k=16, out_degree=16, index_ratio=0.01, hot_pool=16,
+                  full_pool=48, max_hops=200),
+        history=None)
+    head = KNNLMHead(service=svc, vocab_size=cfg.vocab_size, lam=0.3)
+    print(f"datastore: {n_store} entries, hot index {svc.dqf.hot.size}")
+
+    # --- batched decode with retrieval ----------------------------------
+    B, steps = 4, 16
+    caches = lm.init_decode_caches(cfg, B, max_len=64)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    decode = jax.jit(lambda p, t, c, pos: lm.decode_step(p, cfg, t, c, pos))
+
+    t0 = time.time()
+    generated = []
+    for t in range(steps):
+        logits, caches = decode(params, tok, caches, jnp.int32(t))
+        # hidden-ish query embedding: use logits head projection trick —
+        # here simply the final logits projected back is overkill; use the
+        # embedding of the argmax token as the kNN query (demo purposes)
+        lm_logits = np.asarray(logits[:, 0])
+        q = np.asarray(
+            jnp.take(params["embed"], jnp.argmax(logits[:, 0], -1), axis=0))
+        probs = head(lm_logits, q.astype(np.float32))
+        tok = jnp.asarray(probs.argmax(-1).astype(np.int32))[:, None]
+        generated.append(np.asarray(tok[:, 0]))
+    wall = time.time() - t0
+    gen = np.stack(generated, 1)
+    print(f"generated {B}x{steps} tokens in {wall:.2f}s "
+          f"({B * steps / wall:.1f} tok/s incl. retrieval)")
+    print("sequences:\n", gen)
+    stats = svc.dqf.counter.counts
+    print(f"datastore hot traffic: top-1% of entries got "
+          f"{stats[np.argsort(-stats)[: n_store // 100]].sum() / max(stats.sum(), 1):.0%} "
+          f"of accesses")
+
+
+if __name__ == "__main__":
+    main()

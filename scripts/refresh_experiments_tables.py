@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Refresh the four embedded dry-run/roofline tables in EXPERIMENTS.md from
+the current artifacts (run after any dryrun sweep).
+
+  PYTHONPATH=src python scripts/refresh_experiments_tables.py
+"""
+
+import re
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.report import dryrun_table, roofline_table  # noqa: E402
+
+SECTIONS = [
+    ("### Single pod (16 × 16 = 256 chips)", dryrun_table, "single"),
+    ("### Multi-pod (2 × 16 × 16 = 512 chips)", dryrun_table, "multi"),
+    ("### Single pod\n", roofline_table, "single"),
+    ("### Multi-pod\n", roofline_table, "multi"),
+]
+
+
+def replace_table_after(doc: str, header: str, table: str) -> str:
+    i = doc.index(header)
+    j = doc.index("|", i)                      # first table char
+    k = j
+    for line in doc[j:].splitlines(keepends=True):
+        if line.startswith("|"):
+            k += len(line)
+        else:
+            break
+    return doc[:j] + table + "\n" + doc[k:]
+
+
+def main():
+    doc = open("EXPERIMENTS.md").read()
+    for header, fn, mesh in SECTIONS:
+        doc = replace_table_after(doc, header, fn(mesh))
+    open("EXPERIMENTS.md", "w").write(doc)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — DQF (Dual-Index Query Framework) on JAX/TPU, framework-scale.
+
+Layers: core (the paper), kernels (Pallas), models/configs (assigned arch
+zoo), training, serving, data, optim, checkpoint, launch (mesh/dryrun).
+"""
+
+__version__ = "0.1.0"

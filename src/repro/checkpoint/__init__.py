@@ -1,0 +1,3 @@
+"""Async atomic checkpointing with elastic restore."""
+
+from .checkpointer import Checkpointer, latest_step  # noqa: F401

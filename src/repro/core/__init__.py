@@ -1,0 +1,10 @@
+"""DQF — the paper's contribution (dual index + dynamic search) in JAX."""
+
+from .types import DQFConfig, SearchResult, SearchStats  # noqa: F401
+from .dqf import DQF  # noqa: F401
+from .ssg import SSGParams, build_ssg  # noqa: F401
+from . import beam_search  # noqa: F401  (module; fn at beam_search.beam_search)
+from .dynamic_search import dynamic_search  # noqa: F401
+from .decision_tree import train_tree, predict_jax, FEATURE_NAMES  # noqa: F401
+from .workload import ZipfWorkload  # noqa: F401
+from .recall import ground_truth, recall_at_k  # noqa: F401

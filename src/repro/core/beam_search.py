@@ -1,0 +1,206 @@
+"""Batched graph beam search (paper §4.3.1, Algorithm 3) — TPU formulation.
+
+The paper's beam search is a scalar pointer-chase.  Here every query is a
+SIMD *lane*: a fixed-size sorted candidate pool per lane, one expansion per
+lane per `lax.while_loop` iteration, dense gathers for neighbor ids and
+vectors, and a dense per-lane "seen" bitmap instead of a hash set.  Lanes
+that exhaust their pool (or get terminated by the decision tree — see
+:mod:`repro.core.dynamic_search`) go inactive and stop contributing work;
+the loop exits when all lanes are done.
+
+Conventions (see :mod:`repro.core.types`): ids are global rows with sentinel
+``n``; ``x_pad`` has an extra huge-valued row ``n``; ``adj_pad`` has an extra
+row ``n`` full of sentinels so expanding the sentinel is a no-op.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .types import INF_DIST, PoolState, SearchResult, SearchStats
+
+__all__ = [
+    "BeamState", "init_state", "expand_step", "beam_search", "pad_dataset",
+    "pad_adjacency", "make_beam_search",
+]
+
+
+class BeamState(NamedTuple):
+    pool: PoolState            # (B, L)
+    seen: jnp.ndarray          # (B, n+1) bool — ever inserted into pool
+    stats: SearchStats         # (B,) counters
+    active: jnp.ndarray        # (B,) bool
+
+
+def pad_dataset(x: jnp.ndarray, pad_value: float = 1e9) -> jnp.ndarray:
+    """Append the sentinel row ``n`` of huge values."""
+    pad = jnp.full((1, x.shape[1]), pad_value, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def pad_adjacency(adj: jnp.ndarray) -> jnp.ndarray:
+    """Append sentinel row ``n`` whose neighbors are all the sentinel."""
+    n = adj.shape[0]
+    pad = jnp.full((1, adj.shape[1]), n, adj.dtype)
+    return jnp.concatenate([adj, pad], axis=0)
+
+
+def _merge_pool(pool: PoolState, cand_ids, cand_dists, cand_expanded,
+                lane_update: jnp.ndarray) -> tuple[PoolState, jnp.ndarray]:
+    """Merge candidates into the sorted pool; returns new pool + #insertions.
+
+    ``lane_update`` masks whole lanes (inactive lanes keep their pool).
+    """
+    L = pool.ids.shape[1]
+    worst = pool.dists[:, -1]                                    # (B,)
+    inserted = jnp.sum(
+        (cand_dists < worst[:, None]).astype(jnp.int32), axis=1)  # (B,)
+
+    ids = jnp.concatenate([pool.ids, cand_ids], axis=1)
+    dists = jnp.concatenate([pool.dists, cand_dists], axis=1)
+    exp = jnp.concatenate([pool.expanded, cand_expanded], axis=1)
+    order = jnp.argsort(dists, axis=1)[:, :L]
+    new = PoolState(
+        ids=jnp.take_along_axis(ids, order, 1),
+        dists=jnp.take_along_axis(dists, order, 1),
+        expanded=jnp.take_along_axis(exp, order, 1),
+    )
+    keep = lambda a, b: jnp.where(lane_update[:, None], a, b)
+    merged = PoolState(keep(new.ids, pool.ids).astype(pool.ids.dtype),
+                       keep(new.dists, pool.dists),
+                       keep(new.expanded, pool.expanded))
+    return merged, jnp.where(lane_update, inserted, 0)
+
+
+def init_state(x_pad: jnp.ndarray, queries: jnp.ndarray,
+               entries: jnp.ndarray, pool_size: int) -> BeamState:
+    """Seed every lane's pool with the entry points (Alg 3 line 1)."""
+    n = x_pad.shape[0] - 1
+    B = queries.shape[0]
+    E = entries.shape[0]
+    if E > pool_size:
+        raise ValueError(f"entries ({E}) exceed pool size ({pool_size})")
+    g = x_pad[entries]                                           # (E, d)
+    diff = queries[:, None, :] - g[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1).astype(jnp.float32)       # (B, E)
+    order = jnp.argsort(d2, axis=1)
+    ids0 = jnp.broadcast_to(entries[None, :], (B, E))
+    ids0 = jnp.take_along_axis(ids0, order, 1)
+    d2 = jnp.take_along_axis(d2, order, 1)
+
+    pad = pool_size - E
+    pool = PoolState(
+        ids=jnp.concatenate(
+            [ids0, jnp.full((B, pad), n, jnp.int32)], 1).astype(jnp.int32),
+        dists=jnp.concatenate(
+            [d2, jnp.full((B, pad), INF_DIST, jnp.float32)], 1),
+        expanded=jnp.zeros((B, pool_size), bool),
+    )
+    seen = jnp.zeros((B, n + 1), bool).at[:, entries].set(True)
+    # The sentinel column stays True so scatters of invalid ids are no-ops
+    # for the "unseen" test.
+    seen = seen.at[:, n].set(True)
+    stats = SearchStats(
+        dist_count=jnp.full((B,), E, jnp.int32),
+        update_count=jnp.zeros((B,), jnp.int32),
+        hops=jnp.zeros((B,), jnp.int32),
+        terminated_early=jnp.zeros((B,), bool),
+    )
+    return BeamState(pool, seen, stats, jnp.ones((B,), bool))
+
+
+def expand_step(x_pad: jnp.ndarray, adj_pad: jnp.ndarray,
+                queries: jnp.ndarray, state: BeamState) -> BeamState:
+    """One expansion per active lane (Alg 3 lines 4-9, batched)."""
+    n = x_pad.shape[0] - 1
+    B, L = state.pool.ids.shape
+
+    unexp = (~state.pool.expanded) & (state.pool.ids != n)       # (B, L)
+    has_work = jnp.any(unexp, axis=1)
+    lane = state.active & has_work                               # (B,)
+    slot = jnp.argmax(unexp, axis=1)                             # first True
+    rows = jnp.arange(B)
+    p = jnp.where(lane, state.pool.ids[rows, slot], n)           # (B,)
+
+    expanded = state.pool.expanded.at[rows, slot].set(
+        state.pool.expanded[rows, slot] | lane)
+
+    nbrs = adj_pad[p]                                            # (B, R)
+    already = jnp.take_along_axis(state.seen, nbrs, axis=1)      # (B, R)
+    valid = (nbrs != n) & (~already) & lane[:, None]
+    cols = jnp.where(valid, nbrs, n)
+    seen = state.seen.at[rows[:, None], cols].set(True)
+
+    g = x_pad[cols]                                              # (B, R, d)
+    diff = g - queries[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+    d2 = jnp.where(valid, d2, INF_DIST)
+
+    pool = PoolState(state.pool.ids, state.pool.dists, expanded)
+    pool, inserted = _merge_pool(
+        pool, cols.astype(jnp.int32), d2, jnp.zeros_like(valid), lane)
+
+    stats = SearchStats(
+        dist_count=state.stats.dist_count
+        + jnp.where(lane, jnp.sum(valid.astype(jnp.int32), 1), 0),
+        update_count=state.stats.update_count + inserted,
+        hops=state.stats.hops + lane.astype(jnp.int32),
+        terminated_early=state.stats.terminated_early,
+    )
+    # A lane stays active while it still has unexpanded pool entries.
+    still = jnp.any((~pool.expanded) & (pool.ids != n), axis=1)
+    return BeamState(pool, seen, stats, state.active & still)
+
+
+TermFn = Callable[[BeamState], jnp.ndarray]  # -> (B,) bool "terminate now"
+
+
+def beam_loop(x_pad, adj_pad, queries, state: BeamState, max_hops: int,
+              term_fn: Optional[TermFn] = None) -> BeamState:
+    """Run expansions until every lane is done (pool exhausted / term_fn)."""
+
+    def cond(s: BeamState):
+        return jnp.any(s.active)
+
+    def body(s: BeamState):
+        s = expand_step(x_pad, adj_pad, queries, s)
+        s = s._replace(active=s.active & (s.stats.hops < max_hops))
+        if term_fn is not None:
+            stop = term_fn(s) & s.active
+            s = s._replace(
+                active=s.active & ~stop,
+                stats=s.stats._replace(
+                    terminated_early=s.stats.terminated_early | stop),
+            )
+        return s
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def topk_from_pool(pool: PoolState, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pool is sorted: the k best are its prefix (Alg 3 line 11)."""
+    return pool.ids[:, :k], pool.dists[:, :k]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pool_size", "k", "max_hops"))
+def beam_search(x_pad: jnp.ndarray, adj_pad: jnp.ndarray,
+                entries: jnp.ndarray, queries: jnp.ndarray, *,
+                pool_size: int, k: int, max_hops: int = 512) -> SearchResult:
+    """Traditional beam search (Algorithm 3), batched over queries."""
+    state = init_state(x_pad, queries, entries, pool_size)
+    state = beam_loop(x_pad, adj_pad, queries, state, max_hops)
+    ids, dists = topk_from_pool(state.pool, k)
+    return SearchResult(ids=ids, dists=dists, stats=state.stats)
+
+
+def make_beam_search(pool_size: int, k: int, max_hops: int = 512):
+    """Factory returning a jitted closure (static sizes baked in)."""
+    def fn(x_pad, adj_pad, entries, queries):
+        return beam_search(x_pad, adj_pad, entries, queries,
+                           pool_size=pool_size, k=k, max_hops=max_hops)
+    return jax.jit(fn)

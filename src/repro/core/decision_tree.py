@@ -1,0 +1,176 @@
+"""CART decision tree — trained in numpy, evaluated inside jitted search.
+
+No sklearn on the image (and none wanted): the tree must run *inside* a
+`lax.while_loop`, so the real artifact is a flat array encoding
+``(feature, threshold, left, right, leaf_value)`` traversed with gathers.
+Training is an exact greedy CART on Gini impurity with vectorized threshold
+scans — plenty for 6 features × a few hundred thousand samples.
+
+Leaves are self-looping (left == right == self) so a fixed ``depth``-step
+`fori_loop` evaluates any tree of depth ≤ ``depth`` without branching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TreeArrays", "DecisionTree", "train_tree", "predict_jax",
+           "FEATURE_NAMES"]
+
+FEATURE_NAMES = (
+    "hotIdx_1st",
+    "hotIdx_1st_div_kth",
+    "fullIdx_1st",
+    "fullIdx_1st_div_kth",
+    "dist_count",
+    "update_count",
+)
+
+
+class TreeArrays(NamedTuple):
+    """Flat tree encoding; all arrays are (num_nodes,)."""
+
+    feature: jnp.ndarray    # int32; -1 at leaves
+    threshold: jnp.ndarray  # float32; x[feature] <= threshold → left
+    left: jnp.ndarray       # int32 child index (self at leaves)
+    right: jnp.ndarray      # int32 child index (self at leaves)
+    value: jnp.ndarray      # float32 P(continue search) at this node
+
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.5
+
+
+def _gini_best_split(x: np.ndarray, y: np.ndarray, min_leaf: int):
+    """Best (feature, threshold, gain) by exact scan. y ∈ {0,1}."""
+    n, f = x.shape
+    total_pos = y.sum()
+    parent_gini = 1.0 - ((total_pos / n) ** 2 + ((n - total_pos) / n) ** 2)
+    best = (None, 0.0, 0.0)
+    for j in range(f):
+        order = np.argsort(x[:, j], kind="stable")
+        xs, ys = x[order, j], y[order]
+        pos_left = np.cumsum(ys)[:-1]
+        cnt_left = np.arange(1, n)
+        # Valid split positions: value changes and both sides >= min_leaf.
+        ok = (xs[1:] != xs[:-1]) & (cnt_left >= min_leaf) \
+            & ((n - cnt_left) >= min_leaf)
+        if not ok.any():
+            continue
+        pl = pos_left / cnt_left
+        pr = (total_pos - pos_left) / (n - cnt_left)
+        gini = (cnt_left * (2 * pl * (1 - pl))
+                + (n - cnt_left) * (2 * pr * (1 - pr))) / n
+        gini = np.where(ok, gini, np.inf)
+        i = int(np.argmin(gini))
+        gain = parent_gini - gini[i]
+        if gain > best[2] + 1e-12:
+            thr = 0.5 * (xs[i] + xs[i + 1])
+            best = (j, float(thr), float(gain))
+    return best
+
+
+def _grow(x, y, depth, max_depth, min_leaf, nodes: list[_Node]) -> int:
+    idx = len(nodes)
+    node = _Node(value=float(y.mean()) if y.size else 0.5)
+    nodes.append(node)
+    if (depth >= max_depth or y.size < 2 * min_leaf
+            or y.min() == y.max()):
+        node.left = node.right = idx
+        return idx
+    j, thr, gain = _gini_best_split(x, y, min_leaf)
+    if j is None or gain <= 0.0:
+        node.left = node.right = idx
+        return idx
+    mask = x[:, j] <= thr
+    node.feature, node.threshold = j, thr
+    node.left = _grow(x[mask], y[mask], depth + 1, max_depth, min_leaf, nodes)
+    node.right = _grow(x[~mask], y[~mask], depth + 1, max_depth, min_leaf,
+                       nodes)
+    return idx
+
+
+@dataclasses.dataclass
+class DecisionTree:
+    arrays: TreeArrays
+    depth: int
+    feature_importance: np.ndarray  # (6,) normalized Gini importance
+
+    def predict_proba(self, feats: np.ndarray) -> np.ndarray:
+        return np.asarray(predict_jax(self.arrays, jnp.asarray(feats),
+                                      self.depth))
+
+    def predict(self, feats: np.ndarray, threshold: float = 0.5) -> np.ndarray:
+        return self.predict_proba(feats) >= threshold
+
+
+def train_tree(feats: np.ndarray, labels: np.ndarray, *,
+               max_depth: int = 10, min_leaf: int = 16) -> DecisionTree:
+    """Greedy CART. ``labels`` are 1 = keep searching, 0 = safe to stop."""
+    feats = np.asarray(feats, np.float32)
+    labels = np.asarray(labels, np.int32)
+    if feats.ndim != 2:
+        raise ValueError("features must be (N, F)")
+    nodes: list[_Node] = []
+    _grow(feats, labels, 0, max_depth, min_leaf, nodes)
+
+    # Gini importance: weighted impurity decrease per feature.
+    importance = np.zeros(feats.shape[1], np.float64)
+    _accumulate_importance(nodes, feats, labels, 0, importance)
+    s = importance.sum()
+    importance = importance / s if s > 0 else importance
+
+    arrays = TreeArrays(
+        feature=jnp.asarray([n.feature for n in nodes], jnp.int32),
+        threshold=jnp.asarray([n.threshold for n in nodes], jnp.float32),
+        left=jnp.asarray([n.left for n in nodes], jnp.int32),
+        right=jnp.asarray([n.right for n in nodes], jnp.int32),
+        value=jnp.asarray([n.value for n in nodes], jnp.float32),
+    )
+    return DecisionTree(arrays=arrays, depth=max_depth,
+                        feature_importance=importance)
+
+
+def _accumulate_importance(nodes, x, y, idx, out):
+    node = nodes[idx]
+    if node.feature < 0 or y.size == 0:
+        return
+    p = y.mean()
+    parent = 2 * p * (1 - p) * y.size
+    mask = x[:, node.feature] <= node.threshold
+    yl, yr = y[mask], y[~mask]
+    child = 0.0
+    for part in (yl, yr):
+        if part.size:
+            q = part.mean()
+            child += 2 * q * (1 - q) * part.size
+    out[node.feature] += max(parent - child, 0.0)
+    if node.left != idx:
+        _accumulate_importance(nodes, x[mask], yl, node.left, out)
+    if node.right != idx:
+        _accumulate_importance(nodes, x[~mask], yr, node.right, out)
+
+
+def predict_jax(tree: TreeArrays, feats: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """P(continue) for a batch of feature rows; jit/while_loop friendly."""
+    feats = jnp.atleast_2d(feats)
+    B = feats.shape[0]
+
+    def step(_, node):
+        f = jnp.maximum(tree.feature[node], 0)
+        val = jnp.take_along_axis(feats, f[:, None], axis=1)[:, 0]
+        go_left = val <= tree.threshold[node]
+        return jnp.where(go_left, tree.left[node], tree.right[node])
+
+    node = jax.lax.fori_loop(0, depth, step, jnp.zeros((B,), jnp.int32))
+    return tree.value[node]

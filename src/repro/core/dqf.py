@@ -1,0 +1,237 @@
+"""DQF — the Dual-Index Query Framework (paper §4), end to end.
+
+Host-side orchestrator tying together the full NSSG, the hot index, the
+query counter, the decision tree, and the jitted search kernels.  This is
+the single-shard engine; :mod:`repro.serving.sharded` wraps it with
+shard_map for the multi-device deployment.
+
+Typical flow::
+
+    dqf = DQF(DQFConfig(index_ratio=0.005))
+    dqf.build(x)                          # full NSSG (offline)
+    dqf.warm(workload.sample(50_000))     # seed counters, build hot index
+    dqf.fit_tree(history_queries)         # train the termination tree
+    res = dqf.search(queries)             # Algorithm 4
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import beam_search as bs
+from .decision_tree import DecisionTree, train_tree
+from .dynamic_search import dynamic_search
+from .hot_index import HotIndex, QueryCounter, build_hot_index
+from .ssg import SSGIndex, SSGParams, build_ssg
+from .tree_training import collect_training_data
+from .types import DQFConfig, SearchResult
+
+__all__ = ["DQF"]
+
+
+@dataclasses.dataclass
+class _Timings:
+    full_build: float = 0.0
+    hot_build: float = 0.0
+    tree_fit: float = 0.0
+
+
+class DQF:
+    """Dual-Index Query Framework over an in-memory vector table."""
+
+    def __init__(self, cfg: DQFConfig | None = None):
+        self.cfg = cfg or DQFConfig()
+        self.x: Optional[np.ndarray] = None
+        self.full: Optional[SSGIndex] = None
+        self.hot: Optional[HotIndex] = None
+        self.tree: Optional[DecisionTree] = None
+        self.counter: Optional[QueryCounter] = None
+        self.timings = _Timings()
+        self._dev = {}
+
+    # ------------------------------------------------------------------ build
+    @property
+    def _ssg_params(self) -> SSGParams:
+        c = self.cfg
+        return SSGParams(knn_k=c.knn_k, out_degree=c.out_degree,
+                         alpha_deg=c.alpha_deg)
+
+    def build(self, x: np.ndarray) -> "DQF":
+        """Build the full index (Alg 2 line 2) and init the counter."""
+        self.x = np.ascontiguousarray(x, np.float32)
+        t0 = time.perf_counter()
+        self.full = build_ssg(self.x, self._ssg_params,
+                              n_entry=self.cfg.n_entry)
+        self.timings.full_build = time.perf_counter() - t0
+        self.counter = QueryCounter(self.x.shape[0],
+                                    trigger=self.cfg.n_query_trigger)
+        self._dev["x_pad"] = bs.pad_dataset(jnp.asarray(self.x))
+        self._dev["adj_pad"] = bs.pad_adjacency(jnp.asarray(self.full.adj))
+        self._dev["entries"] = jnp.asarray(self.full.entries)
+        return self
+
+    @property
+    def hot_size(self) -> int:
+        return max(self.cfg.k + 1,
+                   int(round(self.cfg.index_ratio * self.x.shape[0])))
+
+    def rebuild_hot(self, hot_ids: Optional[np.ndarray] = None) -> HotIndex:
+        """Alg 2 lines 6-10 (hot_ids override = explicit head selection)."""
+        if hot_ids is None:
+            hot_ids = self.counter.top(self.hot_size)
+        version = (self.hot.version + 1) if self.hot else 0
+        self.hot = build_hot_index(self.x, hot_ids, self._ssg_params,
+                                   n_entry=self.cfg.n_entry, version=version)
+        self.timings.hot_build = self.hot.build_seconds
+        self.counter.reset_trigger()
+        n = self.x.shape[0]
+        self._dev["x_hot_pad"] = bs.pad_dataset(jnp.asarray(self.x[self.hot.ids]))
+        self._dev["adj_hot_pad"] = bs.pad_adjacency(
+            jnp.asarray(self.hot.graph.adj))
+        self._dev["hot_ids_pad"] = jnp.concatenate(
+            [jnp.asarray(self.hot.ids, jnp.int32),
+             jnp.asarray([n], jnp.int32)])
+        self._dev["hot_entries"] = jnp.asarray(self.hot.graph.entries)
+        return self.hot
+
+    def warm(self, queries: np.ndarray, targets: Optional[np.ndarray] = None
+             ) -> HotIndex:
+        """Seed the counter from a historical stream and build the hot index.
+
+        If target ids are unknown, resolves them with a baseline search.
+        """
+        if targets is None:
+            res = self.search_baseline(queries)
+            targets = np.asarray(res.ids)
+        self.counter.record(targets)
+        return self.rebuild_hot()
+
+    # ------------------------------------------------------------ decision tree
+    def fit_tree(self, history_queries: np.ndarray, *,
+                 max_depth: Optional[int] = None, dedup: bool = True,
+                 min_leaf: int = 16) -> DecisionTree:
+        """Paper §4.3.2: sample historical queries, dedup, trace, fit CART."""
+        self._require(hot=True)
+        q = np.asarray(history_queries, np.float32)
+        if dedup:
+            q = np.unique(q, axis=0)
+        t0 = time.perf_counter()
+        c = self.cfg
+        feats, labels = collect_training_data(
+            self._dev["x_pad"], self._dev["adj_pad"],
+            self._dev["x_hot_pad"], self._dev["adj_hot_pad"],
+            self._dev["hot_ids_pad"], self._dev["hot_entries"], q,
+            k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
+            eval_gap=c.eval_gap, max_hops=c.max_hops, hot_mode="graph")
+        self.tree = train_tree(feats, labels,
+                               max_depth=max_depth or c.tree_depth,
+                               min_leaf=min_leaf)
+        self.timings.tree_fit = time.perf_counter() - t0
+        return self.tree
+
+    # ----------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, *, record: bool = True,
+               auto_rebuild: bool = True, use_kernel: bool = False
+               ) -> SearchResult:
+        """Dynamic dual-index search (Algorithm 4)."""
+        self._require(hot=True)
+        c = self.cfg
+        res, hot_stats, _ = dynamic_search(
+            self._dev["x_pad"], self._dev["adj_pad"],
+            self._dev["x_hot_pad"], self._dev["adj_hot_pad"],
+            self._dev["hot_ids_pad"], self._dev["hot_entries"],
+            self.tree.arrays if self.tree is not None else None,
+            jnp.asarray(queries, jnp.float32),
+            k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
+            eval_gap=c.eval_gap, add_step=c.add_step,
+            tree_depth=c.tree_depth, max_hops=c.max_hops,
+            hot_mode=c.hot_mode, use_kernel=use_kernel)
+        if record:
+            self.counter.record(np.asarray(res.ids))
+            if auto_rebuild and self.counter.due:       # Alg 2 line 5
+                self.rebuild_hot()
+        return res
+
+    def search_dual_beam(self, queries: np.ndarray) -> SearchResult:
+        """Fig 3 ablation: dual index + traditional beam search (no tree)."""
+        self._require(hot=True)
+        c = self.cfg
+        res, _, _ = dynamic_search(
+            self._dev["x_pad"], self._dev["adj_pad"],
+            self._dev["x_hot_pad"], self._dev["adj_hot_pad"],
+            self._dev["hot_ids_pad"], self._dev["hot_entries"], None,
+            jnp.asarray(queries, jnp.float32),
+            k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
+            eval_gap=c.eval_gap, add_step=c.add_step,
+            tree_depth=c.tree_depth, max_hops=c.max_hops,
+            hot_mode=c.hot_mode)
+        return res
+
+    def search_baseline(self, queries: np.ndarray,
+                        pool_size: Optional[int] = None) -> SearchResult:
+        """Plain NSSG beam search over the full index (Algorithm 3)."""
+        self._require()
+        return bs.beam_search(
+            self._dev["x_pad"], self._dev["adj_pad"], self._dev["entries"],
+            jnp.asarray(queries, jnp.float32),
+            pool_size=pool_size or self.cfg.full_pool, k=self.cfg.k,
+            max_hops=self.cfg.max_hops)
+
+    # ------------------------------------------------------------------ misc
+    def index_nbytes(self) -> dict:
+        out = {"full": int(self.full.adj.nbytes) if self.full else 0,
+               "hot": int(self.hot.nbytes()) if self.hot else 0}
+        out["total"] = out["full"] + out["hot"]
+        return out
+
+    def save(self, path: str) -> None:
+        self._require(hot=False)
+        arrs = {"x": self.x, "full_adj": self.full.adj,
+                "full_entries": self.full.entries,
+                "counts": self.counter.counts}
+        if self.hot is not None:
+            arrs.update(hot_adj=self.hot.graph.adj,
+                        hot_entries=self.hot.graph.entries,
+                        hot_ids=self.hot.ids,
+                        hot_version=np.int64(self.hot.version))
+        np.savez_compressed(path, **arrs)
+
+    @classmethod
+    def load(cls, path: str, cfg: DQFConfig | None = None) -> "DQF":
+        z = np.load(path)
+        self = cls(cfg)
+        self.x = z["x"]
+        self.full = SSGIndex(adj=z["full_adj"], entries=z["full_entries"],
+                             n=self.x.shape[0])
+        self.counter = QueryCounter(self.x.shape[0],
+                                    trigger=self.cfg.n_query_trigger)
+        self.counter.counts = z["counts"]
+        self._dev["x_pad"] = bs.pad_dataset(jnp.asarray(self.x))
+        self._dev["adj_pad"] = bs.pad_adjacency(jnp.asarray(self.full.adj))
+        self._dev["entries"] = jnp.asarray(self.full.entries)
+        if "hot_ids" in z:
+            graph = SSGIndex(adj=z["hot_adj"], entries=z["hot_entries"],
+                             n=int(z["hot_ids"].shape[0]))
+            self.hot = HotIndex(graph=graph, ids=z["hot_ids"],
+                                build_seconds=0.0,
+                                version=int(z["hot_version"]))
+            n = self.x.shape[0]
+            self._dev["x_hot_pad"] = bs.pad_dataset(
+                jnp.asarray(self.x[self.hot.ids]))
+            self._dev["adj_hot_pad"] = bs.pad_adjacency(jnp.asarray(graph.adj))
+            self._dev["hot_ids_pad"] = jnp.concatenate(
+                [jnp.asarray(self.hot.ids, jnp.int32),
+                 jnp.asarray([n], jnp.int32)])
+            self._dev["hot_entries"] = jnp.asarray(graph.entries)
+        return self
+
+    def _require(self, hot: bool = False) -> None:
+        if self.full is None:
+            raise RuntimeError("call build() first")
+        if hot and self.hot is None:
+            raise RuntimeError("hot index missing — call warm()/rebuild_hot()")

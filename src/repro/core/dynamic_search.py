@@ -1,0 +1,210 @@
+"""Dynamic dual-index search with decision-tree early termination (Alg 4).
+
+Phase 1 searches the hot index — either the paper-faithful NSSG subgraph
+(``hot_mode="graph"``) or the beyond-paper MXU brute-force scorer
+(``hot_mode="mxu"``, see :mod:`repro.kernels`).  Its pool seeds phase 2 over
+the full graph, where every lane re-evaluates the decision tree each time its
+(full-phase) distance count crosses a multiple of ``eval_gap``; a stop verdict
+(+ optional ``add_step`` grace distance computations) retires the lane.
+
+All ids in phase 2 are global.  The hot graph uses local ids 0..H-1 with its
+own sentinel H; ``hot_ids`` maps local→global.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import beam_search as bs
+from .decision_tree import TreeArrays, predict_jax
+from .features import feature_matrix, hot_features
+from .types import (INF_DIST, DQFConfig, HotFeatures, PoolState, SearchResult,
+                    SearchStats)
+
+__all__ = ["dynamic_search", "hot_phase", "DynamicState"]
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+class DynamicState(NamedTuple):
+    beam: bs.BeamState
+    evals_done: jnp.ndarray   # (B,) int32 — DT evaluations performed
+    stop_at: jnp.ndarray      # (B,) int32 — dist_count deadline (add_step)
+
+
+def hot_phase_graph(x_hot_pad, adj_hot_pad, hot_entries, queries, *,
+                    pool_size: int, max_hops: int):
+    """Phase 1, paper-faithful: beam search over the hot NSSG."""
+    state = bs.init_state(x_hot_pad, queries, hot_entries, pool_size)
+    state = bs.beam_loop(x_hot_pad, adj_hot_pad, queries, state, max_hops)
+    return state.pool, state.stats
+
+
+def hot_phase_mxu(x_hot, queries, *, pool_size: int, use_kernel: bool = False):
+    """Phase 1, beyond-paper: exact brute-force over the (tiny) hot set.
+
+    On TPU this runs as the fused Pallas distance+top-k scorer at MXU peak;
+    on CPU (tests, benchmarks) the jnp reference path is used.
+    """
+    H = x_hot.shape[0]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        dists, ids = kops.fused_topk_l2(queries, x_hot, k=pool_size)
+    else:
+        from repro.kernels import ref as kref
+        dists, ids = kref.fused_topk_l2(queries, x_hot, k=pool_size)
+    B = queries.shape[0]
+    pool = PoolState(
+        ids=ids.astype(jnp.int32),
+        dists=dists.astype(jnp.float32),
+        expanded=jnp.zeros((B, pool_size), bool),
+    )
+    stats = SearchStats(
+        dist_count=jnp.full((B,), H, jnp.int32),
+        update_count=jnp.zeros((B,), jnp.int32),
+        hops=jnp.zeros((B,), jnp.int32),
+        terminated_early=jnp.zeros((B,), bool),
+    )
+    return pool, stats
+
+
+def hot_phase(x_hot_pad, adj_hot_pad, hot_entries, queries, *, pool_size,
+              max_hops, mode: str = "graph", use_kernel: bool = False):
+    if mode == "graph":
+        return hot_phase_graph(x_hot_pad, adj_hot_pad, hot_entries, queries,
+                               pool_size=pool_size, max_hops=max_hops)
+    return hot_phase_mxu(x_hot_pad[:-1], queries, pool_size=pool_size,
+                         use_kernel=use_kernel)
+
+
+def _seed_full_state(hot_pool: PoolState, hot_ids_pad: jnp.ndarray,
+                     n: int, pool_size: int) -> bs.BeamState:
+    """Map the hot pool to global ids and seed the phase-2 state.
+
+    Implements Alg 4 line 11 ("reset visit status of nodes in L"): all
+    entries arrive unexpanded.
+    """
+    B, s_l = hot_pool.ids.shape
+    gids = hot_ids_pad[hot_pool.ids]                      # (B, s_l) global
+    gids = jnp.where(hot_pool.dists >= INF_DIST, n, gids).astype(jnp.int32)
+    take = min(s_l, pool_size)
+    order = jnp.argsort(hot_pool.dists, axis=1)[:, :take]
+    gids = jnp.take_along_axis(gids, order, 1)
+    gdist = jnp.take_along_axis(hot_pool.dists, order, 1)
+    pad = pool_size - take
+    pool = PoolState(
+        ids=jnp.concatenate([gids, jnp.full((B, pad), n, jnp.int32)], 1),
+        dists=jnp.concatenate(
+            [gdist, jnp.full((B, pad), INF_DIST, jnp.float32)], 1),
+        expanded=jnp.zeros((B, pool_size), bool),
+    )
+    seen = jnp.zeros((B, n + 1), bool)
+    seen = seen.at[jnp.arange(B)[:, None],
+                   jnp.where(pool.ids == n, n, pool.ids)].set(True)
+    seen = seen.at[:, n].set(True)
+    stats = SearchStats(                                   # line 12 reset
+        dist_count=jnp.zeros((B,), jnp.int32),
+        update_count=jnp.zeros((B,), jnp.int32),
+        hops=jnp.zeros((B,), jnp.int32),
+        terminated_early=jnp.zeros((B,), bool),
+    )
+    return bs.BeamState(pool, seen, stats, jnp.ones((B,), bool))
+
+
+def _full_phase(x_pad, adj_pad, queries, state: bs.BeamState,
+                hot: HotFeatures, tree: Optional[TreeArrays], *,
+                k: int, eval_gap: int, add_step: int, tree_depth: int,
+                max_hops: int) -> bs.BeamState:
+    """Phase 2 with periodic decision-tree termination checks."""
+    B = queries.shape[0]
+    dstate = DynamicState(
+        beam=state,
+        evals_done=jnp.zeros((B,), jnp.int32),
+        stop_at=jnp.full((B,), _INT_MAX, jnp.int32),
+    )
+
+    def cond(ds: DynamicState):
+        return jnp.any(ds.beam.active)
+
+    def body(ds: DynamicState):
+        s = bs.expand_step(x_pad, adj_pad, queries, ds.beam)
+        s = s._replace(active=s.active & (s.stats.hops < max_hops))
+        evals_done, stop_at = ds.evals_done, ds.stop_at
+        if tree is not None:
+            due = (s.stats.dist_count // eval_gap) > evals_done   # (B,)
+            due = due & s.active
+            feats = feature_matrix(hot, s.pool, s.stats, k)
+            p_continue = predict_jax(tree, feats, tree_depth)
+            verdict_stop = p_continue < 0.5
+            newly = due & verdict_stop & (stop_at == _INT_MAX)
+            stop_at = jnp.where(
+                newly, s.stats.dist_count + add_step, stop_at)
+            evals_done = jnp.where(due, s.stats.dist_count // eval_gap,
+                                   evals_done)
+            stop_now = s.stats.dist_count >= stop_at
+            s = s._replace(
+                active=s.active & ~stop_now,
+                stats=s.stats._replace(
+                    terminated_early=s.stats.terminated_early
+                    | (stop_now & s.active)),
+            )
+        return DynamicState(s, evals_done, stop_at)
+
+    return jax.lax.while_loop(cond, body, dstate).beam
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "hot_pool_size", "full_pool_size", "eval_gap", "add_step",
+    "tree_depth", "max_hops", "hot_mode", "use_kernel"))
+def dynamic_search(
+    x_pad: jnp.ndarray,            # (n+1, d) padded dataset
+    adj_pad: jnp.ndarray,          # (n+1, R) padded full adjacency
+    x_hot_pad: jnp.ndarray,        # (H+1, d) padded hot vectors
+    adj_hot_pad: jnp.ndarray,      # (H+1, Rh) padded hot adjacency
+    hot_ids_pad: jnp.ndarray,      # (H+1,) local→global (pad slot → n)
+    hot_entries: jnp.ndarray,      # (E,) local entry ids into the hot graph
+    tree: Optional[TreeArrays],
+    queries: jnp.ndarray,          # (B, d)
+    *,
+    k: int,
+    hot_pool_size: int,
+    full_pool_size: int,
+    eval_gap: int,
+    add_step: int,
+    tree_depth: int,
+    max_hops: int = 512,
+    hot_mode: str = "graph",
+    use_kernel: bool = False,
+) -> tuple[SearchResult, SearchStats, HotFeatures]:
+    """Algorithm 4 end to end. Returns (result, hot_phase_stats, hot_feats).
+
+    ``result.stats`` covers the full phase only (post line-12 reset);
+    ``hot_phase_stats`` carries the hot phase cost for total-cost reporting.
+    """
+    n = x_pad.shape[0] - 1
+    hot_pool, hot_stats = hot_phase(
+        x_hot_pad, adj_hot_pad, hot_entries, queries,
+        pool_size=hot_pool_size, max_hops=max_hops, mode=hot_mode,
+        use_kernel=use_kernel)
+    hfeats = hot_features(hot_pool, k)
+    state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size)
+    state = _full_phase(
+        x_pad, adj_pad, queries, state, hfeats, tree,
+        k=k, eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
+        max_hops=max_hops)
+    ids, dists = bs.topk_from_pool(state.pool, k)
+    return (SearchResult(ids=ids, dists=dists, stats=state.stats),
+            hot_stats, hfeats)
+
+
+def config_kwargs(cfg: DQFConfig) -> dict:
+    """Static kwargs for :func:`dynamic_search` from a DQFConfig."""
+    return dict(
+        k=cfg.k, hot_pool_size=cfg.hot_pool, full_pool_size=cfg.full_pool,
+        eval_gap=cfg.eval_gap, add_step=cfg.add_step,
+        tree_depth=cfg.tree_depth, max_hops=cfg.max_hops,
+        hot_mode=cfg.hot_mode)

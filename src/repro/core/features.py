@@ -1,0 +1,48 @@
+"""Decision-tree feature extraction (paper §4.3.2, Table 1).
+
+Six features per query lane, evaluated mid-search:
+
+a) hot-index distances  — ``hotIdx_1st``, ``hotIdx_1st_div_kth`` (frozen when
+   the hot phase completes);
+b) full-index distances — ``fullIdx_1st``, ``fullIdx_1st_div_kth`` (live);
+c) counters             — ``dist_count``, ``update_count`` (live, counted
+   from the start of the full phase, matching Alg 4 line 12's reset).
+
+Distances are squared L2 end-to-end (training and inference see the same
+scale, so the tree is unaffected by the square).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import HotFeatures, PoolState, SearchStats
+
+__all__ = ["hot_features", "feature_matrix"]
+
+_EPS = 1e-12
+
+
+def hot_features(pool: PoolState, k: int) -> HotFeatures:
+    """Freeze (a)-features from the hot-phase result pool."""
+    first = pool.dists[:, 0]
+    kth = pool.dists[:, jnp.minimum(k, pool.dists.shape[1]) - 1]
+    return HotFeatures(first=first, first_div_kth=first / (kth + _EPS))
+
+
+def feature_matrix(hot: HotFeatures, pool: PoolState, stats: SearchStats,
+                   k: int) -> jnp.ndarray:
+    """(B, 6) live feature rows in FEATURE_NAMES order."""
+    first = pool.dists[:, 0]
+    kth = pool.dists[:, jnp.minimum(k, pool.dists.shape[1]) - 1]
+    return jnp.stack(
+        [
+            hot.first,
+            hot.first_div_kth,
+            first,
+            first / (kth + _EPS),
+            stats.dist_count.astype(jnp.float32),
+            stats.update_count.astype(jnp.float32),
+        ],
+        axis=1,
+    )

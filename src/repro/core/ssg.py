@@ -1,0 +1,188 @@
+"""Satellite System Graph construction (paper §4.2.1, Algorithm 1).
+
+SSG pruning takes a pre-built KNN graph and, for every node ``p``:
+
+1. forms a candidate set C = KNN(p) ∪ KNN(KNN(p)) (neighbors-of-neighbors),
+2. sorts C by distance to p,
+3. greedily keeps an edge (p, d_i) unless some already-kept edge (p, d_k)
+   subtends an angle < alpha at p (``cos ∠ d_i p d_k > cos alpha``) — the
+   longer edge of a narrow pair is discarded, spreading out-edges evenly.
+
+We add NSG-style connectivity repair (BFS from the medoid entry; orphaned
+nodes get an in-edge from their nearest reachable node) so search from the
+entry set always terminates with full coverage — the SSG paper ensures this
+via multiple random entries + a spanning pass; ours is equivalent and makes
+recall guarantees testable.
+
+The inner greedy loop is per-node numpy over a capped candidate set; angle
+tests against the (small) kept set are vectorized.  Construction is an
+offline, host-side pass (the paper builds indexes offline on CPU too); the
+TPU-facing artifact is the padded ``(n, R) int32`` adjacency this emits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from .knng import build_knng
+
+__all__ = ["SSGParams", "ssg_prune", "build_ssg", "ensure_connected", "medoid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSGParams:
+    knn_k: int = 32
+    out_degree: int = 32          # R
+    alpha_deg: float = 60.0       # SSG angle threshold
+    candidate_cap: int = 220      # cap |C| for tractability (SSG uses ~100s)
+    seed: int = 0
+
+
+def medoid(x: np.ndarray, sample: int = 4096, seed: int = 0) -> int:
+    """Approximate medoid: the point closest to the dataset mean."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    idx = rng.choice(n, size=min(sample, n), replace=False)
+    mean = x.mean(axis=0)
+    d = np.sum((x[idx] - mean) ** 2, axis=1)
+    return int(idx[np.argmin(d)])
+
+
+def ssg_prune(x: np.ndarray, knng: np.ndarray, params: SSGParams) -> np.ndarray:
+    """Algorithm 1 over all nodes. Returns padded (n, R) adjacency, pad=n."""
+    n, d = x.shape
+    k = knng.shape[1]
+    R = params.out_degree
+    cos_a = np.cos(np.deg2rad(params.alpha_deg))
+    rng = np.random.default_rng(params.seed)
+    adj = np.full((n, R), n, dtype=np.int32)
+
+    cap = params.candidate_cap
+    for p in range(n):
+        nbrs = knng[p]
+        # C = neighbors + neighbors-of-neighbors (lines 3-8).
+        cand = np.concatenate([nbrs, knng[nbrs].reshape(-1)])
+        cand = cand[cand != p]
+        cand = np.unique(cand)
+        vec = x[cand] - x[p]                          # (C, d)
+        dist = np.einsum("cd,cd->c", vec, vec)
+        order = np.argsort(dist, kind="stable")       # line 9
+        if order.size > cap:
+            order = order[:cap]
+        cand, vec, dist = cand[order], vec[order], dist[order]
+        norm = np.sqrt(np.maximum(dist, 1e-12))
+
+        kept: list[int] = []
+        kept_dir = np.empty((R, d), np.float32)
+        for i in range(cand.size):                    # lines 10-20
+            if len(kept) >= R:
+                break
+            u = vec[i] / norm[i]
+            if kept:
+                cos = kept_dir[: len(kept)] @ u
+                if np.any(cos > cos_a):               # angle < alpha → drop
+                    continue
+            kept_dir[len(kept)] = u
+            kept.append(i)
+        ids = cand[kept]
+        adj[p, : ids.size] = ids
+    return adj
+
+
+def _reachable(adj: np.ndarray, entry: int) -> np.ndarray:
+    n = adj.shape[0]
+    seen = np.zeros(n, bool)
+    seen[entry] = True
+    q = deque([entry])
+    while q:
+        u = q.popleft()
+        for v in adj[u]:
+            if v < n and not seen[v]:
+                seen[v] = True
+                q.append(int(v))
+    return seen
+
+
+def ensure_connected(x: np.ndarray, adj: np.ndarray, entry: int,
+                     max_rounds: int = 32) -> np.ndarray:
+    """NSG-style repair: make every node reachable from ``entry``.
+
+    Each round BFS-marks the reachable set and attaches every orphan to its
+    nearest reachable node (preferring free adjacency slots; evicting the
+    farthest edge only as a last resort).  Eviction can in principle orphan
+    a previously-reachable subtree, so we re-verify with a fresh BFS each
+    round until a fixed point — in practice 1-2 rounds.
+    """
+    n, R = adj.shape
+    adj = adj.copy()
+    # Edges added by the repair are protected from later evictions —
+    # otherwise two orphans sharing a full host can evict each other forever.
+    protected = np.zeros((n, R), bool)
+    for _ in range(max_rounds):
+        seen = _reachable(adj, entry)
+        missing = np.flatnonzero(~seen)
+        if missing.size == 0:
+            return adj
+        reach = np.flatnonzero(seen)
+        for m in missing:
+            if seen[m]:
+                continue
+            d = np.sum((x[reach] - x[m]) ** 2, axis=1)
+            host = int(reach[np.argmin(d)])
+            row = adj[host]
+            free = np.flatnonzero(row == n)
+            if free.size:
+                slot = free[0]
+            else:
+                dd = np.sum((x[np.minimum(row, n - 1)] - x[host]) ** 2,
+                            axis=1)
+                dd[row == n] = -1.0
+                dd[protected[host]] = -2.0       # evict these last
+                slot = int(np.argmax(dd))
+            adj[host, slot] = m
+            protected[host, slot] = True
+            # Absorb the orphan's own subtree for this round's bookkeeping.
+            stack = [int(m)]
+            seen[m] = True
+            while stack:
+                u = stack.pop()
+                for v in adj[u]:
+                    if v < n and not seen[v]:
+                        seen[v] = True
+                        stack.append(int(v))
+    if not _reachable(adj, entry).all():
+        raise RuntimeError("connectivity repair did not converge")
+    return adj
+
+
+@dataclasses.dataclass
+class SSGIndex:
+    """Host-side index artifact: adjacency + entry points + medoid."""
+
+    adj: np.ndarray          # (n, R) int32, pad = n
+    entries: np.ndarray      # (E,) int32 entry points (medoid + random)
+    n: int
+
+    @property
+    def degree_histogram(self) -> np.ndarray:
+        return np.bincount((self.adj < self.n).sum(axis=1),
+                           minlength=self.adj.shape[1] + 1)
+
+
+def build_ssg(x: np.ndarray, params: SSGParams | None = None,
+              n_entry: int = 8, knng: np.ndarray | None = None) -> SSGIndex:
+    """Full NSSG build: EFANNA-stage KNNG → SSG prune → connectivity repair."""
+    params = params or SSGParams()
+    x = np.asarray(x, np.float32)
+    if knng is None:
+        knng = build_knng(x, params.knn_k, seed=params.seed)
+    adj = ssg_prune(x, knng, params)
+    med = medoid(x, seed=params.seed)
+    adj = ensure_connected(x, adj, med)
+    rng = np.random.default_rng(params.seed + 1)
+    extra = rng.choice(x.shape[0], size=max(0, n_entry - 1), replace=False)
+    entries = np.unique(np.concatenate([[med], extra])).astype(np.int32)
+    return SSGIndex(adj=adj, entries=entries, n=x.shape[0])

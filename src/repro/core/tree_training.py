@@ -1,0 +1,104 @@
+"""Decision-tree training-data collection (paper §4.3.2).
+
+"To train the decision tree, we randomly sample historical queries, remove
+duplicates, and use the remaining queries in the full index phase."
+
+We run the full phase *without* a tree for a fixed number of hops under
+`lax.scan`, recording the live feature matrix and the current k-th result
+distance at every hop.  On the host, a sample is emitted at each hop where a
+decision-tree evaluation would have been due (dist_count crossing a multiple
+of ``eval_gap``), labeled 1 ("continue") iff the k-th distance still improves
+afterwards — i.e. the query would have received future updates.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import beam_search as bs
+from .dynamic_search import _seed_full_state, hot_phase
+from .features import feature_matrix, hot_features
+
+__all__ = ["collect_training_data", "TraceRecord"]
+
+
+class TraceRecord(NamedTuple):
+    feats: jnp.ndarray       # (T, B, 6)
+    kth: jnp.ndarray         # (T, B) current k-th result distance
+    dist_count: jnp.ndarray  # (T, B)
+    active: jnp.ndarray      # (T, B)
+
+
+def _trace_full_phase(x_pad, adj_pad, queries, state, hfeats, *, k, hops):
+    def step(s, _):
+        s = bs.expand_step(x_pad, adj_pad, queries, s)
+        feats = feature_matrix(hfeats, s.pool, s.stats, k)
+        kth = s.pool.dists[:, min(k, s.pool.dists.shape[1]) - 1]
+        rec = (feats, kth, s.stats.dist_count, s.active)
+        return s, rec
+
+    _, (feats, kth, dc, active) = jax.lax.scan(
+        step, state, None, length=hops)
+    return TraceRecord(feats, kth, dc, active)
+
+
+def collect_training_data(
+    x_pad, adj_pad, x_hot_pad, adj_hot_pad, hot_ids_pad, hot_entries,
+    queries: np.ndarray, *, k: int, hot_pool_size: int, full_pool_size: int,
+    eval_gap: int, max_hops: int, hot_mode: str = "graph",
+    improve_tol: float = 1e-6, batch: int = 256,
+):
+    """Returns (features (N,6), labels (N,)) for CART training."""
+    feats_out, labels_out = [], []
+    trace_fn = jax.jit(
+        lambda q, st, hf: _trace_full_phase(
+            x_pad, adj_pad, q, st, hf, k=k, hops=max_hops))
+    n = x_pad.shape[0] - 1
+    for s in range(0, queries.shape[0], batch):
+        q = jnp.asarray(queries[s: s + batch], jnp.float32)
+        hot_pool, _ = hot_phase(
+            x_hot_pad, adj_hot_pad, hot_entries, q,
+            pool_size=hot_pool_size, max_hops=max_hops, mode=hot_mode)
+        hfeats = hot_features(hot_pool, k)
+        state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size)
+        rec = trace_fn(q, state, hfeats)
+        f, l = _label_trace(rec, eval_gap, improve_tol)
+        feats_out.append(f)
+        labels_out.append(l)
+    return (np.concatenate(feats_out, 0).astype(np.float32),
+            np.concatenate(labels_out, 0).astype(np.int32))
+
+
+def _label_trace(rec: TraceRecord, eval_gap: int, tol: float):
+    """Host-side: emit (features, continue?) at every due evaluation point."""
+    feats = np.asarray(rec.feats)          # (T, B, 6)
+    kth = np.asarray(rec.kth)              # (T, B)
+    dc = np.asarray(rec.dist_count)        # (T, B)
+    active = np.asarray(rec.active)        # (T, B)
+    T, B, _ = feats.shape
+
+    # future_min[t] = min over t' > t of kth[t'] (per lane).
+    future_min = np.full((T, B), np.inf, np.float32)
+    run = np.full((B,), np.inf, np.float32)
+    for t in range(T - 1, -1, -1):
+        future_min[t] = run
+        run = np.minimum(run, kth[t])
+
+    evals_done = np.zeros((B,), np.int64)
+    out_f, out_l = [], []
+    for t in range(T):
+        due = (dc[t] // eval_gap) > evals_done
+        due &= active[t]
+        if due.any():
+            idx = np.flatnonzero(due)
+            improve = future_min[t, idx] < kth[t, idx] * (1.0 - tol)
+            out_f.append(feats[t, idx])
+            out_l.append(improve.astype(np.int32))
+            evals_done[idx] = dc[t, idx] // eval_gap
+    if not out_f:
+        return np.zeros((0, 6), np.float32), np.zeros((0,), np.int32)
+    return np.concatenate(out_f, 0), np.concatenate(out_l, 0)

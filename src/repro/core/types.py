@@ -1,0 +1,96 @@
+"""Shared types for the DQF core library.
+
+Conventions used across :mod:`repro.core`:
+
+* A graph over ``n`` points is a padded adjacency matrix ``(n, R) int32``.
+  The sentinel neighbor id is ``n`` (one past the last row).  Callers pad the
+  vector table with one extra row of ``PAD_VALUE`` so gathering the sentinel
+  row yields a huge distance and the entry never enters a candidate pool.
+* Distances are squared L2 unless stated otherwise (monotone in L2, cheaper).
+* All search state is batched: leading axis = query lane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# Value used for the padded sentinel row of a vector table. Large enough that
+# squared distances against it are effectively +inf, small enough to square
+# without overflow in float32.
+PAD_VALUE = 1e9
+# Distance assigned to invalid candidates.
+INF_DIST = jnp.float32(3.0e38)
+
+
+@dataclasses.dataclass(frozen=True)
+class DQFConfig:
+    """Configuration for the Dual-Index Query Framework (paper Table 4).
+
+    Defaults follow the paper's bold defaults where given.
+    """
+
+    # --- graph construction (shared by hot and full index; §4.2) ---
+    knn_k: int = 32             # pre-built KNNG degree (EFANNA stage)
+    out_degree: int = 32        # max out-degree R after SSG pruning
+    alpha_deg: float = 60.0     # SSG angle threshold alpha, degrees
+    n_entry: int = 8            # number of random entry points per search
+
+    # --- dual index (§4.2.2, Table 4) ---
+    index_ratio: float = 0.005  # IR: hot index size / full index size
+    n_query_trigger: int = 10_000  # Alg 2 n_query rebuild trigger
+
+    # --- search (§4.3, Table 4) ---
+    k: int = 10                 # neighbors returned
+    hot_pool: int = 32          # s_l: hot-index candidate pool size
+    full_pool: int = 64         # l: full-index candidate pool size
+    eval_gap: int = 50          # Freq: dist comps between DT evaluations
+    add_step: int = 0           # extra dist comps after DT termination
+    tree_depth: int = 10        # decision tree depth
+    max_hops: int = 512         # hard cap on beam-search expansions
+    hot_mode: str = "graph"     # "graph" (paper-faithful) | "mxu" (Pallas)
+
+    # --- workload (§5.1.2) ---
+    zipf_beta: float = 1.2
+
+    def __post_init__(self):
+        if self.hot_mode not in ("graph", "mxu"):
+            raise ValueError(f"hot_mode must be graph|mxu, got {self.hot_mode}")
+        if not (0.0 < self.index_ratio <= 1.0):
+            raise ValueError("index_ratio must be in (0, 1]")
+
+
+class PoolState(NamedTuple):
+    """Batched candidate pool (paper's result list ``L``).
+
+    Sorted ascending by distance at all times.  ``ids`` use global row ids
+    with ``n`` as the invalid sentinel.
+    """
+
+    ids: jnp.ndarray        # (B, L) int32
+    dists: jnp.ndarray      # (B, L) float32, INF_DIST for empty slots
+    expanded: jnp.ndarray   # (B, L) bool — True once the entry was expanded
+
+
+class SearchStats(NamedTuple):
+    """Per-lane counters (paper Table 1 count features)."""
+
+    dist_count: jnp.ndarray    # (B,) int32 — distance computations
+    update_count: jnp.ndarray  # (B,) int32 — pool insertions (node updates)
+    hops: jnp.ndarray          # (B,) int32 — expansions performed
+    terminated_early: jnp.ndarray  # (B,) bool — stopped by the decision tree
+
+
+class SearchResult(NamedTuple):
+    ids: jnp.ndarray     # (B, k) int32
+    dists: jnp.ndarray   # (B, k) float32
+    stats: SearchStats
+
+
+class HotFeatures(NamedTuple):
+    """Distance features frozen at the end of the hot phase (Table 1 a)."""
+
+    first: jnp.ndarray          # (B,) hotIdx_1st
+    first_div_kth: jnp.ndarray  # (B,) hotIdx_1st_div_kth

@@ -1,0 +1,3 @@
+"""Data pipelines (deterministic, resumable, host-sharded)."""
+
+from .pipeline import DataConfig, make_source  # noqa: F401

@@ -1,0 +1,3 @@
+"""Sharding rules and distribution helpers."""
+
+from . import sharding  # noqa: F401

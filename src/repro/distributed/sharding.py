@@ -1,0 +1,211 @@
+"""Parameter/activation sharding rules (DP × TP × EP × ZeRO-1).
+
+Rules map parameter-tree paths to PartitionSpecs over the production mesh
+axes (``pod``, ``data``, ``model``):
+
+* TP ("model"): attention head dims, FFN hidden dims, vocab dim, MoE expert
+  axis (expert parallelism), xLSTM/SSM inner dims;
+* DP ("pod" + "data"): the batch axis of activations; gradients all-reduce
+  over it (pods only see gradient traffic — DCN-friendly);
+* ZeRO-1: optimizer moments additionally shard their largest replicated
+  axis over "data";
+* anything whose dim is not divisible by the axis size falls back to
+  replication on that axis (checked per leaf, so e.g. hymba's vocab 32001
+  replicates while its d_model shards).
+
+Everything is divisibility-checked against the actual mesh, so the same
+rules serve the (16,16) single-pod mesh, the (2,16,16) multi-pod mesh, and
+tiny test meshes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "param_shardings", "batch_spec", "zero1_specs",
+           "activation_spec", "MODEL_AXIS", "DATA_AXES"]
+
+MODEL_AXIS = "model"
+DATA_AXES = ("pod", "data")   # pod may be absent from the mesh
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def _fits(dim: int, mesh: Mesh, axis: Optional[str]) -> bool:
+    if axis is None:
+        return True
+    return dim % _axis_size(mesh, axis) == 0
+
+
+# Ordered (path regex, axis-per-dim template) rules.  Templates are applied
+# right-aligned to the leaf shape (layer-stack leading axes stay None) and
+# each entry is divisibility-checked.  "model" on a dim means TP there.
+_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    (r"\bembed\b", ("model", None)),
+    (r"\blm_head\b", ("model", None)),
+    # attention
+    (r"attn.*\bwq\b", (None, "model")),
+    (r"attn.*\bwk\b", (None, "model")),
+    (r"attn.*\bwv\b", (None, "model")),
+    (r"attn.*\bwo\b", ("model", None)),
+    (r"attn.*\bw_dkv\b", (None, None)),
+    (r"attn.*\bw_uk\b", (None, "model")),
+    (r"attn.*\bw_uv\b", (None, "model")),
+    # dense mlp
+    (r"mlp.*\bw_gate\b", (None, "model")),
+    (r"mlp.*\bw_up\b", (None, "model")),
+    (r"mlp.*\bw_down\b", ("model", None)),
+    # moe: expert parallelism over the expert axis
+    (r"moe.*\brouter\b", (None, None)),
+    (r"moe.*shared.*\bw_gate\b", (None, "model")),
+    (r"moe.*shared.*\bw_up\b", (None, "model")),
+    (r"moe.*shared.*\bw_down\b", ("model", None)),
+    (r"moe.*\bw_gate\b", ("model", None, None)),
+    (r"moe.*\bw_up\b", ("model", None, None)),
+    (r"moe.*\bw_down\b", ("model", None, None)),
+    # mamba branch
+    (r"ssm.*\bw_in\b", (None, "model")),
+    (r"ssm.*\bconv\b", (None, "model")),
+    (r"ssm.*\bw_bc\b", ("model", None)),
+    (r"ssm.*\bw_dt\b", ("model", None)),
+    (r"ssm.*\bw_out\b", ("model", None)),
+    (r"ssm.*\bout_norm\b", ("model",)),
+    # xlstm
+    (r"mix.*\bw_up\b", (None, "model")),
+    (r"mix.*\bw_q\b", ("model", None)),
+    (r"mix.*\bw_k\b", ("model", None)),
+    (r"mix.*\bw_v\b", ("model", None)),
+    (r"mix.*\bw_if\b", ("model", None)),
+    (r"mix.*\bw_down\b", ("model", None)),
+    (r"mix.*\bout_norm\b", ("model",)),
+    (r"mix.*\bw_ff1\b", (None, "model")),
+    (r"mix.*\bw_ff2\b", ("model", None)),
+    (r"mix.*\bw_gates\b", (None, "model")),
+]
+
+
+def _spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    for pat, tmpl in _RULES:
+        if re.search(pat, path):
+            axes: list[Optional[str]] = [None] * len(shape)
+            # right-align the template (leading dims are layer stacks)
+            for i, ax in enumerate(tmpl):
+                pos = len(shape) - len(tmpl) + i
+                if pos < 0:
+                    continue
+                axes[pos] = ax if _fits(shape[pos], mesh, ax) else None
+            # fallback: vocab-style tables that can't shard dim0 try dim1
+            if tmpl[0] == "model" and axes[len(shape) - len(tmpl)] is None \
+                    and len(shape) >= 2 and len(tmpl) == 2 \
+                    and axes[-1] is None and _fits(shape[-1], mesh, "model"):
+                axes[-1] = "model"
+            return P(*axes)
+    return P()  # norms, biases, scalars: replicated
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpecs matching ``params``."""
+    def fn(path, leaf):
+        return _spec_for(jax.tree_util.keystr(path), leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def zero1_specs(params, mesh: Mesh):
+    """Optimizer-moment specs: param spec + 'data' on the largest free dim."""
+    daxes = _data_axes(mesh)
+    dsize = int(np.prod([_axis_size(mesh, a) for a in daxes])) if daxes else 1
+
+    def fn(path, leaf):
+        spec = _spec_for(jax.tree_util.keystr(path), leaf.shape, mesh)
+        axes = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        best, best_dim = -1, 0
+        for i, (ax, dim) in enumerate(zip(axes, leaf.shape)):
+            if ax is None and dim % dsize == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best >= 0 and dsize > 1:
+            axes[best] = daxes if len(daxes) > 1 else daxes[0]
+        return P(*axes)
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def cache_specs(caches, mesh: Mesh, strategy: str = "sequence"):
+    """Decode-cache specs: layer axis unsharded, batch over data axes, one
+    model-sharded dim chosen per leaf.
+
+    ``strategy`` picks which dim carries the model axis (hillclimb knob,
+    EXPERIMENTS.md §Perf):
+      * "sequence": kv heads → window/seq dim → feature (baseline — matches
+        a naive TP layout, but the per-step cache write is a
+        dynamic-update-slice *across* the sharded dim, which the SPMD
+        partitioner resolves by replicating the cache: collective-bound);
+      * "feature": trailing feature dim (head_dim / rank / state) first —
+        the DUS indexes only unsharded dims, so updates stay shard-local
+        and attention pays one small partial-sum all-reduce instead.
+    """
+    daxes = _data_axes(mesh)
+    dlead = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    dsz = data_size(mesh)
+
+    def fn(path, leaf):
+        name = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        if re.search(r"\bpos\b", name) or leaf.ndim <= 2:
+            return P()                      # (L, W) position rings etc.
+        axes: list = [None] * leaf.ndim
+        if leaf.ndim >= 3 and shape[1] % max(dsz, 1) == 0:
+            axes[1] = dlead                 # (L, B, ...)
+        if strategy == "feature":
+            prefer = list(range(leaf.ndim - 1, 1, -1))
+        else:  # "sequence" (baseline)
+            prefer = ([3, 2, 4] if leaf.ndim == 5 else
+                      [2, leaf.ndim - 1] if leaf.ndim == 4 else
+                      [leaf.ndim - 1])
+        for i in prefer:
+            if i < leaf.ndim and shape[i] >= 16 \
+                    and _fits(shape[i], mesh, MODEL_AXIS):
+                axes[i] = MODEL_AXIS
+                break
+        return P(*axes)
+    return jax.tree_util.tree_map_with_path(fn, caches)
+
+
+def data_size(mesh: Mesh) -> int:
+    daxes = _data_axes(mesh)
+    return int(np.prod([_axis_size(mesh, a) for a in daxes])) if daxes else 1
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1,
+               batch: Optional[int] = None) -> P:
+    """Tokens/labels: batch over all data axes, rest replicated.
+
+    If ``batch`` is given and not divisible by the data-axis product, the
+    batch dim replicates (e.g. long_500k's global_batch=1)."""
+    daxes = _data_axes(mesh)
+    if batch is not None and (not daxes or batch % data_size(mesh)):
+        return P(*([None] * (extra_dims + 1)))
+    lead = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    return P(lead, *([None] * extra_dims))
+
+
+def activation_spec(mesh: Mesh, *, seq_sharded: bool = False) -> P:
+    """(B, S, d) activations: batch over data axes, optionally SP on S."""
+    daxes = _data_axes(mesh)
+    lead = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    return P(lead, "model" if seq_sharded else None, None)

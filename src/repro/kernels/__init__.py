@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the DQF hot paths + jnp oracles.
+
+* :mod:`~repro.kernels.distance` — tiled pairwise squared-L2 (MXU matmul).
+* :mod:`~repro.kernels.fused_scorer` — fused distances + running top-k
+  (the beyond-paper MXU hot layer).
+* :mod:`~repro.kernels.topk_merge` — bitonic candidate-pool merge.
+* :mod:`~repro.kernels.ops` — dispatching public wrappers.
+* :mod:`~repro.kernels.ref` — pure-jnp oracles (contract + CPU path).
+"""
+
+from . import ops, ref  # noqa: F401

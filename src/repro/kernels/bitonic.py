@@ -1,0 +1,72 @@
+"""Bitonic key-value sort network, Pallas-TPU friendly.
+
+Everything is expressed as static reshapes + elementwise min/max selects —
+no dynamic gathers, no `lax.sort` — so the same code lowers inside a Pallas
+TPU kernel body and runs under interpret mode.  Lengths must be powers of
+two; callers pad keys with +inf.
+
+The compare-distance-``j`` exchange reshapes the last axis to
+``(n/(2j), 2, j)``: lanes ``(g, 0, r)`` and ``(g, 1, r)`` are exactly the
+``i ↔ i^j`` partners, and the sort direction of the classic network,
+``(i & k) != 0``, depends only on the group index ``g`` (since ``2j ≤ k``),
+so it broadcasts as a precomputed constant mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bitonic_sort_kv", "is_pow2", "next_pow2"]
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def _stage(keys, vals, j: int, k: int):
+    """One compare-exchange layer (distance j, merge block k)."""
+    n = keys.shape[-1]
+    a = n // (2 * j)
+    shape = keys.shape[:-1]
+    ks = keys.reshape(*shape, a, 2, j)
+    vs = vals.reshape(*shape, a, 2, j)
+    lo_k, hi_k = ks[..., 0, :], ks[..., 1, :]
+    lo_v, hi_v = vs[..., 0, :], vs[..., 1, :]
+    # Descending blocks where (i & k) != 0; constant per group g.  Generated
+    # in-kernel via iota (Pallas kernels may not capture host constants).
+    g = jax.lax.broadcasted_iota(jnp.int32, (a, 1), 0)       # (a, 1)
+    desc = ((g * (2 * j)) & k) != 0
+    swap = (lo_k > hi_k) ^ desc
+    new_lo_k = jnp.where(swap, hi_k, lo_k)
+    new_hi_k = jnp.where(swap, lo_k, hi_k)
+    new_lo_v = jnp.where(swap, hi_v, lo_v)
+    new_hi_v = jnp.where(swap, lo_v, hi_v)
+    ks = jnp.stack([new_lo_k, new_hi_k], axis=-2)
+    vs = jnp.stack([new_lo_v, new_hi_v], axis=-2)
+    return ks.reshape(*shape, n), vs.reshape(*shape, n)
+
+
+def bitonic_sort_kv(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Sort ascending by ``keys`` along the last axis; ``vals`` ride along.
+
+    Last-axis length must be a power of two.
+    """
+    n = keys.shape[-1]
+    if not is_pow2(n):
+        raise ValueError(f"bitonic length must be a power of 2, got {n}")
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            keys, vals = _stage(keys, vals, j, k)
+            j //= 2
+        k *= 2
+    return keys, vals

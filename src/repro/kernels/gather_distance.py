@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused neighbor-gather + distance (the beam-search hop).
+
+The paper's inner loop gathers R neighbor vectors by index and scores them
+against the query — a pointer chase.  The TPU-native expression uses
+**scalar prefetch** (`PrefetchScalarGridSpec`): the neighbor-id array rides
+in SMEM ahead of the grid, and each grid step's BlockSpec index_map selects
+the *row block of the database* addressed by the current neighbor id — the
+gather happens in the HBM→VMEM DMA engine, not as a vector op.
+
+Grid: (B, R) — one (query, neighbor) pair per step; the query row is
+re-used across the R inner steps (same index_map block), so its VMEM copy
+is loaded once per query.  Invalid ids (== n sentinel) map to the padded
+huge-valued row, preserving the +inf-distance convention of
+:mod:`repro.core`.
+
+Oracle: :func:`repro.kernels.ref.gather_distances`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gather_distances_pallas"]
+
+
+def _kernel(nbr_ref, q_ref, row_ref, o_ref):
+    # q_ref: (1, d) current query; row_ref: (1, d) gathered neighbor row.
+    q = q_ref[...].astype(jnp.float32)
+    r = row_ref[...].astype(jnp.float32)
+    diff = q - r
+    o_ref[0, 0] = jnp.sum(diff * diff)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_distances_pallas(queries: jnp.ndarray, x_pad: jnp.ndarray,
+                            nbrs: jnp.ndarray, *,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Squared L2 distances (B, R) between query b and x_pad[nbrs[b, r]].
+
+    ``x_pad`` is the (n+1, d) padded table (sentinel row n holds huge
+    values); ``nbrs`` is (B, R) int32 with sentinel n for invalid slots.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, R = nbrs.shape
+    d = x_pad.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                 # nbrs ride in SMEM
+        grid=(B, R),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, r, nbr: (b, 0)),
+            pl.BlockSpec((1, d), lambda b, r, nbr: (nbr[b, r], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, r, nbr: (b, r)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        interpret=interpret,
+    )(nbrs, queries, x_pad)

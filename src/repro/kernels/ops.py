@@ -1,0 +1,61 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Dispatch policy: on a TPU backend the compiled kernels run natively; on CPU
+(this container, unit tests) they run under ``interpret=True`` when
+explicitly requested and otherwise fall back to the jnp oracles in
+:mod:`repro.kernels.ref`, which XLA:CPU compiles well.  Either way the
+function contracts are identical — tests assert kernel ≡ ref.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .distance import pairwise_l2_pallas
+from .fused_scorer import fused_topk_l2_pallas
+from .topk_merge import pool_merge_pallas
+
+__all__ = ["pairwise_l2", "fused_topk_l2", "pool_merge", "kernels_native"]
+
+
+def kernels_native() -> bool:
+    """True when the Pallas kernels can compile for the local backend."""
+    return jax.default_backend() == "tpu"
+
+
+def _mode(interpret: Optional[bool]) -> Optional[bool]:
+    """Resolve the dispatch: True=interpret, False=native, None=use ref."""
+    if interpret is not None:
+        return interpret
+    return False if kernels_native() else None
+
+
+def pairwise_l2(q: jnp.ndarray, x: jnp.ndarray, *,
+                interpret: Optional[bool] = None, bq: int = 128,
+                bn: int = 128) -> jnp.ndarray:
+    m = _mode(interpret)
+    if m is None:
+        return ref.pairwise_l2(q, x)
+    return pairwise_l2_pallas(q, x, bq=bq, bn=bn, interpret=m)
+
+
+def fused_topk_l2(q: jnp.ndarray, x: jnp.ndarray, *, k: int,
+                  interpret: Optional[bool] = None, bq: int = 128,
+                  bn: int = 128):
+    m = _mode(interpret)
+    if m is None:
+        return ref.fused_topk_l2(q, x, k=k)
+    return fused_topk_l2_pallas(q, x, k=k, bq=bq, bn=bn, interpret=m)
+
+
+def pool_merge(pool_dists, pool_ids, cand_dists, cand_ids, *,
+               interpret: Optional[bool] = None, bb: int = 8):
+    m = _mode(interpret)
+    if m is None:
+        return ref.pool_merge(pool_dists, pool_ids, cand_dists, cand_ids)
+    return pool_merge_pallas(pool_dists, pool_ids, cand_dists, cand_ids,
+                             bb=bb, interpret=m)

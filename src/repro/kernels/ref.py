@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every kernel in :mod:`repro.kernels`.
+
+These are the semantics contracts: each Pallas kernel's interpret-mode tests
+assert allclose against the function of the same name here.  They are also
+the CPU execution path of the library (tests, laptop-scale benchmarks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pairwise_l2", "fused_topk_l2", "pool_merge",
+           "gather_distances"]
+
+
+@jax.jit
+def pairwise_l2(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 distances (B, N) between rows of q (B, d) and x (N, d)."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    q_sq = jnp.sum(q * q, axis=-1, keepdims=True)          # (B, 1)
+    x_sq = jnp.sum(x * x, axis=-1)                          # (N,)
+    return q_sq + x_sq[None, :] - 2.0 * (q @ x.T)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def fused_topk_l2(q: jnp.ndarray, x: jnp.ndarray, *, k: int):
+    """k smallest squared-L2 neighbors of each query: (dists, ids), both (B,k).
+
+    If k > N the tail is padded with +inf / id N (the sentinel convention of
+    :mod:`repro.core`). Ties break toward the smaller id (deterministic).
+    """
+    B, n = q.shape[0], x.shape[0]
+    d2 = pairwise_l2(q, x)
+    kk = min(k, n)
+    # top_k of negative distance; ties already broken by index order in XLA.
+    neg, ids = jax.lax.top_k(-d2, kk)
+    dists = -neg
+    if kk < k:
+        pad = k - kk
+        dists = jnp.concatenate(
+            [dists, jnp.full((B, pad), jnp.inf, dists.dtype)], axis=1)
+        ids = jnp.concatenate(
+            [ids, jnp.full((B, pad), n, ids.dtype)], axis=1)
+    return dists.astype(jnp.float32), ids.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pool_merge(pool_dists, pool_ids, cand_dists, cand_ids):
+    """Merge candidates into a sorted pool, keep |pool| smallest.
+
+    Both inputs are (B, L) and (B, C); output (B, L) sorted ascending.
+    """
+    L = pool_dists.shape[1]
+    d = jnp.concatenate([pool_dists, cand_dists], axis=1)
+    i = jnp.concatenate([pool_ids, cand_ids], axis=1)
+    order = jnp.argsort(d, axis=1, stable=True)[:, :L]
+    return (jnp.take_along_axis(d, order, 1),
+            jnp.take_along_axis(i, order, 1))
+
+
+@jax.jit
+def gather_distances(queries: jnp.ndarray, x_pad: jnp.ndarray,
+                     nbrs: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused gather+distance hop: (B, R) squared L2."""
+    g = x_pad[nbrs]                                        # (B, R, d)
+    diff = g.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)

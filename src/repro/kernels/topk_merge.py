@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: sorted candidate-pool merge (beam-search inner step).
+
+Merges an unsorted candidate tile into a sorted pool tile, keeping the L
+smallest (the trim of Algorithm 3 line 8 / Algorithm 4 line 22).  One grid
+step per batch tile; the concatenated (L + C) row is bitonic-sorted in VMEM.
+
+Oracle: :func:`repro.kernels.ref.pool_merge`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bitonic import bitonic_sort_kv, next_pow2
+
+__all__ = ["pool_merge_pallas"]
+
+
+def _merge_kernel(pd_ref, pi_ref, cd_ref, ci_ref, od_ref, oi_ref, *,
+                  sort_len: int, L: int, id_sentinel: int):
+    keys = jnp.concatenate([pd_ref[...], cd_ref[...]], axis=1)
+    vals = jnp.concatenate([pi_ref[...], ci_ref[...]], axis=1)
+    pad = sort_len - keys.shape[1]
+    if pad:
+        b = keys.shape[0]
+        keys = jnp.concatenate(
+            [keys, jnp.full((b, pad), jnp.inf, keys.dtype)], axis=1)
+        vals = jnp.concatenate(
+            [vals, jnp.full((b, pad), id_sentinel, vals.dtype)], axis=1)
+    keys, vals = bitonic_sort_kv(keys, vals)
+    od_ref[...] = keys[:, :L]
+    oi_ref[...] = vals[:, :L]
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def pool_merge_pallas(pool_dists, pool_ids, cand_dists, cand_ids, *,
+                      bb: int = 8, interpret: bool = False):
+    """Keep the L smallest of pool ∪ candidates per row; sorted output."""
+    B, L = pool_dists.shape
+    C = cand_dists.shape[1]
+    Bp = -(-B // bb) * bb
+    pad_rows = lambda a, fill: jnp.full(
+        (Bp, a.shape[1]), fill, a.dtype).at[:B].set(a)
+    pd = pad_rows(pool_dists.astype(jnp.float32), jnp.inf)
+    pi = pad_rows(pool_ids.astype(jnp.int32), 0)
+    cd = pad_rows(cand_dists.astype(jnp.float32), jnp.inf)
+    ci = pad_rows(cand_ids.astype(jnp.int32), 0)
+    sort_len = next_pow2(L + C)
+
+    kernel = functools.partial(_merge_kernel, sort_len=sort_len, L=L,
+                               id_sentinel=jnp.iinfo(jnp.int32).max)
+    od, oi = pl.pallas_call(
+        kernel,
+        grid=(Bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, L), lambda i: (i, 0)),
+            pl.BlockSpec((bb, L), lambda i: (i, 0)),
+            pl.BlockSpec((bb, C), lambda i: (i, 0)),
+            pl.BlockSpec((bb, C), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, L), lambda i: (i, 0)),
+            pl.BlockSpec((bb, L), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, L), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, L), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pd, pi, cd, ci)
+    return od[:B], oi[:B]

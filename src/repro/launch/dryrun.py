@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+
+1. builds ``input_specs`` — ShapeDtypeStructs with NamedShardings for every
+   input (params via ``jax.eval_shape`` over the real initializer: weak-type
+   correct, zero allocation);
+2. ``jax.jit(step).lower(...).compile()`` on the production mesh —
+   sharding mismatches, unsupported collectives, or partitioner failures
+   surface here as hard errors;
+3. records ``memory_analysis()`` / ``cost_analysis()`` / collective bytes
+   parsed from the optimized HLO into
+   ``artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json`` for
+   EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both      # full sweep, resumable
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, applicable_shapes, SHAPES
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.roofline import roofline_terms
+from repro.models import lm
+from repro.training.train_step import (TrainConfig, make_train_step,
+                                       train_state_init)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+# ------------------------------------------------------------ input specs
+def pick_microbatches(cfg, shape, mesh) -> int:
+    """Largest microbatch count M such that the per-device live f32 logits
+    stay under ~512 MB, while B/M remains divisible by the data-axis product
+    (batch sharding) — the knob EXPERIMENTS.md §Perf iterates."""
+    B, S, V = shape.global_batch, shape.seq_len, cfg.vocab_size
+    dsz = max(shd.data_size(mesh), 1)
+    msz = mesh.shape.get("model", 1)
+    budget = 512e6
+    m = 1
+    while B // m > dsz:
+        mb = B // m
+        per_dev = (mb / dsz) * S * (-(-V // msz)) * 4
+        if per_dev <= budget:
+            break
+        m *= 2
+    return m
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _like(tree, mesh, specs):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs)
+
+
+def input_specs(cfg, shape, mesh, *, tcfg: TrainConfig,
+                cache_strategy: str = "sequence"):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec2 = shd.batch_spec(mesh, extra_dims=1, batch=B)   # (B, S)
+    bspec3 = shd.batch_spec(mesh, extra_dims=2, batch=B)   # (B, S, d)
+
+    params_shapes = jax.eval_shape(
+        lambda k: lm.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(params_shapes, mesh)
+    params = _like(params_shapes, mesh, pspecs)
+
+    out = {"params": params, "pspecs": pspecs}
+    if shape.kind == "train":
+        M = tcfg.microbatches
+        mb = B // M
+        lead = (M,) if M > 1 else ()      # M==1: train_step takes flat batch
+        wrap2 = (lambda s: P(None, *s)) if M > 1 else (lambda s: s)
+        mspec = wrap2(bspec2)
+        batch = {}
+        if cfg.embed_inputs:
+            batch["tokens"] = _sds((*lead, mb, S), jnp.int32, mesh, mspec)
+        else:
+            batch["embeds"] = _sds((*lead, mb, S, cfg.d_model), jnp.bfloat16,
+                                   mesh, wrap2(bspec3))
+        batch["labels"] = _sds((*lead, mb, S), jnp.int32, mesh, mspec)
+        if cfg.cross_attn_every:
+            batch["media"] = _sds((*lead, mb, cfg.vision_tokens, cfg.d_model),
+                                  jnp.bfloat16, mesh, wrap2(bspec3))
+        out["batch"] = batch
+    elif shape.kind == "prefill":
+        if cfg.embed_inputs:
+            out["tokens"] = _sds((B, S), jnp.int32, mesh, bspec2)
+        else:
+            out["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                                 bspec3)
+        if cfg.cross_attn_every:
+            out["media"] = _sds((B, cfg.vision_tokens, cfg.d_model),
+                                jnp.bfloat16, mesh, bspec3)
+    else:  # decode: one new token against a seq_len cache
+        tok_shape = (B, 1) if cfg.embed_inputs else (B, 1, cfg.d_model)
+        tok_dtype = jnp.int32 if cfg.embed_inputs else jnp.bfloat16
+        out["token"] = _sds(tok_shape, tok_dtype, mesh,
+                            bspec2 if cfg.embed_inputs else bspec3)
+        cache_shapes = jax.eval_shape(
+            lambda: lm.init_decode_caches(cfg, B, max_len=S))
+        cspecs = shd.cache_specs(cache_shapes, mesh,
+                                 strategy=cache_strategy)
+        out["caches"] = _like(cache_shapes, mesh, cspecs)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+# ------------------------------------------------------------- cell runner
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               tcfg: TrainConfig | None = None,
+               cache_strategy: str = "sequence",
+               attn_impl: str = "auto",
+               moe_int8: bool = False,
+               moe_groups: int = 0,
+               ssm_chunk: int = 0):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg.moe is not None and (moe_int8 or moe_groups):
+        cfg = _dc.replace(cfg, moe=_dc.replace(
+            cfg.moe, quantize_dispatch=moe_int8 or cfg.moe.quantize_dispatch,
+            route_groups=moe_groups or cfg.moe.route_groups,
+            num_groups=16 if moe_groups else cfg.moe.num_groups))
+    if ssm_chunk and cfg.ssm is not None:
+        cfg = _dc.replace(cfg, ssm=_dc.replace(cfg.ssm, chunk=ssm_chunk))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tcfg = tcfg or TrainConfig(
+        microbatches=pick_microbatches(cfg, shape, mesh))
+
+    with jax.set_mesh(mesh):
+        spec = input_specs(cfg, shape, mesh, tcfg=tcfg,
+                           cache_strategy=cache_strategy)
+        if shape.kind == "train":
+            step = make_train_step(cfg, tcfg)
+            state_shapes = jax.eval_shape(
+                lambda p: train_state_init(p, tcfg), spec["params"])
+            sspecs = type(state_shapes)(
+                params=spec["pspecs"],
+                opt=type(state_shapes.opt)(
+                    step=P(),
+                    m=shd.zero1_specs(state_shapes.params, mesh),
+                    v=shd.zero1_specs(state_shapes.params, mesh)),
+                err=None)
+            state = _like(state_shapes, mesh, sspecs)
+            fn = jax.jit(step, donate_argnums=(0,))
+            lowered = fn.lower(state, spec["batch"])
+        elif shape.kind == "prefill":
+            def serve_prefill(params, tokens=None, embeds=None, media=None):
+                return lm.prefill(params, cfg, tokens=tokens, embeds=embeds,
+                                  media=media)
+            kw = {k: spec[k] for k in ("tokens", "embeds", "media")
+                  if k in spec}
+            lowered = jax.jit(serve_prefill).lower(spec["params"], **kw)
+        else:
+            fmesh = mesh if attn_impl == "flash" else None
+
+            def serve_step(params, token, caches, pos):
+                return lm.decode_step(params, cfg, token, caches, pos,
+                                      flash_mesh=fmesh)
+            lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
+                spec["params"], spec["token"], spec["caches"], spec["pos"])
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+    return cfg, shape, tcfg, lowered, compiled, compile_s
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             force: bool = False, tag: str = "", tcfg=None,
+             cache_strategy: str = "sequence",
+             attn_impl: str = "auto", moe_int8: bool = False,
+             moe_groups: int = 0, ssm_chunk: int = 0) -> dict:
+    os.makedirs(ART_DIR, exist_ok=True)
+    out_path = os.path.join(
+        ART_DIR, f"{arch}__{shape_name}__{mesh_name}"
+        + (f"__{tag}" if tag else "") + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    multi_pod = mesh_name == "multi"
+    n_chips = 512 if multi_pod else 256
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": n_chips, "tag": tag, "ok": False}
+    rec["cache_strategy"] = cache_strategy
+    rec["attn_impl"] = attn_impl
+    try:
+        cfg, shape, tcfg, lowered, compiled, compile_s = lower_cell(
+            arch, shape_name, multi_pod, tcfg=tcfg,
+            cache_strategy=cache_strategy, attn_impl=attn_impl,
+            moe_int8=moe_int8, moe_groups=moe_groups, ssm_chunk=ssm_chunk)
+        rec["compile_seconds"] = round(compile_s, 1)
+        rec["microbatches"] = tcfg.microbatches
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        cost = compiled.cost_analysis()
+        if cost:  # auxiliary only — not loop-weighted (see hlo_stats.py)
+            rec["xla_cost_flops"] = float(cost.get("flops", 0.0))
+            rec["xla_cost_bytes"] = float(cost.get("bytes accessed", 0.0))
+        # trip-weighted analysis of the optimized per-partition HLO
+        stats = analyze_hlo(compiled.as_text())
+        rec["hlo_flops"] = float(stats.flops)
+        rec["hlo_bytes"] = float(stats.bytes)
+        rec["collectives"] = {
+            **{k: int(v) for k, v in sorted(stats.by_collective.items())},
+            "count": int(stats.collective_count),
+            "total_bytes": int(stats.collective_bytes)}
+        rec["roofline"] = roofline_terms(
+            cfg, shape, rec["hlo_flops"], rec["hlo_bytes"],
+            stats.collective_bytes, n_chips,
+            microbatches=tcfg.microbatches)
+        rec["ok"] = True
+        print(f"[dryrun] OK  {arch:24s} {shape_name:12s} {mesh_name:6s} "
+              f"compile={compile_s:6.1f}s flops={rec.get('hlo_flops', 0):.3e}")
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {arch} {shape_name} {mesh_name}: {rec['error']}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--cache-strategy", default="sequence",
+                    choices=("sequence", "feature"))
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=("auto", "flash"))
+    ap.add_argument("--moe-int8", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="device-limited routing: groups per token")
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="override the train microbatch count")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in applicable_shapes(get_config(arch)):
+                for m in meshes:
+                    cells.append((arch, shape.name, m))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape required without --all")
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    ok = 0
+    tcfg = (TrainConfig(microbatches=args.microbatches)
+            if args.microbatches else None)
+    for arch, shape, m in cells:
+        rec = run_cell(arch, shape, m, force=args.force, tag=args.tag,
+                       tcfg=tcfg, cache_strategy=args.cache_strategy,
+                       attn_impl=args.attn_impl, moe_int8=args.moe_int8,
+                       moe_groups=args.moe_groups, ssm_chunk=args.ssm_chunk)
+        ok += bool(rec.get("ok"))
+    print(f"[dryrun] {ok}/{len(cells)} cells OK")
+    return 0 if ok == len(cells) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,300 @@
+"""Trip-weighted HLO analysis: flops, HBM traffic, collective bytes.
+
+Why not ``compiled.cost_analysis()``: calibration (see EXPERIMENTS.md
+§Dry-run notes) shows XLA's HloCostAnalysis does NOT multiply while-loop
+bodies by trip count — a 10-step scan reports 1/10th the flops — and our
+programs are scans over layers × microbatches × attention chunks, i.e.
+almost everything lives in loops.  This module re-derives the three
+roofline inputs from the optimized HLO text with explicit loop weighting:
+
+* **flops**: every ``dot`` (2 × prod(result dims) × prod(contracted dims),
+  via a per-computation symbol table for operand shapes); convolutions are
+  treated as dots; elementwise flops are ignored (matmuls dominate, and the
+  memory term covers elementwise cost);
+* **bytes**: per instruction, result + operand bytes — for post-fusion HLO
+  each fusion is one instruction whose operands/results are exactly its
+  HBM traffic; bookkeeping ops (tuple plumbing, parameters, bitcasts) are
+  skipped;
+* **collectives**: per-op algorithm-adjusted traffic (ring all-reduce
+  ≈ 2×size, reduce-scatter input = result × group, all-gather output-minus-
+  own-shard), with group sizes parsed from both brace and iota-form
+  ``replica_groups``.
+
+Loop weighting: each `while` body is multiplied by the trip count taken
+from the largest integer constant in its condition computation (the bound
+XLA emits for scan-lowered loops); `call`/`conditional` weight 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HloStats", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
+    "get-dimension-size", "domain", "token",
+}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+_CALLERS = {"while", "call", "conditional", "custom-call", "fusion", "map",
+            "reduce", "sort", "scatter", "reduce-window",
+            "select-and-scatter", "reduce-scatter", "all-reduce"}
+
+
+def _dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_collective: dict = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+
+    def add(self, other: "HloStats", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.collective_bytes += mult * other.collective_bytes
+        self.collective_count += int(mult * other.collective_count)
+        for k, v in other.by_collective.items():
+            self.by_collective[k] = self.by_collective.get(k, 0) \
+                + int(mult * v)
+
+
+def _split(hlo_text: str):
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        if raw and not raw[0].isspace() and "{" in raw and "->" in raw:
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", raw)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        elif cur is not None and raw.strip():
+            comps[cur].append(raw)
+    return comps, entry
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))     # [groups, group_size] <= [devices]
+    return 1
+
+
+def _collective_traffic(op: str, nbytes: int, group: int) -> float:
+    if op == "all-reduce":
+        return 2.0 * nbytes * max(group - 1, 0) / max(group, 1)
+    if op == "reduce-scatter":
+        return float(nbytes * max(group - 1, 0))
+    if op == "all-gather":
+        return nbytes * max(group - 1, 0) / max(group, 1)
+    return float(nbytes)
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    comps, entry = _split(hlo_text)
+
+    # ---- pass 1: per-computation symbol tables (name -> type string) ----
+    symtab: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        table: dict[str, str] = {}
+        hdr_params = re.findall(r"%?([\w\.\-]+):\s*([a-z0-9]+\[[0-9,]*\])",
+                                "\n".join(lines[:1]))
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                table[m.group(1)] = m.group(2)
+            for pname, ptype in re.findall(
+                    r"%?([\w\.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\])", line):
+                table.setdefault(pname, ptype)
+        symtab[cname] = table
+
+    own: dict[str, HloStats] = {}
+    edges: dict[str, list[tuple[str, float]]] = {}
+    flops_edges: dict[str, list[tuple[str, float]]] = {}
+
+    for cname, lines in comps.items():
+        st = HloStats(by_collective={k: 0 for k in _COLLECTIVES})
+        kids: list[tuple[str, float]] = []
+        table = symtab[cname]
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rtype, op = m.groups()
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op.endswith("-done") or base_op.endswith("-update"):
+                continue
+            if base_op in _SKIP_OPS:
+                continue
+
+            # ---- bytes: result + operands ------------------------------
+            paren = line[line.index(f"{op}(") + len(op) + 1:]
+            args = paren.split(")")[0]
+            operand_bytes = 0
+            for oname in _OPERAND_RE.findall(args):
+                if oname in table:
+                    operand_bytes += _nbytes(table[oname])
+            if base_op in ("while", "call", "conditional"):
+                pass        # control flow: traffic counted inside children
+            elif base_op == "dynamic-update-slice":
+                # in-place on TPU: read + write only the updated window
+                ops_found = _OPERAND_RE.findall(args)
+                upd = (_nbytes(table[ops_found[1]])
+                       if len(ops_found) > 1 and ops_found[1] in table
+                       else _nbytes(rtype))
+                st.bytes += 2.0 * upd
+            elif base_op == "dynamic-slice":
+                st.bytes += 2.0 * _nbytes(rtype)   # read + write the window
+            elif base_op == "fusion" and "dynamic_update_slice" in line:
+                # fused in-place update (scan ys / cache writes): the big
+                # buffer operand aliases the result; traffic = small pieces
+                op_sizes = [_nbytes(table[o])
+                            for o in _OPERAND_RE.findall(args) if o in table]
+                big = max(op_sizes, default=0)
+                st.bytes += 2.0 * max(sum(op_sizes) - big, 0)
+            elif base_op == "fusion" and ("dynamic_slice" in line
+                                          or "dynamic-slice" in line):
+                # fused loop-slice read: traffic = slice read + result write
+                op_sizes = [_nbytes(table[o])
+                            for o in _OPERAND_RE.findall(args) if o in table]
+                big = max(op_sizes, default=0)
+                st.bytes += 2.0 * _nbytes(rtype) \
+                    + max(sum(op_sizes) - big, 0)
+            else:
+                st.bytes += _nbytes(rtype) + operand_bytes
+
+            # ---- flops: dots / convolutions -----------------------------
+            if base_op in ("dot", "convolution"):
+                contract = 1
+                mc = _CONTRACT_RE.search(line)
+                ops_found = _OPERAND_RE.findall(args)
+                if mc and ops_found and ops_found[0] in table:
+                    lhs_dims = _dims(table[ops_found[0]])
+                    if lhs_dims:
+                        dims = lhs_dims[0][1]
+                        for i in (int(x) for x in mc.group(1).split(",")
+                                  if x):
+                            if i < len(dims):
+                                contract *= dims[i]
+                elif base_op == "convolution" and ops_found \
+                        and ops_found[-1] in table:
+                    kdims = _dims(table[ops_found[-1]])
+                    if kdims:
+                        n = 1
+                        for d in kdims[0][1][:-1]:
+                            n *= d
+                        contract = n
+                result_elems = 0
+                for dt, dims in _dims(rtype):
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    result_elems += n
+                st.flops += 2.0 * result_elems * contract
+
+            # ---- collectives ---------------------------------------------
+            if base_op in _COLLECTIVES:
+                traffic = _collective_traffic(
+                    base_op, _nbytes(rtype), _group_size(line))
+                st.collective_bytes += traffic
+                st.by_collective[base_op] += int(traffic)
+                st.collective_count += 1
+
+            # ---- call graph ----------------------------------------------
+            if base_op == "while":
+                mb = _WHILE_BODY_RE.search(line)
+                mcnd = _WHILE_COND_RE.search(line)
+                trips = 1
+                if mcnd and mcnd.group(1) in comps:
+                    for cl in comps[mcnd.group(1)]:
+                        for c in _TRIP_RE.findall(cl):
+                            trips = max(trips, int(c))
+                if mb:
+                    kids.append((mb.group(1), float(trips)))
+                if mcnd:
+                    kids.append((mcnd.group(1), float(trips)))
+            elif base_op in ("call", "conditional"):
+                for cc in _CALL_RE.findall(line):
+                    kids.append((cc, 1.0))
+                for cc in re.findall(
+                        r"(?:true_computation|false_computation|"
+                        r"branch_computations=\{)%?([\w\.\-]+)", line):
+                    kids.append((cc, 1.0))
+            elif base_op == "fusion":
+                # dots fused into kLoop/kOutput fusions still cost flops;
+                # bytes stay at fusion granularity (operands+result above)
+                mfu = re.search(r"calls=%?([\w\.\-]+)", line)
+                if mfu:
+                    flops_edges.setdefault(cname, []).append(
+                        (mfu.group(1), 1.0))
+        own[cname] = st
+        edges[cname] = kids
+
+    memo: dict[str, HloStats] = {}
+
+    def total(name: str, depth: int = 0) -> HloStats:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in own:
+            return HloStats(by_collective={})
+        acc = HloStats(by_collective=dict(own[name].by_collective))
+        acc.flops = own[name].flops
+        acc.bytes = own[name].bytes
+        acc.collective_bytes = own[name].collective_bytes
+        acc.collective_count = own[name].collective_count
+        for child, mult in edges.get(name, ()):
+            acc.add(total(child, depth + 1), mult)
+        for child, mult in flops_edges.get(name, ()):
+            acc.flops += mult * total(child, depth + 1).flops
+        memo[name] = acc
+        return acc
+
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    return total(entry) if entry else HloStats()

@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Shapes per the assignment: single pod = (16, 16) over
+(data, model); multi-pod = (2, 16, 16) over (pod, data, model) — 512 chips.
+The ``pod`` axis carries data parallelism by default (gradient all-reduce is
+the only cross-pod/DCN traffic); ``pipeline`` mode is available at the
+launcher level for GPipe-style pod staging (see repro.distributed.pipeline).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for unit tests (requires ≥ data*model local devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

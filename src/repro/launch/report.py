@@ -1,0 +1,93 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report [--mesh single] [--tag TAG]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def load(mesh: str, tag: str = "") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def fmt_s(v) -> str:
+    if v is None:
+        return "-"
+    if v >= 1:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:.1f}ms"
+    return f"{v * 1e6:.0f}us"
+
+
+def roofline_table(mesh: str, tag: str = "") -> str:
+    rows = ["| arch | shape | compile | HLO TFLOPs/dev | compute | memory "
+            "| mem-floor | collective | dominant | useful | RL-frac "
+            "| RL-frac(flash) |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh, tag):
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | "
+                        f"{r.get('error', '?')[:60]} |" + " |" * 8)
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_seconds']}s "
+            f"| {r['hlo_flops'] / 1e12:.2f} "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf.get('memory_floor_s'))} "
+            f"| {fmt_s(rf['collective_s'])} "
+            f"| {rf['dominant'].replace('_s', '')} "
+            f"| {rf['useful_flop_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.4f} "
+            f"| {rf.get('roofline_fraction_flash', 0):.4f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(mesh: str, tag: str = "") -> str:
+    rows = ["| arch | shape | ok | compile_s | M | args/dev | temp/dev "
+            "| collectives (count) | coll bytes/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    gb = 1 / (1 << 30)
+    for r in load(mesh, tag):
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL |"
+                        + " |" * 6)
+            continue
+        c = r["collectives"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_seconds']} "
+            f"| {r.get('microbatches', '-')} "
+            f"| {r.get('argument_size_in_bytes', 0) * gb:.2f}G "
+            f"| {r.get('temp_size_in_bytes', 0) * gb:.2f}G "
+            f"| {c.get('count', 0)} "
+            f"| {c.get('total_bytes', 0) * gb:.2f}G |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--kind", default="roofline",
+                    choices=("roofline", "dryrun"))
+    args = ap.parse_args()
+    fn = roofline_table if args.kind == "roofline" else dryrun_table
+    print(fn(args.mesh, args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,308 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (assignment constants:
+TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+    compute    = HLO_FLOPs_per_partition / peak
+    memory     = HLO_bytes_per_partition / hbm_bw
+    collective = collective_bytes_per_partition / link_bw
+
+(jax's ``compiled.cost_analysis()`` and the per-partition HLO are
+per-device quantities — calibrated empirically on a sharded matmul — so
+each term divides by a single chip's bandwidth; chip count enters via the
+global MODEL_FLOPS comparison.)
+
+``collective_bytes_from_hlo`` parses the optimized HLO: cost_analysis has
+no collective view, so we regex every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, take the result-shape
+bytes with per-op traffic multipliers (ring all-reduce moves ~2× the
+buffer; reduce-scatter's input is result × group size), and — crucially —
+weight collectives inside `while` bodies (layer scans, microbatch scans,
+chunked-attention scans) by their trip counts, extracted from the loop
+condition's constant bound.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms", "model_flops",
+           "HW"]
+
+HW = {
+    "peak_flops": 197e12,     # bf16 / chip
+    "hbm_bw": 819e9,          # bytes/s / chip
+    "link_bw": 50e9,          # bytes/s / link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*"
+                          r"\([^)]*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_WHILE_RE2 = re.compile(
+    r"while\(.*?body=%?([\w\.\-]+),\s*condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _line_traffic(line: str):
+    m = _COLL_RE.search(line)
+    if not m:
+        return None
+    type_str, op = m.groups()
+    nbytes = _shape_bytes(type_str)
+    g = _GROUPS_RE.search(line)
+    group = len(g.group(1).split(",")) if g else 1
+    if op == "all-reduce":
+        traffic = 2 * nbytes * max(group - 1, 0) / max(group, 1)
+    elif op == "reduce-scatter":
+        traffic = nbytes * max(group - 1, 0)           # input = result×group
+    elif op == "all-gather":
+        traffic = nbytes * max(group - 1, 0) / max(group, 1)
+    else:
+        traffic = nbytes
+    return op, int(traffic)
+
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+def _split_computations(hlo_text: str) -> tuple[dict, str]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        if raw and not raw[0].isspace() and "->" in raw and "{" in raw:
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", raw)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        elif cur is not None:
+            comps[cur].append(raw)
+    return comps, entry
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    comps, entry = _split_computations(hlo_text)
+
+    own: dict[str, dict] = {}
+    edges: dict[str, list[tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        tally = {k: 0 for k in _KINDS}
+        tally["count"] = 0
+        kids: list[tuple[str, int]] = []
+        for line in lines:
+            t = _line_traffic(line)
+            if t:
+                tally[t[0]] += t[1]
+                tally["count"] += 1
+            mw = _WHILE_RE.search(line) or _WHILE_RE2.search(line)
+            if mw and "while(" in line:
+                a, b = mw.groups()
+                cond, body = (a, b) if _WHILE_RE.search(line) else (b, a)
+                trips = 1
+                for cl in comps.get(cond, ()):
+                    for c in _TRIP_RE.findall(cl):
+                        trips = max(trips, int(c))
+                kids.append((body, trips))
+            elif "to_apply=" in line and not t and "reduce(" not in line \
+                    and "reduce-window" not in line and "sort(" not in line \
+                    and "scatter(" not in line and "select-and-scatter" \
+                    not in line:
+                mc = _CALL_RE.search(line)
+                if mc:
+                    kids.append((mc.group(1), 1))
+        own[name] = tally
+        edges[name] = kids
+
+    memo: dict[str, dict] = {}
+
+    def total(name: str, depth: int = 0) -> dict:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in own:
+            return {k: 0 for k in (*_KINDS, "count")}
+        acc = dict(own[name])
+        for child, mult in edges.get(name, ()):
+            sub = total(child, depth + 1)
+            for k in acc:
+                acc[k] += mult * sub.get(k, 0)
+        memo[name] = acc
+        return acc
+
+    if entry is not None:
+        out = total(entry)
+    else:  # fallback: flat, trip-unweighted
+        out = {k: 0 for k in _KINDS}
+        out["count"] = 0
+        for line in hlo_text.splitlines():
+            t = _line_traffic(line)
+            if t:
+                out[t[0]] += t[1]
+                out["count"] += 1
+    out["total_bytes"] = sum(out.get(k, 0) for k in _KINDS)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs for this cell (6·N·D convention + exact attention)."""
+    n_active = cfg.active_params()
+    hd = cfg.resolved_head_dim
+
+    def attn_span(kind):
+        if kind == "cross":
+            return cfg.vision_tokens
+        if cfg.window_size and kind in ("local", "hybrid"):
+            return min(cfg.window_size, shape.seq_len)
+        return shape.seq_len / 2
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n_active * tokens
+        attn = sum(
+            12.0 * tokens * attn_span(k) * cfg.num_heads * hd
+            for k in cfg.layer_kinds
+            if k in ("dense", "local", "global", "moe", "hybrid", "cross"))
+        return base + attn
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n_active * tokens
+        attn = sum(
+            4.0 * tokens * attn_span(k) * cfg.num_heads * hd
+            for k in cfg.layer_kinds
+            if k in ("dense", "local", "global", "moe", "hybrid", "cross"))
+        return base + attn
+    # decode: one token per sequence; span = full cache (or window)
+    tokens = shape.global_batch
+    base = 2.0 * n_active * tokens
+    attn = 0.0
+    for k in cfg.layer_kinds:
+        if k in ("dense", "local", "global", "moe", "hybrid", "cross"):
+            span = (min(cfg.window_size, shape.seq_len)
+                    if (cfg.window_size and k in ("local", "hybrid"))
+                    else shape.seq_len)
+            if k == "cross":
+                span = cfg.vision_tokens
+            attn += 4.0 * tokens * span * cfg.num_heads * hd
+    return base + attn
+
+
+def memory_floor_bytes(cfg, shape, chips: int, microbatches: int = 1) -> float:
+    """Per-device HBM-traffic floor with ideal (TPU/Pallas) fusion: params,
+    optimizer state, remat-stored activations, caches, logits — but NO
+    attention-score materialization (a flash kernel keeps those in VMEM).
+
+    The measured ``memory_s`` from hlo_stats reflects the CPU backend's
+    fusion granularity (scores hit HBM chunk-by-chunk); this floor is what
+    the same program achieves with the repro.kernels flash path on real
+    hardware.  Both are reported.
+    """
+    P = cfg.total_params()
+    Pa = cfg.active_params()
+    d = cfg.d_model
+    L = cfg.num_layers
+    V = cfg.vocab_size
+    if shape.kind == "train":
+        M = max(microbatches, 1)
+        tok_mb = shape.global_batch * shape.seq_len / M
+        traffic = (
+            3.0 * M * 2 * Pa            # weight reads: fwd + bwd + remat fwd
+            + 2.0 * M * 4 * P / M       # grad accumulation r/w (sharded)
+            + 4 * 4 * P + 2 * P         # adamw m/v r/w + param write
+            + 2.0 * M * L * tok_mb * d * 2 * 2   # remat-stored layer inputs
+            + 2.0 * M * tok_mb * V * 4 * 0.5     # logits w+r (f32, sharded)
+        )
+    elif shape.kind == "prefill":
+        tok = shape.global_batch * shape.seq_len
+        traffic = (2 * Pa + 8.0 * L * tok * d * 2
+                   + _cache_bytes(cfg, shape))
+    else:
+        traffic = (2 * Pa + 2.0 * _cache_bytes(cfg, shape)
+                   + 16.0 * shape.global_batch * L * d * 2)
+    return traffic / chips
+
+
+def _cache_bytes(cfg, shape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind in ("dense", "global", "moe"):
+            if cfg.mla_enabled:
+                m = cfg.mla
+                total += B * S * (m.kv_lora_rank + m.qk_rope_head_dim) * 2
+            else:
+                total += 2 * B * S * cfg.num_kv_heads * hd * 2
+        elif kind in ("local", "hybrid"):
+            W = min(cfg.window_size or S, S)
+            total += 2 * B * W * cfg.num_kv_heads * hd * 2
+            if kind == "hybrid" and cfg.ssm:
+                inner = cfg.ssm.expand * cfg.d_model
+                total += B * inner * (cfg.ssm.state_dim + 4) * 4
+        elif kind == "mlstm":
+            inner = 2 * cfg.d_model
+            Ph = inner // cfg.num_heads
+            total += B * cfg.num_heads * Ph * (Ph + 1) * 4
+        elif kind == "slstm":
+            total += 4 * B * cfg.d_model * 4
+        elif kind == "cross":
+            total += 2 * B * cfg.vision_tokens * cfg.num_kv_heads * hd * 2
+    return total
+
+
+def roofline_terms(cfg, shape, hlo_flops: float, hlo_bytes: float,
+                   coll_bytes: float, chips: int,
+                   microbatches: int = 1) -> dict:
+    mf = model_flops(cfg, shape)
+    compute_s = hlo_flops / HW["peak_flops"]
+    memory_s = hlo_bytes / HW["hbm_bw"]
+    floor_s = memory_floor_bytes(cfg, shape, chips, microbatches) \
+        / HW["hbm_bw"]
+    coll_s = coll_bytes / HW["link_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(compute_s, memory_s, coll_s)
+    # bound with the flash-fused memory path (kernels/ on real TPU)
+    bound_flash_s = max(compute_s, floor_s, coll_s)
+    ideal_s = mf / (chips * HW["peak_flops"])
+    return {
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "memory_floor_s": float(f"{floor_s:.6g}"),
+        "dominant": dominant,
+        "model_flops": float(f"{mf:.6g}"),
+        "useful_flop_ratio": float(
+            f"{(mf / (hlo_flops * chips) if hlo_flops else 0):.4g}"),
+        "roofline_fraction": float(
+            f"{(ideal_s / bound_s if bound_s else 0):.4g}"),
+        "roofline_fraction_flash": float(
+            f"{(ideal_s / bound_flash_s if bound_flash_s else 0):.4g}"),
+    }

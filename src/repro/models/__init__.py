@@ -1,0 +1,5 @@
+"""Model zoo: one generic decoder LM driven by ArchConfig (see lm.py)."""
+
+from . import lm  # noqa: F401
+from .lm import (decode_step, forward, init_decode_caches, init_params,
+                 lm_loss, prefill)  # noqa: F401

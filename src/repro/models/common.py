@@ -1,0 +1,112 @@
+"""Shared model primitives: norms, RoPE, embeddings, init, dtype policy.
+
+Models are pure functions over nested-dict parameter pytrees (no flax on
+the image, and none needed).  Conventions:
+
+* weight matrices are stored ``(d_in, d_out)``;
+* per-layer-kind parameter stacks have a leading layer axis ``(Lk, ...)``;
+* params live in ``cfg.dtype`` (bf16 in production), math that needs it
+  (norms, softmax, router, rope) runs in float32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Initializer", "dense_init", "rms_norm", "apply_rope",
+           "rope_angles", "embed", "unembed", "softmax_cross_entropy",
+           "dtype_of", "kernel_init", "DTYPES"]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return DTYPES[cfg.dtype]
+
+
+@dataclasses.dataclass
+class Initializer:
+    """Deterministic splitting helper: every parameter gets its own key."""
+
+    key: jax.Array
+    count: int = 0
+
+    def next_key(self) -> jax.Array:
+        self.count += 1
+        return jax.random.fold_in(self.key, self.count)
+
+
+def kernel_init(init: Initializer, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (the llama/gemma default)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(
+        init.next_key(), -3.0, 3.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def dense_init(init: Initializer, d_in: int, d_out: int, dtype):
+    return kernel_init(init, (d_in, d_out), dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(sin, cos) of shape (..., head_dim/2) for the given positions."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq   # (..., half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Rotate pairs (x1, x2) = (x[..., :h/2], x[..., h/2:]).
+
+    x: (..., S, n_heads, head_dim); sin/cos: (..., S, head_dim/2).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :].astype(jnp.float32)
+    c = cos[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray,
+          scale: float = 1.0) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0)
+    if scale != 1.0:
+        out = (out.astype(jnp.float32) * scale).astype(out.dtype)
+    return out
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Project to vocab logits (f32 for a stable softmax)."""
+    return jnp.einsum("...d,vd->...v", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token NLL; logits (..., V) f32, labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,396 @@
+"""Decoder-LM assembly for the whole arch zoo.
+
+One generic model reads an :class:`repro.configs.ArchConfig`:
+
+* ``cfg.layer_kinds`` gives each layer's block kind (dense / local / global /
+  moe / cross / hybrid / mlstm / slstm);
+* parameters are stored as **per-kind stacks** — every leaf has a leading
+  axis over that kind's layers.  Execution walks the static *run schedule*
+  (consecutive same-kind layers) and `lax.scan`s over the corresponding
+  slice of the stack, so the HLO stays O(#kinds), not O(#layers) — the
+  single most important lever for 512-way SPMD compile time;
+* the same schedule drives prefill (collecting per-layer caches into the
+  same stacked layout) and decode (scanning params *and* cache together).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ssm as ssm_mod
+from . import xlstm as xl
+from .common import (Initializer, dtype_of, embed, rms_norm,
+                     softmax_cross_entropy, unembed, kernel_init)
+from .mlp import init_mlp_params, mlp_forward
+from .moe import init_moe_params, moe_forward
+
+__all__ = ["init_params", "forward", "prefill", "decode_step", "lm_loss",
+           "init_decode_caches", "layer_runs"]
+
+
+# ============================================================ layer schedule
+def layer_runs(cfg) -> list[tuple[str, int, int]]:
+    """(kind, start_index_within_kind, length) for consecutive runs."""
+    runs = []
+    seen: dict[str, int] = {}
+    kinds = cfg.layer_kinds
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        k = kinds[i]
+        runs.append((k, seen.get(k, 0), j - i))
+        seen[k] = seen.get(k, 0) + (j - i)
+        i = j
+    return runs
+
+
+def _kind_attn_mode(cfg, kind: str) -> tuple[float, int]:
+    """(rope theta, window) for a block kind."""
+    if kind == "global":
+        return (cfg.rope_theta_global or cfg.rope_theta, 0)
+    if kind in ("local", "hybrid"):
+        return (cfg.rope_theta, cfg.window_size)
+    return (cfg.rope_theta, cfg.window_size if cfg.window_size
+            and cfg.global_layer_every == 0 else 0)
+
+
+def _attn_chunks(cfg, seq_len: int) -> tuple[int, int]:
+    c = 512 if seq_len <= 4096 else 1024
+    return min(c, seq_len), min(c, seq_len)
+
+
+# ================================================================== blocks
+def _init_block(kind: str, key, cfg, dtype) -> dict:
+    ini = Initializer(key)
+    d = cfg.d_model
+    p: dict = {}
+    if kind in ("dense", "local", "global", "moe", "hybrid"):
+        p["ln1"] = jnp.zeros((d,), dtype)
+        p["attn"] = (attn.init_mla_params(ini, cfg, dtype) if cfg.mla_enabled
+                     else attn.init_gqa_params(ini, cfg, dtype))
+    if kind == "cross":
+        p["ln1"] = jnp.zeros((d,), dtype)
+        p["attn"] = attn.init_cross_params(ini, cfg, dtype)
+    if kind == "hybrid":
+        p["ssm"] = ssm_mod.init_mamba_params(ini, cfg, dtype)
+    if kind == "moe":
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["moe"] = init_moe_params(ini, cfg, dtype)
+    elif kind in ("dense", "local", "global", "cross", "hybrid"):
+        ff = (cfg.dense_layer_ff
+              if cfg.moe is not None and kind == "dense" else cfg.d_ff)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = init_mlp_params(ini, d, ff, dtype)
+    if kind == "mlstm":
+        p["ln1"] = jnp.zeros((d,), dtype)
+        p["mix"] = xl.init_mlstm_params(ini, cfg, dtype)
+    if kind == "slstm":
+        p["ln1"] = jnp.zeros((d,), dtype)
+        p["mix"] = xl.init_slstm_params(ini, cfg, dtype)
+    return p
+
+
+def _block_forward(kind, p, x, *, cfg, media, seq_len, want_cache):
+    """One block, full-sequence. Returns (x, aux, cache|None)."""
+    theta, window = _kind_attn_mode(cfg, kind)
+    cq, ck = _attn_chunks(cfg, seq_len)
+    aux = jnp.zeros((3,), jnp.float32)      # lb, z, dropped
+    cache = None
+    if kind in ("dense", "local", "global", "moe", "hybrid"):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cfg.mla_enabled:
+            a = attn.mla_forward(p["attn"], h, cfg=cfg, chunk_q=cq,
+                                 chunk_k=ck, return_kv=want_cache)
+        else:
+            a = attn.gqa_forward(p["attn"], h, cfg=cfg, theta=theta,
+                                 window=window, chunk_q=cq, chunk_k=ck,
+                                 return_kv=want_cache)
+        if want_cache:
+            a, kv = a
+            cache = _cache_from_kv(cfg, kind, kv, window, seq_len)
+        if kind == "hybrid":
+            s = ssm_mod.mamba_forward(p["ssm"], h, cfg=cfg,
+                                      return_state=want_cache)
+            if want_cache:
+                s, ssm_cache = s
+                cache = (cache, ssm_cache)
+            a = 0.5 * (a + s)
+        x = x + a
+    elif kind == "cross":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + attn.cross_forward(p["attn"], h, media, cfg=cfg, chunk_q=cq)
+        if want_cache:
+            k, v = attn._cross_kv(p["attn"], media, cfg)
+            cache = (k, v)
+    elif kind == "mlstm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + xl.mlstm_forward(p["mix"], h, cfg=cfg)
+    elif kind == "slstm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + xl.slstm_forward(p["mix"], h, cfg=cfg)
+
+    if kind == "moe":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, moe_aux = moe_forward(p["moe"], h, cfg)
+        x = x + y
+        aux = jnp.stack([moe_aux.load_balance_loss, moe_aux.router_z_loss,
+                         moe_aux.dropped_fraction])
+    elif "mlp" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_forward(p["mlp"], h)
+    return x, aux, cache
+
+
+def _cache_from_kv(cfg, kind, kv, window, seq_len):
+    """Build the ring-buffer cache from full prefill K/V."""
+    if cfg.mla_enabled:
+        c, k_rope = kv
+        pos = jnp.arange(seq_len, dtype=jnp.int32)
+        return attn.MLACache(c_kv=c, k_rope=k_rope, pos=pos)
+    k, v = kv
+    if window and seq_len >= window and seq_len % window == 0:
+        # last `window` positions land exactly on slots 0..W-1
+        k, v = k[:, -window:], v[:, -window:]
+        pos = jnp.arange(seq_len - window, seq_len, dtype=jnp.int32)
+    else:
+        pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    return attn.KVCache(k=k, v=v, pos=pos)
+
+
+# ============================================================== init params
+def init_params(cfg, key: jax.Array):
+    dtype = dtype_of(cfg)
+    ini = Initializer(key)
+    params: dict = {"final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.embed_inputs:
+        # d^-1/2 init keeps tied-head logits O(1); gemma-style activations
+        # rescale by sqrt(d) at the embed lookup.
+        params["embed"] = kernel_init(
+            ini, (cfg.vocab_size, cfg.d_model), dtype,
+            scale=cfg.d_model ** -0.5)
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        params["lm_head"] = kernel_init(
+            ini, (cfg.vocab_size, cfg.d_model), dtype,
+            scale=cfg.d_model ** -0.5)
+
+    kinds = cfg.layer_kinds
+    blocks: dict = {}
+    base = ini.next_key()
+    for kind in sorted(set(kinds)):
+        idxs = [i for i, k in enumerate(kinds) if k == kind]
+        keys = jnp.stack([jax.random.fold_in(base, i) for i in idxs])
+        blocks[kind] = jax.vmap(
+            lambda kk: _init_block(kind, kk, cfg, dtype))(keys)
+    params["blocks"] = blocks
+    return params
+
+
+def _tree_slice(tree, start: int, length: int):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start,
+                                                       start + length), tree)
+
+
+# ================================================================== forward
+def forward(params, cfg, tokens=None, embeds=None, media=None, *,
+            want_caches: bool = False, logits_mode: str = "all",
+            remat: bool = False):
+    """Full-sequence forward.
+
+    Returns (logits, aux_sums) and, if ``want_caches``, a per-kind dict of
+    stacked caches.  ``remat=True`` checkpoints each block (training: store
+    only per-layer inputs, recompute activations in the backward pass).
+    """
+    if embeds is None:
+        scale = cfg.d_model ** 0.5 if cfg.name.startswith("gemma") else 1.0
+        x = embed(params["embed"], tokens, scale)
+    else:
+        x = embeds.astype(dtype_of(cfg))
+    B, S, _ = x.shape
+    aux_sum = jnp.zeros((3,), jnp.float32)
+    caches: dict = {}
+
+    for kind, start, length in layer_runs(cfg):
+        stack = _tree_slice(params["blocks"][kind], start, length)
+
+        def block(lp, y, _kind=kind):
+            return _block_forward(_kind, lp, y, cfg=cfg, media=media,
+                                  seq_len=S, want_cache=want_caches)
+
+        if remat:
+            block = jax.checkpoint(block)
+        if length == 1:
+            lp = jax.tree.map(lambda a: a[0], stack)
+            x, aux, cache = block(lp, x)
+            aux_sum = aux_sum + aux
+            if want_caches and cache is not None:
+                cache = jax.tree.map(lambda a: a[None], cache)
+                caches.setdefault(kind, []).append(cache)
+        else:
+            def body(carry, lp, _block=block):
+                y, aux, cache = _block(lp, carry)
+                return y, (aux, cache)
+
+            x, (auxs, cache_stack) = jax.lax.scan(body, x, stack)
+            aux_sum = aux_sum + jnp.sum(auxs, axis=0)
+            if want_caches and cache_stack is not None:
+                caches.setdefault(kind, []).append(cache_stack)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    head = params.get("lm_head", params.get("embed"))
+    logits = unembed(x, head)
+
+    if want_caches:
+        merged = {
+            k: jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *v)
+            for k, v in caches.items() if v and v[0] is not None}
+        return logits, aux_sum, merged
+    return logits, aux_sum
+
+
+def lm_loss(params, cfg, tokens=None, embeds=None, labels=None, media=None,
+            *, aux_weight: float = 0.01, z_weight: float = 1e-4,
+            remat: bool = False):
+    logits, aux = forward(params, cfg, tokens=tokens, embeds=embeds,
+                          media=media, remat=remat)
+    loss = softmax_cross_entropy(logits, labels)
+    total = loss + aux_weight * aux[0] + z_weight * aux[1]
+    metrics = {"nll": loss, "load_balance": aux[0], "router_z": aux[1],
+               "dropped_frac": aux[2]}
+    return total, metrics
+
+
+# =================================================================== decode
+class DecodeCaches(NamedTuple):
+    by_kind: dict
+
+
+def init_decode_caches(cfg, batch: int, max_len: int, media=None,
+                       params=None) -> dict:
+    """Zeroed caches for decode-only lowering (shapes are what matter)."""
+    dtype = dtype_of(cfg)
+    out: dict = {}
+    kinds = cfg.layer_kinds
+    for kind in sorted(set(kinds)):
+        n = sum(1 for k in kinds if k == kind)
+        theta, window = _kind_attn_mode(cfg, kind)
+        if kind in ("dense", "local", "global", "moe"):
+            if cfg.mla_enabled:
+                c = attn.mla_init_cache(cfg, batch, max_len, dtype)
+            else:
+                c = attn.gqa_init_cache(cfg, batch, max_len, window, dtype)
+        elif kind == "hybrid":
+            c = (attn.gqa_init_cache(cfg, batch, max_len, window, dtype),
+                 ssm_mod.mamba_init_cache(cfg, batch, dtype))
+        elif kind == "cross":
+            hd = cfg.resolved_head_dim
+            c = (jnp.zeros((batch, cfg.vision_tokens, cfg.num_kv_heads, hd),
+                           dtype),
+                 jnp.zeros((batch, cfg.vision_tokens, cfg.num_kv_heads, hd),
+                           dtype))
+        elif kind == "mlstm":
+            c = xl.mlstm_init_cache(cfg, batch)
+        elif kind == "slstm":
+            c = xl.slstm_init_cache(cfg, batch)
+        out[kind] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(), c)
+    return out
+
+
+def _block_decode(kind, p, x1, cache, pos, *, cfg, flash_mesh=None):
+    theta, window = _kind_attn_mode(cfg, kind)
+    if kind in ("dense", "local", "global", "moe"):
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        if cfg.mla_enabled:
+            a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg=cfg)
+        else:
+            a, cache = attn.gqa_decode(p["attn"], h, cache, pos, cfg=cfg,
+                                       theta=theta, window=window,
+                                       flash_mesh=flash_mesh)
+        x1 = x1 + a
+    elif kind == "hybrid":
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        kv_cache, ssm_cache = cache
+        a, kv_cache = attn.gqa_decode(p["attn"], h, kv_cache, pos, cfg=cfg,
+                                      theta=theta, window=window,
+                                      flash_mesh=flash_mesh)
+        s, ssm_cache = ssm_mod.mamba_decode(p["ssm"], h, ssm_cache, cfg=cfg)
+        x1 = x1 + 0.5 * (a + s)
+        cache = (kv_cache, ssm_cache)
+    elif kind == "cross":
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        k, v = cache
+        x1 = x1 + attn.cross_decode(p["attn"], h, k, v, cfg=cfg)
+    elif kind == "mlstm":
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        y, cache = xl.mlstm_decode(p["mix"], h, cache, cfg=cfg)
+        x1 = x1 + y
+    elif kind == "slstm":
+        h = rms_norm(x1, p["ln1"], cfg.norm_eps)
+        y, cache = xl.slstm_decode(p["mix"], h, cache, cfg=cfg)
+        x1 = x1 + y
+
+    if kind == "moe":
+        h = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        y, _ = moe_forward(p["moe"], h, cfg)
+        x1 = x1 + y
+    elif "mlp" in p:
+        h = rms_norm(x1, p["ln2"], cfg.norm_eps)
+        x1 = x1 + mlp_forward(p["mlp"], h)
+    return x1, cache
+
+
+def decode_step(params, cfg, token, caches: dict, pos, *, flash_mesh=None):
+    """One serving step: token (B, 1) int32 (or (B,1,d) embeds), absolute
+    position ``pos`` (scalar int32).  Returns (logits (B,1,V), caches).
+
+    ``flash_mesh``: enable sequence-sharded flash decoding for GQA layers
+    (see attention._flash_decode)."""
+    if cfg.embed_inputs:
+        scale = cfg.d_model ** 0.5 if cfg.name.startswith("gemma") else 1.0
+        x = embed(params["embed"], token, scale)
+    else:
+        x = token.astype(dtype_of(cfg))
+    new_caches = dict(caches)
+
+    for kind, start, length in layer_runs(cfg):
+        stack = _tree_slice(params["blocks"][kind], start, length)
+        cache = _tree_slice(caches[kind], start, length)
+        if length == 1:
+            lp = jax.tree.map(lambda a: a[0], stack)
+            lc = jax.tree.map(lambda a: a[0], cache)
+            x, lc = _block_decode(kind, lp, x, lc, pos, cfg=cfg,
+                                  flash_mesh=flash_mesh)
+            lc = jax.tree.map(lambda a: a[None], lc)
+        else:
+            def body(carry, xs, _kind=kind):
+                lp, lc = xs
+                y, lc = _block_decode(_kind, lp, carry, lc, pos, cfg=cfg,
+                                      flash_mesh=flash_mesh)
+                return y, lc
+
+            x, lc = jax.lax.scan(body, x, (stack, cache))
+        new_caches[kind] = jax.tree.map(
+            lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                full, part.astype(full.dtype), start, axis=0),
+            new_caches[kind], lc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params.get("embed"))
+    return unembed(x, head), new_caches
+
+
+def prefill(params, cfg, tokens=None, embeds=None, media=None):
+    """Prefill: full forward + stacked caches + last-position logits."""
+    logits, aux, caches = forward(params, cfg, tokens=tokens, embeds=embeds,
+                                  media=media, want_caches=True,
+                                  logits_mode="last")
+    return logits, caches

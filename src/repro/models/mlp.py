@@ -1,0 +1,25 @@
+"""Gated (SwiGLU) feed-forward block — the dense FFN of every arch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, dense_init
+
+__all__ = ["init_mlp_params", "mlp_forward"]
+
+
+def init_mlp_params(init: Initializer, d_model: int, d_ff: int, dtype) -> dict:
+    return {
+        "w_gate": dense_init(init, d_model, d_ff, dtype),
+        "w_up": dense_init(init, d_model, d_ff, dtype),
+        "w_down": dense_init(init, d_ff, d_model, dtype),
+    }
+
+
+def mlp_forward(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return h @ p["w_down"]

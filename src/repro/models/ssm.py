@@ -1,0 +1,206 @@
+"""State-space sequence mixing — SSD (Mamba-2-style) chunked form.
+
+TPU adaptation note (DESIGN.md §2): naive selective-scan materializes
+(B, S, d_inner, N) state trajectories — hopeless in HBM.  The SSD chunked
+decomposition keeps everything matmul-shaped: within a chunk the output is
+an attention-like (c × c) product with a decay mask; across chunks a small
+(B, H, N, P) state is carried by `lax.scan`.  Per-head *scalar* decay
+(Mamba-2 convention) is what makes the (c × c) score factorization exact.
+
+The same kernel (``ssd_chunked``) powers the hymba Mamba branch and the
+xLSTM mLSTM block (decay = forget gate, dt = input gate, with the
+normalizer folded in as an extra value channel).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, dense_init, kernel_init, rms_norm
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "init_mamba_params",
+           "mamba_forward", "mamba_init_cache", "mamba_decode", "SSMCache"]
+
+
+# ============================================================== SSD core
+def ssd_chunked(x, dt, log_a, Bm, Cm, *, chunk: int,
+                initial_state=None, return_state: bool = False):
+    """Chunked scan of  h_t = a_t h_{t-1} + dt_t B_t x_tᵀ ;  y_t = C_t·h_t.
+
+    Shapes: x (B,S,H,P) values; dt (B,S,H) input scale; log_a (B,S,H)
+    per-head log decay (≤ 0); Bm/Cm (B,S,H,N) input/output projections.
+    Returns y (B,S,H,P) [+ final state (B,H,N,P)].
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    if S % c:
+        raise ValueError(f"S={S} not divisible by chunk={c}")
+    nc = S // c
+
+    def resh(t):  # (B,S,...) -> (nc, B, c, ...)
+        return jnp.moveaxis(t.reshape(Bsz, nc, c, *t.shape[2:]), 1, 0)
+
+    xc, dtc, lac = resh(x), resh(dt), resh(log_a)
+    Bc, Cc = resh(Bm), resh(Cm)
+
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, H, N, P), jnp.float32))
+
+    def body(h, inp):
+        xk, dtk, lak, bk, ck = inp               # (B,c,H,·)
+        cum = jnp.cumsum(lak, axis=1)            # (B,c,H) Σ log a up to t
+        total = cum[:, -1]                       # (B,H)
+        # --- intra-chunk: attention-like causal product ---------------
+        # L[t,s] = exp(cum_t - cum_s) * (C_t · B_s) * dt_s   for s <= t
+        scores = jnp.einsum("bthn,bshn->bhts", ck, bk,
+                            preferred_element_type=jnp.float32)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]      # (B,t,s,H)
+        decay = jnp.moveaxis(decay, -1, 1)                   # (B,H,t,s)
+        tpos = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+        spos = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+        causal = (spos <= tpos)[None, None]
+        L = jnp.where(causal, scores * jnp.exp(decay), 0.0)
+        xdt = xk.astype(jnp.float32) * dtk[..., None]        # (B,c,H,P)
+        y_intra = jnp.einsum("bhts,bshp->bthp", L, xdt,
+                             preferred_element_type=jnp.float32)
+        # --- inter-chunk: contribution of the carried state ------------
+        y_inter = jnp.einsum("bthn,bhnp->bthp", ck, h,
+                             preferred_element_type=jnp.float32)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # --- state update ----------------------------------------------
+        w = jnp.exp(total[:, None] - cum)                    # (B,c,H)
+        h_in = jnp.einsum("bshn,bshp->bhnp", bk * w[..., None], xdt,
+                          preferred_element_type=jnp.float32)
+        h_new = h * jnp.exp(total)[..., None, None] + h_in
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h_fin, yc = jax.lax.scan(body, h0, (xc, dtc, lac, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, H, P)
+    if return_state:
+        return y, h_fin
+    return y
+
+
+def ssd_decode_step(h, x1, dt1, log_a1, B1, C1):
+    """One-token state update. h (B,H,N,P); x1 (B,H,P); dt1/log_a1 (B,H);
+    B1/C1 (B,H,N).  Returns (y (B,H,P), h_new)."""
+    a = jnp.exp(log_a1)[..., None, None]
+    h_new = h * a + jnp.einsum(
+        "bhn,bhp->bhnp", B1 * dt1[..., None], x1.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    y = jnp.einsum("bhn,bhnp->bhp", C1, h_new,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x1.dtype), h_new
+
+
+# ============================================================ Mamba branch
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray     # (B, W-1, d_inner) rolling conv window
+    state: jnp.ndarray    # (B, H, N, P) f32 SSD state
+
+
+def init_mamba_params(init: Initializer, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    inner = s.expand * d
+    H = cfg.num_heads
+    N = s.state_dim
+    return {
+        "w_in": dense_init(init, d, 2 * inner, dtype),       # x path + gate
+        "conv": kernel_init(init, (s.conv_width, inner), dtype,
+                            scale=s.conv_width ** -0.5),
+        "w_bc": dense_init(init, inner, 2 * H * N, dtype),   # B, C
+        "w_dt": dense_init(init, inner, H, dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),               # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.zeros((inner,), dtype),
+        "w_out": dense_init(init, inner, d, dtype),
+    }
+
+
+def _causal_conv(x, w, prev=None):
+    """Depthwise causal conv along S. x (B,S,C), w (W,C); prev (B,W-1,C)."""
+    W = w.shape[0]
+    pad = prev if prev is not None else jnp.zeros(
+        (x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None] for i in range(W))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), \
+        xp[:, -(W - 1):] if W > 1 else pad
+
+
+def _mamba_core_inputs(p, u, cfg):
+    """Shared projections: u (B,S,inner) → (x, dt, log_a, B, C)."""
+    s = cfg.ssm
+    H, N = cfg.num_heads, s.state_dim
+    B_, S, inner = u.shape
+    P = inner // H
+    bc = u @ p["w_bc"]
+    Bm = bc[..., : H * N].reshape(B_, S, H, N).astype(jnp.float32)
+    Cm = bc[..., H * N:].reshape(B_, S, H, N).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    log_a = -jnp.exp(p["a_log"])[None, None] * dt             # (B,S,H) ≤ 0
+    xh = u.reshape(B_, S, H, P)
+    return xh, dt, log_a, Bm, Cm, P
+
+
+def mamba_forward(p, x, *, cfg, chunk: int = 0, return_state: bool = False):
+    """(B,S,d) → (B,S,d) Mamba mixing (train/prefill)."""
+    s = cfg.ssm
+    chunk = chunk or s.chunk
+    B_, S, d = x.shape
+    inner = s.expand * d
+    ug = x @ p["w_in"]
+    u, gate = ug[..., :inner], ug[..., inner:]
+    u, conv_tail = _causal_conv(u, p["conv"])
+    xh, dt, log_a, Bm, Cm, P = _mamba_core_inputs(p, u, cfg)
+    if return_state:
+        y, h_fin = ssd_chunked(xh, dt, log_a, Bm, Cm, chunk=chunk,
+                               return_state=True)
+    else:
+        y = ssd_chunked(xh, dt, log_a, Bm, Cm, chunk=chunk)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) \
+        * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, inner)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(y.dtype)
+    out = y @ p["w_out"]
+    if return_state:
+        return out, SSMCache(conv=conv_tail, state=h_fin)
+    return out
+
+
+def mamba_init_cache(cfg, batch: int, dtype) -> SSMCache:
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    H, N = cfg.num_heads, s.state_dim
+    P = inner // H
+    return SSMCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, inner), dtype),
+        state=jnp.zeros((batch, H, N, P), jnp.float32),
+    )
+
+
+def mamba_decode(p, x1, cache: SSMCache, *, cfg):
+    """One-token step. x1 (B,1,d) → (B,1,d)."""
+    s = cfg.ssm
+    B_, _, d = x1.shape
+    inner = s.expand * d
+    ug = x1 @ p["w_in"]
+    u, gate = ug[..., :inner], ug[..., inner:]
+    u, conv_new = _causal_conv(u, p["conv"], prev=cache.conv)
+    xh, dt, log_a, Bm, Cm, P = _mamba_core_inputs(p, u, cfg)
+    y1, h_new = ssd_decode_step(
+        cache.state, xh[:, 0], dt[:, 0], log_a[:, 0], Bm[:, 0], Cm[:, 0])
+    y1 = y1 + xh[:, 0].astype(jnp.float32).astype(y1.dtype) \
+        * p["d_skip"].astype(y1.dtype)[None, :, None]
+    y = y1.reshape(B_, 1, inner)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(y.dtype)
+    return y @ p["w_out"], SSMCache(conv=conv_new, state=h_new)

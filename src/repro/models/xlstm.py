@@ -1,0 +1,207 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is linear attention with exponential-style gating:
+    C_t = f_t C_{t-1} + i_t v_t k_tᵀ ,  n_t = f_t n_{t-1} + i_t k_t ,
+    h_t = (C_t q_t) / max(|n_t·q_t|, 1)
+which maps exactly onto the SSD chunked machinery (decay = log σ(f̃),
+dt = i gate): we append a ones-channel to v so the same scan produces both
+the value accumulator and the normalizer (DESIGN.md §2 hardware note).
+
+sLSTM is a true recurrence (scalar memories + block-diagonal recurrent
+gate weights) — `lax.scan` over time, as the paper itself notes it is not
+parallelizable.  Stabilized exponential gating follows the xLSTM paper's
+m-state trick.
+
+Per the assignment (d_ff = 0), the up/down projections live inside the
+blocks: mLSTM up-projects 2× (value path + output gate); sLSTM is followed
+by a 4/3 GeLU MLP, per the paper's block diagrams.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, dense_init, kernel_init, rms_norm
+from .ssm import ssd_chunked, ssd_decode_step
+
+__all__ = ["init_mlstm_params", "mlstm_forward", "mlstm_init_cache",
+           "mlstm_decode", "init_slstm_params", "slstm_forward",
+           "slstm_init_cache", "slstm_decode", "MLSTMCache", "SLSTMCache"]
+
+
+# ==================================================================== mLSTM
+class MLSTMCache(NamedTuple):
+    state: jnp.ndarray      # (B, H, dk, dv+1) f32 — matrix memory + norm col
+
+
+def init_mlstm_params(init: Initializer, cfg, dtype) -> dict:
+    d = cfg.d_model
+    inner = 2 * d                      # xLSTM pf=2 up-projection
+    H = cfg.num_heads
+    return {
+        "w_up": dense_init(init, d, 2 * inner, dtype),   # value path + gate
+        "w_q": dense_init(init, inner, inner, dtype),
+        "w_k": dense_init(init, inner, inner, dtype),
+        "w_v": dense_init(init, inner, inner, dtype),
+        "w_if": kernel_init(init, (inner, 2 * H), jnp.float32,
+                            scale=inner ** -0.5),        # i,f gate logits
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),      # open forget gates
+        "out_norm": jnp.zeros((inner,), dtype),
+        "w_down": dense_init(init, inner, d, dtype),
+    }
+
+
+def _mlstm_qkvg(p, u, cfg):
+    B, S, inner = u.shape
+    H = cfg.num_heads
+    P = inner // H
+    q = (u @ p["w_q"]).reshape(B, S, H, P)
+    k = (u @ p["w_k"]).reshape(B, S, H, P) * (P ** -0.5)
+    v = (u @ p["w_v"]).reshape(B, S, H, P)
+    gates = (u @ p["w_if"]).astype(jnp.float32)          # (B,S,2H)
+    i_raw, f_raw = gates[..., :H], gates[..., H:]
+    log_f = jax.nn.log_sigmoid(f_raw + p["f_bias"])      # ≤ 0 decay
+    i_gate = jnp.exp(jax.nn.log_sigmoid(i_raw))          # bounded input gate
+    return q, k, v, i_gate, log_f
+
+
+def _mlstm_read(y_aug):
+    """Split value/normalizer channels; h = Cq / max(|n·q|, 1)."""
+    y, n = y_aug[..., :-1], y_aug[..., -1:]
+    denom = jnp.maximum(jnp.abs(n.astype(jnp.float32)), 1.0)
+    return (y.astype(jnp.float32) / denom).astype(y.dtype)
+
+
+def mlstm_forward(p, x, *, cfg, chunk: int = 0):
+    chunk = chunk or (cfg.ssm.chunk if cfg.ssm else 256)
+    B, S, d = x.shape
+    inner = 2 * d
+    ug = x @ p["w_up"]
+    u, gate = ug[..., :inner], ug[..., inner:]
+    q, k, v, i_gate, log_f = _mlstm_qkvg(p, u, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    # SSD mapping: x=v_aug, dt=i, log_a=log_f, B=k, C=q
+    y_aug = ssd_chunked(v_aug, i_gate, log_f, k, q, chunk=chunk)
+    h = _mlstm_read(y_aug).reshape(B, S, inner)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
+    return h @ p["w_down"]
+
+
+def mlstm_init_cache(cfg, batch: int) -> MLSTMCache:
+    inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    P = inner // H
+    return MLSTMCache(state=jnp.zeros((batch, H, P, P + 1), jnp.float32))
+
+
+def mlstm_decode(p, x1, cache: MLSTMCache, *, cfg):
+    B, _, d = x1.shape
+    inner = 2 * d
+    ug = x1 @ p["w_up"]
+    u, gate = ug[..., :inner], ug[..., inner:]
+    q, k, v, i_gate, log_f = _mlstm_qkvg(p, u, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y_aug, state = ssd_decode_step(
+        cache.state, v_aug[:, 0], i_gate[:, 0], log_f[:, 0], k[:, 0],
+        q[:, 0])
+    h = _mlstm_read(y_aug).reshape(B, 1, inner)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
+    return h @ p["w_down"], MLSTMCache(state=state)
+
+
+# ==================================================================== sLSTM
+class SLSTMCache(NamedTuple):
+    h: jnp.ndarray   # (B, d)
+    c: jnp.ndarray   # (B, d) cell
+    n: jnp.ndarray   # (B, d) normalizer
+    m: jnp.ndarray   # (B, H) stabilizer
+
+
+def init_slstm_params(init: Initializer, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    return {
+        "w_gates": dense_init(init, d, 4 * d, dtype),        # i,f,z,o from x
+        "r_gates": kernel_init(init, (4, H, dh, dh), dtype,
+                               scale=dh ** -0.5),            # recurrent, blockdiag
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "out_norm": jnp.zeros((d,), dtype),
+        # post-block 4/3 GeLU MLP (paper's sLSTM block)
+        "w_ff1": dense_init(init, d, (4 * d) // 3, dtype),
+        "w_ff2": dense_init(init, (4 * d) // 3, d, dtype),
+    }
+
+
+def _slstm_step(p, cfg, carry, xg):
+    """One timestep. xg: (B, 4d) precomputed input contribution."""
+    h, c, n, m = carry
+    B, d = h.shape
+    H = cfg.num_heads
+    dh = d // H
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hh, p["r_gates"],
+                     preferred_element_type=jnp.float32)     # (B,4,H,dh)
+    rec = rec.reshape(B, 4 * d)
+    g = xg.astype(jnp.float32) + rec
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    gf = gf + p["f_bias"]
+    # stabilized exponential gating (per-head max state)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_prev = jnp.repeat(m, dh, axis=-1)                      # (B, d)
+    m_new = jnp.maximum(log_f + m_prev, gi)
+    i_st = jnp.exp(gi - m_new)
+    f_st = jnp.exp(log_f + m_prev - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f_st * c + i_st * z
+    n_new = f_st * n + i_st
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    m_head = m_new.reshape(B, H, dh).max(axis=-1)
+    return (h_new, c_new, n_new, m_head)
+
+
+def slstm_forward(p, x, *, cfg, unroll: int = 16):
+    B, S, d = x.shape
+    xg = x @ p["w_gates"]                                    # (B,S,4d)
+    carry = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+             jnp.zeros((B, d), jnp.float32),
+             jnp.full((B, cfg.num_heads), -1e30, jnp.float32))
+
+    def body(carry, xt):
+        carry = _slstm_step(p, cfg, carry, xt)
+        return carry, carry[0]
+
+    # unroll amortizes the recurrent-weight reads over multiple timesteps
+    # (EXPERIMENTS §Perf bonus cell: 16x fewer R-matrix HBM reads)
+    _, hs = jax.lax.scan(body, carry, jnp.moveaxis(xg, 1, 0),
+                         unroll=min(unroll, S))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)               # (B,S,d)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    ff = jax.nn.gelu((h @ p["w_ff1"]).astype(jnp.float32)).astype(x.dtype)
+    return h + ff @ p["w_ff2"]
+
+
+def slstm_init_cache(cfg, batch: int) -> SLSTMCache:
+    d = cfg.d_model
+    return SLSTMCache(
+        h=jnp.zeros((batch, d), jnp.float32),
+        c=jnp.zeros((batch, d), jnp.float32),
+        n=jnp.zeros((batch, d), jnp.float32),
+        m=jnp.full((batch, cfg.num_heads), -1e30, jnp.float32),
+    )
+
+
+def slstm_decode(p, x1, cache: SLSTMCache, *, cfg):
+    B, _, d = x1.shape
+    xg = (x1 @ p["w_gates"])[:, 0]
+    carry = _slstm_step(p, cfg, tuple(cache), xg)
+    h = carry[0][:, None].astype(x1.dtype)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    ff = jax.nn.gelu((h @ p["w_ff1"]).astype(jnp.float32)).astype(x1.dtype)
+    return h + ff @ p["w_ff2"], SLSTMCache(*carry)

@@ -1,0 +1,4 @@
+"""Optimizers and schedules (from scratch — no optax)."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from . import schedule  # noqa: F401

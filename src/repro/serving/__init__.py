@@ -1,0 +1,4 @@
+"""Serving layer: wave engine (continuous batching), sharded search, retrieval glue."""
+
+from .engine import WaveEngine  # noqa: F401
+from .retrieval import RetrievalService, KNNLMHead  # noqa: F401

@@ -1,0 +1,208 @@
+"""Continuous-batching serving engine for DQF search (DESIGN §2.3).
+
+TPU beam search is lane-batched: a lane that terminates early (decision
+tree) stops doing useful work while the `while_loop` waits for its batch
+siblings.  The wave engine converts per-lane termination into throughput:
+
+* the engine holds a fixed wave of ``wave_size`` lanes;
+* each tick advances the whole wave ``tick_hops`` expansions (one jitted
+  call);
+* lanes that finished (pool exhausted / tree verdict / hop cap) retire,
+  their slots are refilled from the request queue *without* disturbing
+  live lanes (per-lane state reset);
+* stragglers: a lane that exceeds ``max_hops`` is force-retired with its
+  current best-k (bounded tail latency), counted in ``stats.straggled``.
+
+This is the ANN analogue of token-level continuous batching in LLM serving.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import beam_search as bs
+from repro.core.decision_tree import predict_jax
+from repro.core.dynamic_search import _seed_full_state, hot_phase
+from repro.core.features import feature_matrix, hot_features
+from repro.core.types import DQFConfig, HotFeatures
+
+__all__ = ["WaveEngine", "EngineStats"]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    completed: int = 0
+    straggled: int = 0
+    ticks: int = 0
+    total_hops: int = 0
+    latencies_ms: list = dataclasses.field(default_factory=list)
+
+    def qps(self, wall_s: float) -> float:
+        return self.completed / wall_s if wall_s > 0 else 0.0
+
+    def p99_ms(self) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(self.latencies_ms, 99))
+
+
+class WaveEngine:
+    """Continuous-batching engine over a built DQF instance."""
+
+    def __init__(self, dqf, *, wave_size: int = 64, tick_hops: int = 8):
+        self.dqf = dqf
+        self.cfg: DQFConfig = dqf.cfg
+        self.wave = wave_size
+        self.tick_hops = tick_hops
+        self.queue: collections.deque = collections.deque()
+        self.stats = EngineStats()
+        d = dqf.x.shape[1]
+        self._d = d
+        self._tick_fn = self._build_tick()
+        self._lane_meta = [None] * wave_size   # (request_id, t_enqueue)
+        self._results: dict = {}
+        self._state = None
+
+    # ------------------------------------------------------------ jitted ops
+    def _build_tick(self):
+        cfg = self.cfg
+        x_pad = self.dqf._dev["x_pad"]
+        adj_pad = self.dqf._dev["adj_pad"]
+        tree = self.dqf.tree.arrays if self.dqf.tree is not None else None
+
+        def tick(state: bs.BeamState, queries, hot_first, hot_ratio,
+                 evals_done):
+            def one(carry, _):
+                s, ev = carry
+                s = bs.expand_step(x_pad, adj_pad, queries, s)
+                s = s._replace(
+                    active=s.active & (s.stats.hops < cfg.max_hops))
+                if tree is not None:
+                    due = (s.stats.dist_count // cfg.eval_gap) > ev
+                    due = due & s.active
+                    feats = feature_matrix(
+                        HotFeatures(hot_first, hot_ratio), s.pool, s.stats,
+                        cfg.k)
+                    stop = (predict_jax(tree, feats, cfg.tree_depth)
+                            < 0.5) & due
+                    ev = jnp.where(due, s.stats.dist_count // cfg.eval_gap,
+                                   ev)
+                    s = s._replace(
+                        active=s.active & ~stop,
+                        stats=s.stats._replace(
+                            terminated_early=s.stats.terminated_early
+                            | (stop & s.active)))
+                return (s, ev), None
+
+            (state, evals_done), _ = jax.lax.scan(
+                one, (state, evals_done), None, length=self.tick_hops)
+            return state, evals_done
+
+        return jax.jit(tick)
+
+    # ---------------------------------------------------------------- public
+    def submit(self, queries: np.ndarray) -> list:
+        ids = []
+        for q in np.asarray(queries, np.float32):
+            rid = len(self._results) + len(self.queue)
+            self.queue.append((rid, q, time.perf_counter()))
+            ids.append(rid)
+        return ids
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> dict:
+        t0 = time.perf_counter()
+        self._init_wave()
+        while (self.queue or self._any_live()) \
+                and self.stats.ticks < max_ticks:
+            self._tick()
+        wall = time.perf_counter() - t0
+        return {"results": self._results, "wall_s": wall,
+                "qps": self.stats.qps(wall), "p99_ms": self.stats.p99_ms(),
+                "straggled": self.stats.straggled}
+
+    # -------------------------------------------------------------- internals
+    def _any_live(self) -> bool:
+        return any(m is not None for m in self._lane_meta)
+
+    def _init_wave(self):
+        W, d = self.wave, self._d
+        n = self.dqf.x.shape[0]
+        dummy_q = jnp.zeros((W, d), jnp.float32)
+        state = bs.init_state(self.dqf._dev["x_pad"], dummy_q,
+                              self.dqf._dev["entries"], self.cfg.full_pool)
+        state = state._replace(active=jnp.zeros((W,), bool))
+        self._queries = np.zeros((W, d), np.float32)
+        self._hot_first = np.zeros((W,), np.float32)
+        self._hot_ratio = np.zeros((W,), np.float32)
+        self._evals = np.zeros((W,), np.int32)
+        self._state = state
+        self._refill()
+
+    def _refill(self):
+        """Seed free lanes from the queue (hot phase runs per refill batch)."""
+        free = [i for i, m in enumerate(self._lane_meta) if m is None]
+        take = min(len(free), len(self.queue))
+        if take == 0:
+            return
+        lanes = free[:take]
+        reqs = [self.queue.popleft() for _ in range(take)]
+        q = jnp.asarray(np.stack([r[1] for r in reqs]))
+        hot_pool, _ = hot_phase(
+            self.dqf._dev["x_hot_pad"], self.dqf._dev["adj_hot_pad"],
+            self.dqf._dev["hot_entries"], q,
+            pool_size=self.cfg.hot_pool, max_hops=self.cfg.max_hops,
+            mode=self.cfg.hot_mode)
+        hf = hot_features(hot_pool, self.cfg.k)
+        seeded = _seed_full_state(hot_pool, self.dqf._dev["hot_ids_pad"],
+                                  self.dqf.x.shape[0], self.cfg.full_pool)
+        # splice the new lanes into the wave state (host-side: simple, and
+        # refills are rare relative to ticks)
+        st = jax.tree.map(lambda a: np.array(a), self._state)  # writable
+        new = jax.tree.map(np.asarray, seeded)
+        for j, lane in enumerate(lanes):
+            for field in ("ids", "dists", "expanded"):
+                getattr(st.pool, field)[lane] = getattr(new.pool, field)[j]
+            st.seen[lane] = new.seen[j]
+            for f in ("dist_count", "update_count", "hops",
+                      "terminated_early"):
+                getattr(st.stats, f)[lane] = getattr(new.stats, f)[j]
+            st.active[lane] = True
+            self._queries[lane] = reqs[j][1]
+            self._hot_first[lane] = float(hf.first[j])
+            self._hot_ratio[lane] = float(hf.first_div_kth[j])
+            self._evals[lane] = 0
+            self._lane_meta[lane] = (reqs[j][0], reqs[j][2])
+        self._state = jax.tree.map(jnp.asarray, st)
+
+    def _tick(self):
+        state, evals = self._tick_fn(
+            self._state, jnp.asarray(self._queries),
+            jnp.asarray(self._hot_first), jnp.asarray(self._hot_ratio),
+            jnp.asarray(self._evals))
+        self._state = state
+        self._evals = np.array(evals)   # writable copy (refill mutates)
+        self.stats.ticks += 1
+        active = np.asarray(state.active)
+        now = time.perf_counter()
+        for lane, meta in enumerate(self._lane_meta):
+            if meta is None or active[lane]:
+                continue
+            rid, t_in = meta
+            ids = np.asarray(state.pool.ids[lane][: self.cfg.k])
+            dists = np.asarray(state.pool.dists[lane][: self.cfg.k])
+            hops = int(np.asarray(state.stats.hops[lane]))
+            self._results[rid] = {"ids": ids, "dists": dists, "hops": hops}
+            self.stats.completed += 1
+            self.stats.total_hops += hops
+            if hops >= self.cfg.max_hops:
+                self.stats.straggled += 1
+            self.stats.latencies_ms.append((now - t_in) * 1e3)
+            self._lane_meta[lane] = None
+        self._refill()

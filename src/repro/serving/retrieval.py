@@ -1,0 +1,75 @@
+"""DQF as the retrieval service of an LM serving stack (kNN-LM / RAG glue).
+
+The LM side produces query embeddings (e.g. the pre-softmax hidden state of
+``decode_step``); DQF serves neighbors from a datastore of (embedding →
+token / document id) pairs.  This is the integration the paper's technique
+slots into for the assigned LM architectures (DESIGN.md §4): retrieval-layer
+acceleration is backbone-agnostic.
+
+`KNNLMHead` implements the classic kNN-LM interpolation:
+    p(y) = λ · softmax_knn(y) + (1 − λ) · p_LM(y)
+with softmax_knn built from retrieved-neighbor distances.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import DQF, DQFConfig
+
+__all__ = ["RetrievalService", "KNNLMHead"]
+
+
+@dataclasses.dataclass
+class RetrievalService:
+    """Owns a DQF over an embedding datastore + payload table."""
+
+    dqf: DQF
+    payload: np.ndarray          # (n,) int32 — e.g. next-token ids
+
+    @classmethod
+    def build(cls, embeddings: np.ndarray, payload: np.ndarray,
+              cfg: Optional[DQFConfig] = None,
+              history: Optional[np.ndarray] = None) -> "RetrievalService":
+        dqf = DQF(cfg or DQFConfig()).build(
+            np.ascontiguousarray(embeddings, np.float32))
+        if history is not None:
+            dqf.warm(history)
+        else:
+            # neutral warm-up: uniform counts → hot set = arbitrary head
+            dqf.counter.record(np.arange(min(dqf.hot_size * 4,
+                                             embeddings.shape[0])))
+            dqf.rebuild_hot()
+        return cls(dqf=dqf, payload=np.asarray(payload, np.int32))
+
+    def lookup(self, query_embeddings: np.ndarray):
+        res = self.dqf.search(np.asarray(query_embeddings, np.float32))
+        ids = np.asarray(res.ids)
+        safe = np.minimum(ids, self.payload.shape[0] - 1)
+        return self.payload[safe], np.asarray(res.dists), ids
+
+
+@dataclasses.dataclass
+class KNNLMHead:
+    service: RetrievalService
+    vocab_size: int
+    lam: float = 0.25
+    temperature: float = 10.0
+
+    def __call__(self, lm_logits: np.ndarray, query_embeddings: np.ndarray
+                 ) -> np.ndarray:
+        """Interpolate LM logits with retrieved-neighbor token mass."""
+        tokens, dists, _ = self.service.lookup(query_embeddings)  # (B, k)
+        w = np.exp(-np.asarray(dists) / self.temperature)
+        w = w / np.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+        p_knn = np.zeros((tokens.shape[0], self.vocab_size), np.float32)
+        for b in range(tokens.shape[0]):
+            np.add.at(p_knn[b], tokens[b], w[b])
+        p_lm = np.asarray(jnp.asarray(lm_logits))
+        p_lm = np.exp(p_lm - p_lm.max(-1, keepdims=True))
+        p_lm = p_lm / p_lm.sum(-1, keepdims=True)
+        return self.lam * p_knn + (1.0 - self.lam) * p_lm

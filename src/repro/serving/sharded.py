@@ -1,0 +1,144 @@
+"""Distributed DQF serving: shard-per-device subgraph search (DESIGN §2.2).
+
+The database is row-partitioned into one segment per ``model``-axis device;
+each segment gets its own NSSG built offline.  At query time every device
+runs the batched beam search over its local subgraph for its ``data``-axis
+slice of the query batch, then the per-segment top-k are all-gathered over
+``model`` and merged — one collective per *batch*, not per hop.
+
+The hot index stays replicated (it is ~1 MB — paper Table 6) so the hot
+phase never leaves the chip.
+
+Fault tolerance: ``merge_with_dropout`` renormalizes the merge over the
+segments that responded — a lost host degrades recall by roughly its data
+share instead of failing the query (measured in tests/test_distributed.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import beam_search as bs
+from repro.core.ssg import SSGParams, build_ssg
+from repro.core.types import DQFConfig
+
+__all__ = ["ShardedIndex", "build_sharded_index", "sharded_search",
+           "merge_with_dropout"]
+
+
+@dataclasses.dataclass
+class ShardedIndex:
+    """Host-side bundle of per-segment artifacts, stacked for shard_map."""
+
+    x_pad: np.ndarray         # (S, n_seg+1, d)
+    adj_pad: np.ndarray       # (S, n_seg+1, R)
+    entries: np.ndarray       # (S, E)
+    offsets: np.ndarray       # (S,) global row offset of each segment
+    n_total: int
+
+    @property
+    def num_shards(self) -> int:
+        return self.x_pad.shape[0]
+
+
+def build_sharded_index(x: np.ndarray, num_shards: int,
+                        params: SSGParams | None = None,
+                        n_entry: int = 8, seed: int = 0) -> ShardedIndex:
+    """Round-robin rows into segments; independent NSSG per segment."""
+    params = params or SSGParams()
+    n, d = x.shape
+    if n % num_shards:
+        raise ValueError(f"n={n} must divide into {num_shards} shards")
+    n_seg = n // num_shards
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)                    # density-balance segments
+    xs, adjs, ents, offs = [], [], [], []
+    for s in range(num_shards):
+        rows = np.sort(perm[s * n_seg: (s + 1) * n_seg])
+        seg = np.ascontiguousarray(x[rows], np.float32)
+        idx = build_ssg(seg, params, n_entry=n_entry)
+        xs.append(np.concatenate(
+            [seg, np.full((1, d), 1e9, np.float32)], axis=0))
+        adjs.append(np.concatenate(
+            [idx.adj, np.full((1, idx.adj.shape[1]), n_seg, np.int32)]))
+        e = idx.entries
+        if e.size < n_entry:                    # pad entries to equal width
+            e = np.concatenate([e, np.full(n_entry - e.size, e[0], e.dtype)])
+        ents.append(e[:n_entry])
+        offs.append(rows)                        # (n_seg,) global ids
+    return ShardedIndex(
+        x_pad=np.stack(xs), adj_pad=np.stack(adjs),
+        entries=np.stack(ents).astype(np.int32),
+        offsets=np.stack(offs).astype(np.int32), n_total=n)
+
+
+def _segment_search(x_pad, adj_pad, entries, rows, queries, *, pool_size,
+                    k, max_hops):
+    """Search one segment (runs per device under shard_map)."""
+    res = bs.beam_search(x_pad[0], adj_pad[0], entries[0], queries,
+                         pool_size=pool_size, k=k, max_hops=max_hops)
+    n_seg = rows.shape[1]
+    local = jnp.minimum(res.ids, n_seg - 1)
+    gids = jnp.where(res.ids >= n_seg, -1, rows[0][local])   # -1 = invalid
+    dists = jnp.where(res.ids >= n_seg, jnp.inf, res.dists)
+    return gids.astype(jnp.int32), dists
+
+
+def sharded_search(index: ShardedIndex, queries: np.ndarray, mesh: Mesh, *,
+                   cfg: DQFConfig, model_axis: str = "model",
+                   data_axis: str = "data"):
+    """Distributed batched search: (B, k) global ids + dists.
+
+    queries shard over ``data_axis``; segments live on ``model_axis``.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    S = index.num_shards
+    if mesh.shape[model_axis] != S:
+        raise ValueError(f"{S} shards need model axis of size {S}")
+    k, pool, hops = cfg.k, cfg.full_pool, cfg.max_hops
+
+    def per_shard(x_pad, adj_pad, entries, rows, q):
+        gids, dists = _segment_search(
+            x_pad, adj_pad, entries, rows, q,
+            pool_size=pool, k=k, max_hops=hops)
+        # merge across segments: gather every segment's top-k, re-top-k
+        all_ids = jax.lax.all_gather(gids, model_axis, axis=1, tiled=True)
+        all_d = jax.lax.all_gather(dists, model_axis, axis=1, tiled=True)
+        neg, idx = jax.lax.top_k(-all_d, k)
+        return jnp.take_along_axis(all_ids, idx, axis=1), -neg
+
+    fn = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(model_axis), P(model_axis), P(model_axis),
+                  P(model_axis), P(data_axis)),
+        out_specs=(P(data_axis), P(data_axis)),
+        check_rep=False)   # fresh while-loop carries are unvarying by design
+    ids, dists = jax.jit(fn)(
+        jnp.asarray(index.x_pad), jnp.asarray(index.adj_pad),
+        jnp.asarray(index.entries), jnp.asarray(index.offsets),
+        jnp.asarray(queries, jnp.float32))
+    return np.asarray(ids), np.asarray(dists)
+
+
+def merge_with_dropout(per_shard_ids: list, per_shard_dists: list,
+                       alive: list, k: int):
+    """Host-side degraded merge: skip shards flagged dead (stragglers that
+    timed out / failed hosts).  Returns (ids, dists, coverage)."""
+    ids = [i for i, a in zip(per_shard_ids, alive) if a]
+    ds = [d for d, a in zip(per_shard_dists, alive) if a]
+    if not ids:
+        raise RuntimeError("all shards lost")
+    cat_i = np.concatenate(ids, axis=1)
+    cat_d = np.concatenate(ds, axis=1)
+    order = np.argsort(cat_d, axis=1)[:, :k]
+    return (np.take_along_axis(cat_i, order, 1),
+            np.take_along_axis(cat_d, order, 1),
+            sum(alive) / len(alive))

@@ -1,0 +1,3 @@
+"""Training loop substrate."""
+
+from .train_step import TrainConfig, TrainState, make_train_step, train_state_init  # noqa: F401

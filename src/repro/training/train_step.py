@@ -1,0 +1,126 @@
+"""Train-step factory: grad accumulation, clipping, AdamW, compression.
+
+* **Microbatching** is a `lax.scan` over microbatches — besides bounding
+  live logits memory (262k-vocab models cannot materialize full-batch
+  logits), it exposes one gradient psum per microbatch that XLA's
+  latency-hiding scheduler overlaps with the next microbatch's compute.
+* **Gradient compression** (optional, beyond-paper distributed trick):
+  int8 per-leaf quantization with error feedback.  On real hardware this
+  rides the data-axis reduce-scatter at 1/4 the bytes; the numerics
+  (quantize → accumulate error) are exactly what we validate here.
+* ZeRO-1: optimizer moments are placed with `zero1_specs` shardings by the
+  launcher; this module is sharding-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update)
+from repro.optim import schedule as sched
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "train_state_init"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1            # grad accumulation steps
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "warmup_cosine"
+    adamw: AdamWConfig = AdamWConfig()
+    compress_grads: bool = False     # int8 + error feedback
+    aux_weight: float = 0.01
+    z_weight: float = 1e-4
+    remat: bool = True               # checkpoint each block
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    err: Optional[dict]              # error-feedback residual (compression)
+
+
+def train_state_init(params, tcfg: TrainConfig) -> TrainState:
+    err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+           if tcfg.compress_grads else None)
+    return TrainState(params=params, opt=adamw_init(params), err=err)
+
+
+def _quantize_int8(g: jnp.ndarray):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _compress(grads, err):
+    """int8 quantization with error feedback; returns (deq grads, new err)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(g)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g - deq
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def make_train_step(cfg, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch`` entries carry a leading microbatch axis when
+    ``tcfg.microbatches > 1``: tokens (M, B/M, S) etc.
+    """
+    schedule_fn = getattr(sched, tcfg.schedule)
+
+    def loss_fn(params, mb):
+        return lm.lm_loss(
+            params, cfg, tokens=mb.get("tokens"), embeds=mb.get("embeds"),
+            labels=mb["labels"], media=mb.get("media"),
+            aux_weight=tcfg.aux_weight, z_weight=tcfg.z_weight,
+            remat=tcfg.remat)
+
+    def train_step(state: TrainState, batch: dict):
+        if tcfg.microbatches > 1:
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), batch)
+            inv = 1.0 / tcfg.microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+
+        err = state.err
+        if tcfg.compress_grads:
+            grads, err = _compress(grads, err)
+
+        lr = schedule_fn(state.opt.step, peak_lr=tcfg.peak_lr,
+                         warmup_steps=tcfg.warmup_steps,
+                         total_steps=tcfg.total_steps)
+        params, opt, opt_metrics = adamw_update(
+            tcfg.adamw, state.params, grads, state.opt, lr)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return TrainState(params, opt, err), metrics
+
+    return train_step

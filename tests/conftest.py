@@ -1,0 +1,38 @@
+"""Shared fixtures: small clustered datasets sized for 1-core CPU CI.
+
+NOTE: no XLA_FLAGS here on purpose — unit tests must see the real single
+CPU device; only launch/dryrun.py fakes a 512-device platform.
+"""
+
+import numpy as np
+import pytest
+
+
+def make_clustered(n=1500, d=24, clusters=24, seed=0, spread=1.5):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((clusters, d)).astype(np.float32) * spread
+    asg = rng.integers(0, clusters, n)
+    x = centers[asg] + rng.standard_normal((n, d)).astype(np.float32)
+    return np.ascontiguousarray(x, np.float32)
+
+
+@pytest.fixture(scope="session")
+def small_data():
+    return make_clustered()
+
+
+@pytest.fixture(scope="session")
+def built_dqf(small_data):
+    """A DQF with full+hot index and a fitted tree, shared across tests."""
+    from repro.core import DQF, DQFConfig, ZipfWorkload
+
+    cfg = DQFConfig(knn_k=12, out_degree=12, index_ratio=0.03, k=10,
+                    hot_pool=16, full_pool=32, eval_gap=40, max_hops=120,
+                    n_query_trigger=100_000)
+    dqf = DQF(cfg).build(small_data)
+    wl = ZipfWorkload(small_data, beta=1.2, sigma=0.05, seed=1)
+    _, targets = wl.sample(4000, with_targets=True)
+    dqf.counter.record(targets)
+    dqf.rebuild_hot()
+    dqf.fit_tree(wl.sample(400))
+    return dqf, wl

@@ -1,0 +1,101 @@
+"""Batched beam search (Algorithm 3) behaviour tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.core.beam_search as bs
+from repro.core.recall import ground_truth, recall_at_k
+from repro.core.ssg import SSGParams, build_ssg
+from tests.conftest import make_clustered
+
+
+@pytest.fixture(scope="module")
+def graph():
+    x = make_clustered(n=1000, d=16, seed=10)
+    idx = build_ssg(x, SSGParams(knn_k=16, out_degree=16), n_entry=8)
+    return x, idx
+
+
+def run(x, idx, queries, pool=48, k=10, max_hops=200):
+    return bs.beam_search(
+        bs.pad_dataset(jnp.asarray(x)), bs.pad_adjacency(jnp.asarray(idx.adj)),
+        jnp.asarray(idx.entries), jnp.asarray(queries, jnp.float32),
+        pool_size=pool, k=k, max_hops=max_hops)
+
+
+def test_recall_beats_random(graph):
+    x, idx = graph
+    rng = np.random.default_rng(0)
+    q = x[rng.choice(1000, 64, replace=False)] + \
+        0.05 * rng.standard_normal((64, 16)).astype(np.float32)
+    res = run(x, idx, q)
+    gt = ground_truth(x, q, 10)
+    assert recall_at_k(np.asarray(res.ids), gt) > 0.85
+
+
+def test_self_query_finds_self(graph):
+    """Querying a data point exactly must return it as the nearest."""
+    x, idx = graph
+    q = x[:32]
+    res = run(x, idx, q, pool=64)
+    ids = np.asarray(res.ids)
+    assert (ids[:, 0] == np.arange(32)).mean() > 0.95
+    assert np.allclose(np.asarray(res.dists)[:, 0].min(), 0.0, atol=1e-4)
+
+
+def test_results_sorted_and_valid(graph):
+    x, idx = graph
+    rng = np.random.default_rng(1)
+    q = rng.standard_normal((16, 16)).astype(np.float32)
+    res = run(x, idx, q)
+    d = np.asarray(res.dists)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+    assert (np.asarray(res.ids) < 1000).all()
+
+
+def test_stats_counters_positive(graph):
+    x, idx = graph
+    q = x[:8]
+    res = run(x, idx, q)
+    st = res.stats
+    assert (np.asarray(st.dist_count) > 0).all()
+    assert (np.asarray(st.hops) > 0).all()
+    assert (np.asarray(st.hops) <= 200).all()
+    assert not np.asarray(st.terminated_early).any()  # no tree in Alg 3
+
+
+def test_deterministic(graph):
+    x, idx = graph
+    q = x[5:9]
+    r1 = run(x, idx, q)
+    r2 = run(x, idx, q)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+
+
+def test_max_hops_caps_work(graph):
+    x, idx = graph
+    q = x[:8]
+    res = run(x, idx, q, max_hops=3)
+    assert (np.asarray(res.stats.hops) <= 3).all()
+
+
+def test_larger_pool_no_worse_recall(graph):
+    """Property from the paper's QPS/recall tradeoff: pool ↑ ⇒ recall ↑."""
+    x, idx = graph
+    rng = np.random.default_rng(2)
+    q = x[rng.choice(1000, 48, replace=False)] + \
+        0.1 * rng.standard_normal((48, 16)).astype(np.float32)
+    gt = ground_truth(x, q, 10)
+    r_small = recall_at_k(np.asarray(run(x, idx, q, pool=16).ids), gt)
+    r_big = recall_at_k(np.asarray(run(x, idx, q, pool=96).ids), gt)
+    assert r_big >= r_small - 0.02
+
+
+def test_pool_seen_consistency(graph):
+    """No id appears twice in a result row (the seen-bitmap contract)."""
+    x, idx = graph
+    q = x[:24]
+    ids = np.asarray(run(x, idx, q).ids)
+    for row in ids:
+        assert len(set(row.tolist())) == row.size

@@ -1,0 +1,175 @@
+"""Distribution: sharding rules, sharded DQF search, SPMD train step.
+
+Multi-device cases run in a subprocess with XLA_FLAGS-faked devices (the
+parent test process must keep its single real CPU device — see conftest).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.models import lm
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str, devices: int = 4) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"subprocess failed:\n{out.stderr[-3000:]}")
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def test_param_specs_cover_tree():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    specs = shd.param_specs(params, mesh)
+    assert jax.tree.structure(specs) == jax.tree.structure(params)
+
+
+def test_param_specs_divisibility():
+    """No spec may shard a dim that doesn't divide by the axis size."""
+    for arch in ("qwen3-0.6b", "deepseek-moe-16b", "hymba-1.5b",
+                 "xlstm-1.3b"):
+        cfg = get_config(arch)
+        params = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        # fake a 16-way model axis by checking against 16 explicitly
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        specs = shd.param_specs(params, FakeMesh())
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        specs_flat = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        for (path, leaf), spec in zip(flat, specs_flat):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax == "model":
+                    assert dim % 16 == 0, \
+                        f"{arch} {jax.tree_util.keystr(path)} {leaf.shape} {spec}"
+
+
+def test_zero1_adds_data_axis():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    z = shd.zero1_specs(params, FakeMesh())
+    found = any("data" in str(s) for s in jax.tree.leaves(
+        z, is_leaf=lambda x: isinstance(x, P)))
+    assert found
+
+
+def test_sharded_dqf_search_recall():
+    """4-segment distributed search ≳ single-graph recall (subprocess)."""
+    code = textwrap.dedent("""
+        import json, numpy as np
+        import jax
+        from repro.core import DQFConfig, ground_truth, recall_at_k
+        from repro.core.ssg import SSGParams
+        from repro.serving.sharded import build_sharded_index, sharded_search
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((2000, 16)).astype(np.float32)
+        q = x[rng.choice(2000, 64, replace=False)] + \\
+            0.05 * rng.standard_normal((64, 16)).astype(np.float32)
+        idx = build_sharded_index(x, 4, SSGParams(knn_k=12, out_degree=12))
+        mesh = jax.make_mesh((1, 4), ("data", "model"))
+        cfg = DQFConfig(k=10, full_pool=32, max_hops=150)
+        ids, dists = sharded_search(idx, q, mesh, cfg=cfg)
+        gt = ground_truth(x, q, 10)
+        print(json.dumps({"recall": recall_at_k(ids, gt),
+                          "shape": list(ids.shape)}))
+    """)
+    out = run_subprocess(code, devices=4)
+    assert out["shape"] == [64, 10]
+    assert out["recall"] > 0.9
+
+
+def test_spmd_train_step_runs():
+    """Real sharded train step on a 2x2 fake mesh, loss decreases."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        from repro.configs import get_config
+        from repro.distributed import sharding as shd
+        from repro.models import lm
+        from repro.training.train_step import (TrainConfig, make_train_step,
+                                               train_state_init)
+        cfg = get_config("qwen3-0.6b").reduced()
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        params = jax.device_put(params, shd.param_shardings(params, mesh))
+        tcfg = TrainConfig(microbatches=1, peak_lr=5e-3, warmup_steps=1,
+                           remat=False)
+        state = train_state_init(params, tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        k = jax.random.PRNGKey(1)
+        bs = NamedSharding(mesh, shd.batch_spec(mesh))
+        batch = {
+          "tokens": jax.device_put(
+              jax.random.randint(k, (8, 32), 0, cfg.vocab_size), bs),
+          "labels": jax.device_put(
+              jax.random.randint(k, (8, 32), 0, cfg.vocab_size), bs),
+        }
+        losses = []
+        for _ in range(8):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        print(json.dumps({"first": losses[0], "last": losses[-1]}))
+    """)
+    out = run_subprocess(code, devices=4)
+    assert out["last"] < out["first"] - 0.2
+
+
+def test_elastic_restore_reshards():
+    """Checkpoint written on a 4-device mesh restores onto 2 devices."""
+    code = textwrap.dedent("""
+        import json, tempfile
+        import numpy as np
+        import jax
+        from repro.checkpoint.checkpointer import Checkpointer
+        from repro.configs import get_config
+        from repro.distributed import sharding as shd
+        from repro.models import lm
+        cfg = get_config("qwen3-0.6b").reduced()
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+        p4 = jax.device_put(params, shd.param_shardings(params, mesh4))
+        d = tempfile.mkdtemp()
+        ck = Checkpointer(d)
+        ck.save(1, p4, block=True)
+        # "surviving" smaller mesh
+        mesh2 = jax.make_mesh((1, 2), ("data", "model"))
+        restored, meta = ck.restore(
+            jax.eval_shape(lambda: p4),
+            shardings=shd.param_shardings(params, mesh2))
+        ok = jax.tree.all(jax.tree.map(
+            lambda a, b: bool(jnp.all(a == b)) if False else
+            bool(np.array_equal(np.asarray(a), np.asarray(b))),
+            p4, restored))
+        import jax.numpy as jnp
+        print(json.dumps({"ok": bool(ok), "step": meta["step"]}))
+    """)
+    out = run_subprocess(code, devices=4)
+    assert out["ok"] and out["step"] == 1

@@ -1,0 +1,91 @@
+"""Fault-tolerance contracts: crash-safe checkpoints, straggler bounds,
+degraded serving."""
+
+import json
+import os
+import shutil
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.core import DQFConfig
+
+
+def _tiny_state():
+    return {"w": jnp.arange(8, dtype=jnp.float32),
+            "b": jnp.ones((3,), jnp.float32)}
+
+
+def test_crash_mid_write_never_corrupts_latest(tmp_path):
+    """A tmp dir left behind by a crash must not shadow the last good step."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tiny_state(), block=True)
+    # simulate a crash mid-write at step 2: stale tmp dir with partial data
+    os.makedirs(tmp_path / "tmp.2")
+    (tmp_path / "tmp.2" / "arrays.npz").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 1
+    restored, meta = ck.restore(jax.eval_shape(_tiny_state))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8))
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tiny_state(), block=True)
+    bad = {"w": jnp.zeros((9,), jnp.float32), "b": jnp.ones((3,))}
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore(jax.eval_shape(lambda: bad))
+
+
+def test_restore_rejects_missing_key(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tiny_state(), block=True)
+    bigger = {**_tiny_state(), "extra": jnp.zeros((2,))}
+    with pytest.raises(KeyError):
+        ck.restore(jax.eval_shape(lambda: bigger))
+
+
+def test_async_save_error_surfaces(tmp_path):
+    """IO failures in the background writer must raise on the next wait()
+    (chmod tricks don't work as root, so break the path structurally: a
+    regular file where the checkpoint dir should be)."""
+    ck = Checkpointer(str(tmp_path / "sub"))
+    ck.save(1, _tiny_state(), block=True)
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    ck.dir = str(blocker / "x")              # worker's makedirs will fail
+    ck.save(2, _tiny_state())
+    with pytest.raises(RuntimeError, match="async checkpoint failed"):
+        ck.wait()
+
+
+def test_engine_straggler_hop_cap(built_dqf):
+    """A lane can never exceed max_hops — tail latency is bounded."""
+    from repro.serving.engine import WaveEngine
+    import dataclasses
+    dqf, wl = built_dqf
+    old = dqf.cfg
+    dqf.cfg = dataclasses.replace(old, max_hops=12)   # aggressive cap
+    try:
+        eng = WaveEngine(dqf, wave_size=16, tick_hops=4)
+        eng.submit(wl.sample(32))
+        out = eng.run_until_drained()
+        assert len(out["results"]) == 32
+        hops = [r["hops"] for r in out["results"].values()]
+        assert max(hops) <= 12
+    finally:
+        dqf.cfg = old
+
+
+def test_data_pipeline_survives_restart_at_any_step():
+    """Stateless batching: a 'restarted' pipeline yields identical batches."""
+    from repro.data.pipeline import DataConfig, make_source
+    dc = DataConfig(vocab_size=64, seq_len=8, global_batch=4, seed=9)
+    a = make_source(dc)
+    ref = [a.batch(s)["tokens"] for s in range(5)]
+    # crash after step 2, restart, resume at step 3
+    b = make_source(dc)
+    for s in (3, 4):
+        np.testing.assert_array_equal(b.batch(s)["tokens"], ref[s])

@@ -1,0 +1,182 @@
+"""Per-kernel interpret-mode parity vs the pure-jnp oracles (ref.py).
+
+Shape/dtype sweeps + hypothesis property tests, per the deliverable spec.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bitonic import bitonic_sort_kv, next_pow2
+from repro.kernels.distance import pairwise_l2_pallas
+from repro.kernels.fused_scorer import fused_topk_l2_pallas
+from repro.kernels.topk_merge import pool_merge_pallas
+
+RNG = np.random.default_rng(42)
+
+
+# --------------------------------------------------------------- bitonic
+@pytest.mark.parametrize("n", [2, 8, 64, 256])
+@pytest.mark.parametrize("batch", [(1,), (5,), (3, 4)])
+def test_bitonic_matches_sort(n, batch):
+    keys = RNG.standard_normal((*batch, n)).astype(np.float32)
+    vals = RNG.integers(0, 10_000, (*batch, n)).astype(np.int32)
+    sk, sv = bitonic_sort_kv(jnp.asarray(keys), jnp.asarray(vals))
+    np.testing.assert_allclose(np.asarray(sk), np.sort(keys, -1), rtol=0)
+    # values follow their keys (unique keys w.p. 1)
+    order = np.argsort(keys, -1)
+    np.testing.assert_array_equal(
+        np.asarray(sv), np.take_along_axis(vals, order, -1))
+
+
+@given(st.integers(1, 6).map(lambda p: 2 ** p),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_bitonic_property_sorted_and_permutation(n, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.standard_normal((2, n)).astype(np.float32)
+    vals = np.broadcast_to(np.arange(n, dtype=np.int32), (2, n)).copy()
+    sk, sv = bitonic_sort_kv(jnp.asarray(keys), jnp.asarray(vals))
+    sk, sv = np.asarray(sk), np.asarray(sv)
+    assert (np.diff(sk, axis=-1) >= 0).all()          # sorted
+    assert (np.sort(sv, -1) == np.arange(n)).all()    # a permutation
+
+
+def test_next_pow2():
+    assert [next_pow2(i) for i in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+
+
+# --------------------------------------------------------------- distance
+@pytest.mark.parametrize("B,N,d,bq,bn", [
+    (1, 1, 8, 8, 8),           # degenerate
+    (17, 33, 24, 8, 16),       # ragged vs tiles
+    (64, 128, 128, 32, 64),    # aligned
+    (30, 70, 960, 16, 32),     # GIST-like dim
+])
+def test_distance_parity(B, N, d, bq, bn):
+    q = RNG.standard_normal((B, d)).astype(np.float32)
+    x = RNG.standard_normal((N, d)).astype(np.float32)
+    got = pairwise_l2_pallas(q, x, bq=bq, bn=bn, interpret=True)
+    want = ref.pairwise_l2(q, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_distance_dtypes(dtype):
+    q = RNG.standard_normal((9, 32)).astype(dtype)
+    x = RNG.standard_normal((21, 32)).astype(dtype)
+    got = pairwise_l2_pallas(q, x, bq=8, bn=8, interpret=True)
+    want = ref.pairwise_l2(q, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_distance_bf16():
+    q = jnp.asarray(RNG.standard_normal((8, 16)), jnp.bfloat16)
+    x = jnp.asarray(RNG.standard_normal((8, 16)), jnp.bfloat16)
+    got = pairwise_l2_pallas(q, x, bq=8, bn=8, interpret=True)
+    want = ref.pairwise_l2(q, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ------------------------------------------------------------ fused scorer
+@pytest.mark.parametrize("B,N,k,bq,bn", [
+    (5, 40, 10, 8, 8),
+    (33, 100, 7, 16, 32),
+    (64, 256, 32, 32, 64),
+    (4, 7, 12, 8, 8),          # k > N → sentinel padding
+])
+def test_fused_scorer_parity(B, N, k, bq, bn):
+    q = RNG.standard_normal((B, 24)).astype(np.float32)
+    x = RNG.standard_normal((N, 24)).astype(np.float32)
+    gd, gi = fused_topk_l2_pallas(q, x, k=k, bq=bq, bn=bn, interpret=True)
+    wd, wi = ref.fused_topk_l2(q, x, k=k)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    finite = np.isfinite(np.asarray(wd))
+    np.testing.assert_allclose(np.asarray(gd)[finite],
+                               np.asarray(wd)[finite], rtol=1e-5, atol=1e-3)
+
+
+@given(st.integers(1, 40), st.integers(2, 80), st.integers(1, 16),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_fused_scorer_property(B, N, k, seed):
+    """Top-k invariants: sorted, ids valid, dists correct for chosen ids."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, 8)).astype(np.float32)
+    x = rng.standard_normal((N, 8)).astype(np.float32)
+    d, i = fused_topk_l2_pallas(q, x, k=k, bq=8, bn=8, interpret=True)
+    d, i = np.asarray(d), np.asarray(i)
+    # inf-safe sortedness check (inf - inf = nan would poison np.diff)
+    d_chk = np.where(np.isinf(d), np.float32(3.4e38), d)
+    assert (np.diff(d_chk, axis=1) >= -1e-5).all()
+    valid = i < N
+    true_d = np.sum((q[:, None, :] - x[np.minimum(i, N - 1)]) ** 2, -1)
+    np.testing.assert_allclose(d[valid], true_d[valid], rtol=1e-4, atol=1e-3)
+
+
+# -------------------------------------------------------------- pool merge
+@pytest.mark.parametrize("B,L,C,bb", [(3, 8, 8, 2), (9, 16, 24, 4),
+                                      (1, 32, 16, 1), (16, 64, 32, 8)])
+def test_pool_merge_parity(B, L, C, bb):
+    pd = np.sort(RNG.standard_normal((B, L)).astype(np.float32), 1)
+    pi = RNG.integers(0, 9999, (B, L)).astype(np.int32)
+    cd = RNG.standard_normal((B, C)).astype(np.float32)
+    ci = RNG.integers(0, 9999, (B, C)).astype(np.int32)
+    gd, gi = pool_merge_pallas(pd, pi, cd, ci, bb=bb, interpret=True)
+    wd, wi = ref.pool_merge(pd, pi, cd, ci)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    from repro.kernels import ops
+    assert not ops.kernels_native()
+    q = RNG.standard_normal((4, 8)).astype(np.float32)
+    x = RNG.standard_normal((6, 8)).astype(np.float32)
+    d1 = ops.pairwise_l2(q, x)                       # ref fallback
+    d2 = ops.pairwise_l2(q, x, interpret=True)       # pallas interpret
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------- gather + distance hop
+from repro.kernels.gather_distance import gather_distances_pallas
+
+
+@pytest.mark.parametrize("B,R,n,d", [(4, 8, 40, 8), (9, 16, 100, 24),
+                                     (2, 32, 64, 128)])
+def test_gather_distance_parity(B, R, n, d):
+    x = RNG.standard_normal((n, d)).astype(np.float32)
+    x_pad = np.concatenate([x, np.full((1, d), 1e9, np.float32)])
+    q = RNG.standard_normal((B, d)).astype(np.float32)
+    nbrs = RNG.integers(0, n, (B, R)).astype(np.int32)
+    nbrs[0, 0] = n                       # sentinel hits the padded row
+    got = gather_distances_pallas(jnp.asarray(q), jnp.asarray(x_pad),
+                                  jnp.asarray(nbrs), interpret=True)
+    want = ref.gather_distances(jnp.asarray(q), jnp.asarray(x_pad),
+                                jnp.asarray(nbrs))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_gather_distance_property(seed):
+    rng = np.random.default_rng(seed)
+    n, d, B, R = 30, 8, 3, 5
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    x_pad = np.concatenate([x, np.full((1, d), 1e9, np.float32)])
+    q = rng.standard_normal((B, d)).astype(np.float32)
+    nbrs = rng.integers(0, n + 1, (B, R)).astype(np.int32)
+    got = np.asarray(gather_distances_pallas(
+        jnp.asarray(q), jnp.asarray(x_pad), jnp.asarray(nbrs),
+        interpret=True))
+    # non-negative; sentinel rows are huge; real rows match direct compute
+    assert (got >= 0).all()
+    direct = np.sum((x_pad[nbrs] - q[:, None]) ** 2, -1)
+    np.testing.assert_allclose(got, direct, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,34 @@
+"""End-to-end launcher fault tolerance: kill training mid-run, rerun the
+same command, verify it resumes from the checkpoint and finishes."""
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_resumes_from_checkpoint(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    common = ["--arch", "qwen3-0.6b", "--reduced", "--batch", "2",
+              "--seq", "32", "--ckpt-dir", ckpt, "--ckpt-every", "5",
+              "--log-every", "5", "--lr", "1e-3"]
+    # phase 1: run 10 of 20 steps ("crash" = normal exit at step 10)
+    out1 = _run([*common, "--steps", "10"])
+    assert out1.returncode == 0, out1.stderr[-2000:]
+    assert os.path.isdir(os.path.join(ckpt, "step_10"))
+    # phase 2: same command with the full horizon — must resume, not restart
+    out2 = _run([*common, "--steps", "20"])
+    assert out2.returncode == 0, out2.stderr[-2000:]
+    assert "resumed from step 10" in out2.stdout
+    steps = [int(m) for m in re.findall(r"step=\s*(\d+)", out2.stdout)]
+    assert min(steps) >= 10, "restarted from scratch instead of resuming"
+    assert os.path.isdir(os.path.join(ckpt, "step_20"))

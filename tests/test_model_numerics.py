@@ -1,0 +1,175 @@
+"""Numerical contracts of the model substrate:
+
+* chunked streaming-softmax attention ≡ plain masked attention;
+* SSD chunked scan ≡ naive per-step recurrence;
+* mLSTM decode path ≡ mLSTM chunked forward (step-by-step replay);
+* rope/rms_norm invariants (hypothesis).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import chunked_attention, make_pair_schedule
+from repro.models.common import apply_rope, rms_norm, rope_angles
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+RNG = np.random.default_rng(0)
+
+
+def plain_attention(q, k, v, causal=True, window=0):
+    B, S, H, dk = q.shape
+    s = np.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dk)
+    qpos = np.arange(S)[:, None]
+    kpos = np.arange(k.shape[1])[None, :]
+    mask = np.ones((S, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@pytest.mark.parametrize("S,cq,ck,window", [
+    (64, 16, 16, 0), (64, 32, 16, 0), (64, 16, 16, 24), (128, 32, 32, 32),
+])
+def test_chunked_attention_matches_plain(S, cq, ck, window):
+    B, H, dk = 2, 3, 16
+    q = RNG.standard_normal((B, S, H, dk)).astype(np.float32)
+    k = RNG.standard_normal((B, S, H, dk)).astype(np.float32)
+    v = RNG.standard_normal((B, S, H, dk)).astype(np.float32)
+    kv_raw = np.concatenate([k.reshape(B, S, -1), v.reshape(B, S, -1)], -1)
+
+    def expand(kvc, j):
+        c = kvc.shape[1]
+        return (kvc[..., : H * dk].reshape(B, c, H, dk),
+                kvc[..., H * dk:].reshape(B, c, H, dk))
+
+    got = chunked_attention(jnp.asarray(q), jnp.asarray(kv_raw), expand,
+                            chunk_q=cq, chunk_k=ck, causal=True,
+                            window=window)
+    want = plain_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_noncausal_kv_valid_len():
+    B, S, T, H, dk = 1, 32, 24, 2, 8
+    q = RNG.standard_normal((B, S, H, dk)).astype(np.float32)
+    k = RNG.standard_normal((B, 32, H, dk)).astype(np.float32)
+    v = RNG.standard_normal((B, 32, H, dk)).astype(np.float32)
+    k[:, T:] = 7.7   # garbage that must be masked
+    v[:, T:] = -9.9
+    kv_raw = np.concatenate([k.reshape(B, 32, -1), v.reshape(B, 32, -1)], -1)
+
+    def expand(kvc, j):
+        c = kvc.shape[1]
+        return (kvc[..., : H * dk].reshape(B, c, H, dk),
+                kvc[..., H * dk:].reshape(B, c, H, dk))
+
+    got = chunked_attention(jnp.asarray(q), jnp.asarray(kv_raw), expand,
+                            chunk_q=16, chunk_k=16, causal=False,
+                            kv_valid_len=T)
+    want = plain_attention(q, k[:, :T], v[:, :T], causal=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_pair_schedule_covers_causal_exactly():
+    i, j, new = make_pair_schedule(8, 8, cq=16, ck=16, causal=True)
+    assert len(i) == 8 * 9 // 2              # triangle, no waste
+    i2, j2, _ = make_pair_schedule(8, 8, cq=16, ck=16, causal=True,
+                                   window=32)
+    assert all(a - b <= 2 for a, b in zip(i2, j2))
+    # mixed granularity: every (qpos, kpos) causal pair must be covered
+    i3, j3, _ = make_pair_schedule(2, 4, cq=32, ck=16, causal=True)
+    covered = set(zip(i3.tolist(), j3.tolist()))
+    for qpos in range(64):
+        for kpos in range(qpos + 1):
+            assert (qpos // 32, kpos // 16) in covered
+
+
+# ------------------------------------------------------------------- SSD
+def naive_ssd(x, dt, log_a, Bm, Cm):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = np.zeros((B, H, N, P), np.float64)
+    out = np.zeros_like(x, dtype=np.float64)
+    for t in range(S):
+        a = np.exp(log_a[:, t])[..., None, None]
+        h = h * a + np.einsum("bhn,bhp->bhnp", Bm[:, t] * dt[:, t][..., None],
+                              x[:, t])
+        out[:, t] = np.einsum("bhn,bhnp->bhp", Cm[:, t], h)
+    return out.astype(np.float32), h.astype(np.float32)
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (48, 48)])
+def test_ssd_chunked_matches_naive(S, chunk):
+    B, H, P, N = 2, 3, 8, 4
+    x = RNG.standard_normal((B, S, H, P)).astype(np.float32)
+    dt = RNG.uniform(0.1, 1.0, (B, S, H)).astype(np.float32)
+    log_a = -RNG.uniform(0.01, 0.5, (B, S, H)).astype(np.float32)
+    Bm = RNG.standard_normal((B, S, H, N)).astype(np.float32)
+    Cm = RNG.standard_normal((B, S, H, N)).astype(np.float32)
+    got, h_got = ssd_chunked(jnp.asarray(x), jnp.asarray(dt),
+                             jnp.asarray(log_a), jnp.asarray(Bm),
+                             jnp.asarray(Cm), chunk=chunk, return_state=True)
+    want, h_want = naive_ssd(x, dt, log_a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_got), h_want, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_ssd_decode_replays_chunked():
+    """Step-by-step decode starting from a prefix state ≡ full chunked."""
+    B, S, H, P, N = 1, 24, 2, 4, 4
+    x = RNG.standard_normal((B, S, H, P)).astype(np.float32)
+    dt = RNG.uniform(0.1, 1.0, (B, S, H)).astype(np.float32)
+    log_a = -RNG.uniform(0.01, 0.5, (B, S, H)).astype(np.float32)
+    Bm = RNG.standard_normal((B, S, H, N)).astype(np.float32)
+    Cm = RNG.standard_normal((B, S, H, N)).astype(np.float32)
+    full, _ = ssd_chunked(*map(jnp.asarray, (x, dt, log_a, Bm, Cm)),
+                          chunk=8, return_state=True)
+    h = jnp.zeros((B, H, N, P), jnp.float32)
+    for t in range(S):
+        y, h = ssd_decode_step(h, jnp.asarray(x[:, t]), jnp.asarray(dt[:, t]),
+                               jnp.asarray(log_a[:, t]), jnp.asarray(Bm[:, t]),
+                               jnp.asarray(Cm[:, t]))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------ small pieces
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_rms_norm_scale_invariant_direction(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((4, 16)).astype(np.float32) + 0.1
+    w = jnp.zeros((16,))
+    y1 = rms_norm(jnp.asarray(x), w, 1e-6)
+    y2 = rms_norm(jnp.asarray(3.0 * x), w, 1e-6)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    S, H, hd = 16, 2, 32
+    x = RNG.standard_normal((1, S, H, hd)).astype(np.float32)
+    pos = jnp.arange(S)[None]
+    sin, cos = rope_angles(pos, hd, 10_000.0)
+    y = apply_rope(jnp.asarray(x), sin, cos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(x, axis=-1), rtol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = RNG.standard_normal((1, 1, 1, hd)).astype(np.float32)
+    k = RNG.standard_normal((1, 1, 1, hd)).astype(np.float32)
+    def dot_at(i, j):
+        si, ci = rope_angles(jnp.asarray([[i]]), hd, 10_000.0)
+        sj, cj = rope_angles(jnp.asarray([[j]]), hd, 10_000.0)
+        qi = apply_rope(jnp.asarray(q), si, ci)
+        kj = apply_rope(jnp.asarray(k), sj, cj)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)

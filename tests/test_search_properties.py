@@ -1,0 +1,96 @@
+"""Hypothesis property tests on the dynamic search's system invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.beam_search as bs
+from repro.core.dynamic_search import dynamic_search
+from repro.core.ssg import SSGParams, build_ssg
+from tests.conftest import make_clustered
+
+
+@pytest.fixture(scope="module")
+def world():
+    x = make_clustered(n=900, d=12, seed=21)
+    full = build_ssg(x, SSGParams(knn_k=12, out_degree=12), n_entry=6)
+    hot_ids = np.arange(30)
+    hot = build_ssg(np.ascontiguousarray(x[hot_ids]),
+                    SSGParams(knn_k=8, out_degree=8), n_entry=4)
+    n = x.shape[0]
+    return dict(
+        x=x,
+        x_pad=bs.pad_dataset(jnp.asarray(x)),
+        adj_pad=bs.pad_adjacency(jnp.asarray(full.adj)),
+        x_hot_pad=bs.pad_dataset(jnp.asarray(x[hot_ids])),
+        adj_hot_pad=bs.pad_adjacency(jnp.asarray(hot.adj)),
+        hot_ids_pad=jnp.asarray(np.concatenate([hot_ids, [n]]), jnp.int32),
+        hot_entries=jnp.asarray(hot.entries),
+    )
+
+
+def run(world, queries, **kw):
+    args = dict(k=5, hot_pool_size=8, full_pool_size=16, eval_gap=30,
+                add_step=0, tree_depth=4, max_hops=80, hot_mode="graph")
+    args.update(kw)
+    return dynamic_search(
+        world["x_pad"], world["adj_pad"], world["x_hot_pad"],
+        world["adj_hot_pad"], world["hot_ids_pad"], world["hot_entries"],
+        None, jnp.asarray(queries, jnp.float32), **args)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_results_sorted_valid_unique(world, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((8, 12)).astype(np.float32)
+    res, _, _ = run(world, q)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    n = world["x"].shape[0]
+    assert (ids < n).all() and (ids >= 0).all()
+    d_chk = np.where(np.isfinite(dists), dists, 3.4e38)
+    assert (np.diff(d_chk, axis=1) >= -1e-5).all()
+    for row in ids:
+        assert len(set(row.tolist())) == row.size
+    # reported distances are true distances
+    true = np.sum((q[:, None, :] - world["x"][ids]) ** 2, -1)
+    finite = np.isfinite(dists)
+    np.testing.assert_allclose(dists[finite], true[finite], rtol=1e-3,
+                               atol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_bigger_pool_never_worse(world, seed):
+    rng = np.random.default_rng(seed)
+    q = world["x"][rng.choice(900, 16, replace=False)] \
+        + 0.05 * rng.standard_normal((16, 12)).astype(np.float32)
+    res_s, _, _ = run(world, q, full_pool_size=8)
+    res_l, _, _ = run(world, q, full_pool_size=32)
+    # kth best distance with the larger pool is <= with the smaller pool
+    d_s = np.asarray(res_s.dists)[:, -1]
+    d_l = np.asarray(res_l.dists)[:, -1]
+    assert (d_l <= d_s + 1e-4).mean() > 0.9
+
+
+def test_hot_phase_counts_ride_into_stats(world):
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((4, 12)).astype(np.float32)
+    res, hot_stats, hfeats = run(world, q)
+    assert (np.asarray(hot_stats.dist_count) > 0).all()
+    assert np.isfinite(np.asarray(hfeats.first)).all()
+    # full-phase counters were reset (Alg 4 line 12): strictly fresh
+    assert (np.asarray(res.stats.dist_count)
+            <= 80 * 12 + 16).all()   # hops*degree bound
+
+
+def test_mxu_hot_mode_exact_on_hot_queries(world):
+    """Queries exactly at hot points: MXU hot layer must return them."""
+    q = world["x"][:8]                          # rows 0..7 are hot ids
+    res, _, _ = run(world, q, hot_mode="mxu")
+    ids = np.asarray(res.ids)
+    assert (ids[:, 0] == np.arange(8)).all()
+    # matmul-form distances (‖q‖²+‖x‖²−2qx) carry ~1e-5 float residue
+    assert np.allclose(np.asarray(res.dists)[:, 0], 0.0, atol=1e-4)

@@ -1,0 +1,92 @@
+"""Serving layer: wave engine (continuous batching), retrieval glue,
+degraded merge (fault tolerance)."""
+
+import numpy as np
+import pytest
+
+from repro.core import DQF, DQFConfig, ZipfWorkload, ground_truth, recall_at_k
+from repro.serving.engine import WaveEngine
+from repro.serving.retrieval import KNNLMHead, RetrievalService
+from repro.serving.sharded import merge_with_dropout
+from tests.conftest import make_clustered
+
+
+def test_wave_engine_matches_batch_search(built_dqf, small_data):
+    dqf, wl = built_dqf
+    q = wl.sample(96)
+    gt = ground_truth(small_data, q, 10)
+    eng = WaveEngine(dqf, wave_size=32, tick_hops=8)
+    eng.submit(q)
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 96
+    ids = np.stack([out["results"][i]["ids"] for i in range(96)])
+    r_engine = recall_at_k(ids, gt)
+    r_batch = recall_at_k(np.asarray(dqf.search(q, record=False).ids), gt)
+    assert r_engine > r_batch - 0.08
+    assert out["qps"] > 0
+
+
+def test_wave_engine_partial_wave(built_dqf):
+    dqf, wl = built_dqf
+    eng = WaveEngine(dqf, wave_size=64, tick_hops=4)
+    eng.submit(wl.sample(10))          # much smaller than the wave
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 10
+
+
+def test_wave_engine_continuous_refill(built_dqf):
+    """More requests than lanes → lanes must be reused."""
+    dqf, wl = built_dqf
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8)
+    eng.submit(wl.sample(80))
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 80
+    assert eng.stats.ticks > 1
+
+
+def test_degraded_merge_renormalizes():
+    rng = np.random.default_rng(0)
+    k = 10
+    per_ids = [rng.integers(0, 1000, (4, k)).astype(np.int32)
+               for _ in range(4)]
+    per_d = [np.sort(rng.random((4, k)).astype(np.float32), 1)
+             for _ in range(4)]
+    ids, dists, cov = merge_with_dropout(per_ids, per_d,
+                                         [True, True, False, True], k)
+    assert ids.shape == (4, k)
+    assert cov == pytest.approx(0.75)
+    assert (np.diff(dists, axis=1) >= 0).all()
+    # no contribution from the dead shard
+    dead = set(per_ids[2].reshape(-1).tolist())
+    alive = set(np.concatenate([per_ids[i].reshape(-1)
+                                for i in (0, 1, 3)]).tolist())
+    for row in ids:
+        for v in row:
+            assert int(v) in alive or int(v) not in dead
+
+
+def test_all_shards_dead_raises():
+    with pytest.raises(RuntimeError):
+        merge_with_dropout([np.zeros((1, 2), np.int32)],
+                           [np.zeros((1, 2), np.float32)], [False], 2)
+
+
+def test_retrieval_service_knnlm(small_data):
+    rng = np.random.default_rng(1)
+    payload = rng.integers(0, 64, small_data.shape[0]).astype(np.int32)
+    svc = RetrievalService.build(
+        small_data, payload,
+        DQFConfig(knn_k=12, out_degree=12, index_ratio=0.03, hot_pool=16,
+                  full_pool=32, max_hops=120))
+    q = small_data[:8] + 0.01 * rng.standard_normal(
+        (8, small_data.shape[1])).astype(np.float32)
+    tokens, dists, ids = svc.lookup(q)
+    assert tokens.shape == (8, 10)
+    # querying a datastore point returns its own payload first
+    assert (tokens[:, 0] == payload[ids[:, 0]]).all()
+
+    head = KNNLMHead(service=svc, vocab_size=64, lam=0.5)
+    logits = rng.standard_normal((8, 64)).astype(np.float32)
+    probs = head(logits, q)
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, rtol=1e-4)
+    assert probs.shape == (8, 64)

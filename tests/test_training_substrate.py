@@ -1,0 +1,189 @@
+"""Training substrate: optimizer, schedules, train step, data, checkpoints."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_source
+from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.training.train_step import (TrainConfig, make_train_step,
+                                       train_state_init)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _batch(cfg, B=4, S=32, M=None, seed=0):
+    k = jax.random.PRNGKey(seed)
+    shape = (M, B // M, S) if M else (B, S)
+    return {
+        "tokens": jax.random.randint(k, shape, 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.fold_in(k, 1), shape, 0,
+                                     cfg.vocab_size),
+    }
+
+
+def test_adamw_reduces_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(cfg, params, g, state,
+                                        jnp.float32(0.05))
+    assert float(loss(params)) < 1e-2
+
+
+def test_schedule_shape():
+    steps = jnp.arange(0, 1000)
+    lr = warmup_cosine(steps, peak_lr=1e-3, warmup_steps=100,
+                       total_steps=1000)
+    assert float(lr[0]) == 0.0
+    assert float(lr[100]) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr[999]) < 2.1e-4
+    assert float(jnp.max(lr)) <= 1e-3 + 1e-9
+
+
+def test_train_step_reduces_loss(tiny):
+    cfg, params = tiny
+    tcfg = TrainConfig(microbatches=1, peak_lr=5e-3, warmup_steps=2,
+                       total_steps=50, remat=False)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    state = train_state_init(params, tcfg)
+    batch = _batch(cfg)
+    first = None
+    for i in range(15):
+        state, metrics = step(state, batch)   # same batch → must memorize
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first - 0.5
+
+
+def test_microbatched_matches_full_batch(tiny):
+    """Grad accumulation over M microbatches ≡ one big batch (same grads)."""
+    cfg, params = tiny
+    b_full = _batch(cfg, B=4, S=16, seed=3)
+    b_micro = jax.tree.map(lambda a: a.reshape(2, 2, *a.shape[1:]), b_full)
+    t1 = TrainConfig(microbatches=1, peak_lr=1e-3, remat=False)
+    t2 = TrainConfig(microbatches=2, peak_lr=1e-3, remat=False)
+    s1, m1 = jax.jit(make_train_step(cfg, t1))(train_state_init(params, t1),
+                                               b_full)
+    s2, m2 = jax.jit(make_train_step(cfg, t2))(train_state_init(params, t2),
+                                               b_micro)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    d = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        s1.params, s2.params)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_remat_matches_no_remat(tiny):
+    cfg, params = tiny
+    batch = _batch(cfg, B=2, S=16, seed=4)
+    loss = lambda p, r: lm.lm_loss(p, cfg, tokens=batch["tokens"],
+                                   labels=batch["labels"], remat=r)[0]
+    g1 = jax.grad(lambda p: loss(p, False))(params)
+    g2 = jax.grad(lambda p: loss(p, True))(params)
+    diff = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        g1, g2)
+    assert max(jax.tree.leaves(diff)) < 1e-3
+
+
+def test_compressed_grads_still_learn(tiny):
+    cfg, params = tiny
+    tcfg = TrainConfig(microbatches=1, peak_lr=5e-3, warmup_steps=2,
+                       total_steps=50, compress_grads=True, remat=False)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    state = train_state_init(params, tcfg)
+    assert state.err is not None
+    batch = _batch(cfg, seed=5)
+    first = None
+    for _ in range(15):
+        state, metrics = step(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first - 0.3
+
+
+# ------------------------------------------------------------------- data
+def test_data_deterministic_and_resumable():
+    dc = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    src = make_source(dc)
+    b1 = src.batch(7)
+    b2 = make_source(dc).batch(7)       # fresh instance, same step
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_host_sharding_partitions_batch():
+    dc = DataConfig(vocab_size=50, seq_len=8, global_batch=8)
+    full = make_source(dc).batch(3)["tokens"]
+    parts = []
+    for h in range(2):
+        dch = DataConfig(vocab_size=50, seq_len=8, global_batch=8,
+                         num_hosts=2, host_id=h)
+        parts.append(make_source(dch).batch(3)["tokens"])
+    inter = np.empty_like(full)
+    inter[0::2] = parts[0][: 4]
+    inter[1::2] = parts[1][: 4]
+    np.testing.assert_array_equal(np.sort(inter, axis=0),
+                                  np.sort(full, axis=0))
+
+
+def test_file_source(tmp_path):
+    from repro.data.pipeline import prepare_tokens
+    toks = np.arange(1000, dtype=np.int32) % 64
+    p = str(tmp_path / "tokens.bin")
+    prepare_tokens(p, toks)
+    dc = DataConfig(vocab_size=64, seq_len=16, global_batch=2, kind="file",
+                    path=p)
+    b = make_source(dc).batch(0)
+    assert b["tokens"].shape == (2, 16)
+    assert (b["tokens"] < 64).all()
+
+
+# ------------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip_and_gc(tmp_path, tiny):
+    cfg, params = tiny
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tcfg = TrainConfig(remat=False)
+    state = train_state_init(params, tcfg)
+    for s in (10, 20, 30):
+        ck.save(s, state, extra={"data_step": s}, block=True)
+    assert latest_step(str(tmp_path)) == 30
+    assert not (tmp_path / "step_10").exists()     # GC'd
+    restored, meta = ck.restore(state)
+    assert meta["data_step"] == 30
+    same = jax.tree.map(lambda a, b: np.array_equal(np.asarray(a),
+                                                    np.asarray(b)),
+                        state.params, restored.params)
+    assert all(jax.tree.leaves(same))
+
+
+def test_checkpoint_atomicity(tmp_path, tiny):
+    """tmp dirs never count as checkpoints."""
+    cfg, params = tiny
+    ck = Checkpointer(str(tmp_path))
+    os.makedirs(tmp_path / "tmp.99")               # simulated dead write
+    tcfg = TrainConfig(remat=False)
+    ck.save(5, train_state_init(params, tcfg), block=True)
+    assert latest_step(str(tmp_path)) == 5
