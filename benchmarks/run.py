@@ -37,6 +37,7 @@ def main() -> None:
         ("features", bp.bench_features),              # Table 2
         ("drift", bp.bench_drift),                    # claim 3
         ("kernels", bk.bench_kernels),                # Pallas layer
+        ("quant", bk.bench_quant_scoring),            # compressed scan
         ("engine", bk.bench_engine),                  # serving layer
     ]
     print("name,us_per_call,derived")

@@ -1,6 +1,6 @@
 """DQF — the paper's contribution (dual index + dynamic search) in JAX."""
 
-from .types import DQFConfig, SearchResult, SearchStats  # noqa: F401
+from .types import DQFConfig, QuantConfig, SearchResult, SearchStats  # noqa: F401
 from .dqf import DQF  # noqa: F401
 from .ssg import SSGParams, build_ssg  # noqa: F401
 from . import beam_search  # noqa: F401  (module; fn at beam_search.beam_search)

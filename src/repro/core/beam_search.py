@@ -11,6 +11,13 @@ the loop exits when all lanes are done.
 Conventions (see :mod:`repro.core.types`): ids are global rows with sentinel
 ``n``; ``x_pad`` has an extra huge-valued row ``n``; ``adj_pad`` has an extra
 row ``n`` full of sentinels so expanding the sentinel is a no-op.
+
+Quantized scoring mode: everywhere a function takes ``x_pad`` it also
+accepts a *score table* (:mod:`repro.quant.types`) — any pytree exposing
+``.n`` and ``.gather_score(queries, cols)``.  Distances then come from the
+compressed codes (int8 dequant or PQ ADC) instead of float32 rows; all
+sentinel handling is by masking, so the table's sentinel row only has to
+exist, not hold huge values.
 """
 
 from __future__ import annotations
@@ -25,7 +32,7 @@ from .types import INF_DIST, PoolState, SearchResult, SearchStats
 
 __all__ = [
     "BeamState", "init_state", "expand_step", "beam_search", "pad_dataset",
-    "pad_adjacency", "make_beam_search",
+    "pad_adjacency", "make_beam_search", "table_n", "score_rows", "as_view",
 ]
 
 
@@ -47,6 +54,33 @@ def pad_adjacency(adj: jnp.ndarray) -> jnp.ndarray:
     n = adj.shape[0]
     pad = jnp.full((1, adj.shape[1]), n, adj.dtype)
     return jnp.concatenate([adj, pad], axis=0)
+
+
+def table_n(x_pad) -> int:
+    """Real row count of a padded vector table *or* quantized score table."""
+    if isinstance(x_pad, jnp.ndarray):
+        return x_pad.shape[0] - 1
+    return x_pad.n
+
+
+def as_view(x_pad, queries: jnp.ndarray):
+    """Bind per-query search state (e.g. PQ LUTs); identity otherwise."""
+    if isinstance(x_pad, jnp.ndarray):
+        return x_pad
+    return x_pad.with_queries(queries)
+
+
+def score_rows(x_pad, queries: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """(B, C) squared L2 of query b vs table row ``cols[b, c]``.
+
+    Exact float32 for a plain array table; quantized-approximate for a
+    score table (which scores from its codes — the table decides how).
+    """
+    if isinstance(x_pad, jnp.ndarray):
+        g = x_pad[cols]                                      # (B, C, d)
+        diff = g - queries[:, None, :]
+        return jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+    return x_pad.gather_score(queries, cols).astype(jnp.float32)
 
 
 def _merge_pool(pool: PoolState, cand_ids, cand_dists, cand_expanded,
@@ -76,19 +110,17 @@ def _merge_pool(pool: PoolState, cand_ids, cand_dists, cand_expanded,
     return merged, jnp.where(lane_update, inserted, 0)
 
 
-def init_state(x_pad: jnp.ndarray, queries: jnp.ndarray,
+def init_state(x_pad, queries: jnp.ndarray,
                entries: jnp.ndarray, pool_size: int) -> BeamState:
     """Seed every lane's pool with the entry points (Alg 3 line 1)."""
-    n = x_pad.shape[0] - 1
+    n = table_n(x_pad)
     B = queries.shape[0]
     E = entries.shape[0]
     if E > pool_size:
         raise ValueError(f"entries ({E}) exceed pool size ({pool_size})")
-    g = x_pad[entries]                                           # (E, d)
-    diff = queries[:, None, :] - g[None, :, :]
-    d2 = jnp.sum(diff * diff, axis=-1).astype(jnp.float32)       # (B, E)
-    order = jnp.argsort(d2, axis=1)
     ids0 = jnp.broadcast_to(entries[None, :], (B, E))
+    d2 = score_rows(x_pad, queries, ids0)                        # (B, E)
+    order = jnp.argsort(d2, axis=1)
     ids0 = jnp.take_along_axis(ids0, order, 1)
     d2 = jnp.take_along_axis(d2, order, 1)
 
@@ -113,10 +145,10 @@ def init_state(x_pad: jnp.ndarray, queries: jnp.ndarray,
     return BeamState(pool, seen, stats, jnp.ones((B,), bool))
 
 
-def expand_step(x_pad: jnp.ndarray, adj_pad: jnp.ndarray,
+def expand_step(x_pad, adj_pad: jnp.ndarray,
                 queries: jnp.ndarray, state: BeamState) -> BeamState:
     """One expansion per active lane (Alg 3 lines 4-9, batched)."""
-    n = x_pad.shape[0] - 1
+    n = table_n(x_pad)
     B, L = state.pool.ids.shape
 
     unexp = (~state.pool.expanded) & (state.pool.ids != n)       # (B, L)
@@ -135,9 +167,7 @@ def expand_step(x_pad: jnp.ndarray, adj_pad: jnp.ndarray,
     cols = jnp.where(valid, nbrs, n)
     seen = state.seen.at[rows[:, None], cols].set(True)
 
-    g = x_pad[cols]                                              # (B, R, d)
-    diff = g - queries[:, None, :]
-    d2 = jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+    d2 = score_rows(x_pad, queries, cols)                        # (B, R)
     d2 = jnp.where(valid, d2, INF_DIST)
 
     pool = PoolState(state.pool.ids, state.pool.dists, expanded)

@@ -23,8 +23,10 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.quant import QuantState, build_quantizer
+
 from . import beam_search as bs
-from .decision_tree import DecisionTree, train_tree
+from .decision_tree import DecisionTree, TreeArrays, train_tree
 from .dynamic_search import dynamic_search
 from .hot_index import HotIndex, QueryCounter, build_hot_index
 from .ssg import SSGIndex, SSGParams, build_ssg
@@ -39,6 +41,7 @@ class _Timings:
     full_build: float = 0.0
     hot_build: float = 0.0
     tree_fit: float = 0.0
+    quant_train: float = 0.0
 
 
 class DQF:
@@ -51,6 +54,7 @@ class DQF:
         self.hot: Optional[HotIndex] = None
         self.tree: Optional[DecisionTree] = None
         self.counter: Optional[QueryCounter] = None
+        self.quant: Optional[QuantState] = None
         self.timings = _Timings()
         self._dev = {}
 
@@ -73,6 +77,11 @@ class DQF:
         self._dev["x_pad"] = bs.pad_dataset(jnp.asarray(self.x))
         self._dev["adj_pad"] = bs.pad_adjacency(jnp.asarray(self.full.adj))
         self._dev["entries"] = jnp.asarray(self.full.entries)
+        if self.cfg.quant.enabled:
+            t0 = time.perf_counter()
+            self.quant = build_quantizer(self.x, self.cfg.quant)
+            self.timings.quant_train = time.perf_counter() - t0
+            self._dev["qtable"] = self.quant.device_table()
         return self
 
     @property
@@ -122,8 +131,12 @@ class DQF:
             q = np.unique(q, axis=0)
         t0 = time.perf_counter()
         c = self.cfg
+        # Train on what the deployed search will scan: the quantized table
+        # when quant is enabled, else the float32 vectors.
+        table = self._dev.get("qtable")
         feats, labels = collect_training_data(
-            self._dev["x_pad"], self._dev["adj_pad"],
+            table if table is not None else self._dev["x_pad"],
+            self._dev["adj_pad"],
             self._dev["x_hot_pad"], self._dev["adj_hot_pad"],
             self._dev["hot_ids_pad"], self._dev["hot_entries"], q,
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
@@ -150,7 +163,8 @@ class DQF:
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
             eval_gap=c.eval_gap, add_step=c.add_step,
             tree_depth=c.tree_depth, max_hops=c.max_hops,
-            hot_mode=c.hot_mode, use_kernel=use_kernel)
+            hot_mode=c.hot_mode, use_kernel=use_kernel,
+            qtable=self._dev.get("qtable"), rerank_k=self._rerank_k)
         if record:
             self.counter.record(np.asarray(res.ids))
             if auto_rebuild and self.counter.due:       # Alg 2 line 5
@@ -169,7 +183,8 @@ class DQF:
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
             eval_gap=c.eval_gap, add_step=c.add_step,
             tree_depth=c.tree_depth, max_hops=c.max_hops,
-            hot_mode=c.hot_mode)
+            hot_mode=c.hot_mode,
+            qtable=self._dev.get("qtable"), rerank_k=self._rerank_k)
         return res
 
     def search_baseline(self, queries: np.ndarray,
@@ -183,10 +198,27 @@ class DQF:
             max_hops=self.cfg.max_hops)
 
     # ------------------------------------------------------------------ misc
+    @property
+    def _rerank_k(self) -> int:
+        return self.cfg.quant.rerank_k if self.quant is not None else 0
+
     def index_nbytes(self) -> dict:
+        """Byte accounting per component.
+
+        ``full``/``hot`` are graph bytes (paper Table 6); ``full_vec`` is
+        the float32 vector table (reported separately — it is data, not
+        index, and moves off-device in a rerank-only deployment);
+        ``quant`` the compressed codes+codebook; ``total`` the resident
+        index footprint (graphs + codes); ``compression`` = full_vec /
+        quant.
+        """
         out = {"full": int(self.full.adj.nbytes) if self.full else 0,
-               "hot": int(self.hot.nbytes()) if self.hot else 0}
-        out["total"] = out["full"] + out["hot"]
+               "hot": int(self.hot.nbytes()) if self.hot else 0,
+               "full_vec": int(self.x.nbytes) if self.x is not None else 0,
+               "quant": int(self.quant.nbytes()) if self.quant else 0}
+        out["total"] = out["full"] + out["hot"] + out["quant"]
+        out["compression"] = (out["full_vec"] / out["quant"]
+                              if out["quant"] else 1.0)
         return out
 
     def save(self, path: str) -> None:
@@ -199,6 +231,17 @@ class DQF:
                         hot_entries=self.hot.graph.entries,
                         hot_ids=self.hot.ids,
                         hot_version=np.int64(self.hot.version))
+        if self.tree is not None:
+            t = self.tree.arrays
+            arrs.update(tree_feature=np.asarray(t.feature),
+                        tree_threshold=np.asarray(t.threshold),
+                        tree_left=np.asarray(t.left),
+                        tree_right=np.asarray(t.right),
+                        tree_value=np.asarray(t.value),
+                        tree_depth=np.int64(self.tree.depth),
+                        tree_importance=self.tree.feature_importance)
+        if self.quant is not None:
+            arrs.update(self.quant.to_arrays())
         np.savez_compressed(path, **arrs)
 
     @classmethod
@@ -214,6 +257,36 @@ class DQF:
         self._dev["x_pad"] = bs.pad_dataset(jnp.asarray(self.x))
         self._dev["adj_pad"] = bs.pad_adjacency(jnp.asarray(self.full.adj))
         self._dev["entries"] = jnp.asarray(self.full.entries)
+        if "tree_feature" in z:
+            arrays = TreeArrays(
+                feature=jnp.asarray(z["tree_feature"]),
+                threshold=jnp.asarray(z["tree_threshold"]),
+                left=jnp.asarray(z["tree_left"]),
+                right=jnp.asarray(z["tree_right"]),
+                value=jnp.asarray(z["tree_value"]))
+            self.tree = DecisionTree(
+                arrays=arrays, depth=int(z["tree_depth"]),
+                feature_importance=z["tree_importance"])
+        if self.cfg.quant.enabled:
+            # cfg decides the search behaviour; the checkpoint provides the
+            # artifacts.  A float32 cfg ignores stored codes (x is exact).
+            self.quant = QuantState.from_arrays(z)
+            if self.quant is None:
+                raise ValueError(
+                    f"cfg requests quant mode {self.cfg.quant.mode!r} but "
+                    f"{path} holds no quantizer — rebuild with build()")
+            if self.quant.mode != self.cfg.quant.mode:
+                raise ValueError(
+                    f"cfg quant mode {self.cfg.quant.mode!r} != saved "
+                    f"{self.quant.mode!r}")
+            if self.quant.mode == "pq":
+                m, kk = self.quant.pq.m, self.quant.pq.k
+                want_k = min(2 ** self.cfg.quant.pq_bits, self.x.shape[0])
+                if (m, kk) != (self.cfg.quant.pq_m, want_k):
+                    raise ValueError(
+                        f"cfg PQ shape (m={self.cfg.quant.pq_m}, "
+                        f"k={want_k}) != saved (m={m}, k={kk})")
+            self._dev["qtable"] = self.quant.device_table()
         if "hot_ids" in z:
             graph = SSGIndex(adj=z["hot_adj"], entries=z["hot_entries"],
                              n=int(z["hot_ids"].shape[0]))

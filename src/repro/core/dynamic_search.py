@@ -115,6 +115,25 @@ def _seed_full_state(hot_pool: PoolState, hot_ids_pad: jnp.ndarray,
     return bs.BeamState(pool, seen, stats, jnp.ones((B,), bool))
 
 
+def _exact_rerank(x_pad, queries, pool: PoolState, *, k: int,
+                  rerank_k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Re-score the pool's best ``rerank_k`` entries in float32, keep top-k.
+
+    The quantized full phase ranks the pool by approximate (compressed-
+    domain) distances; this recovers the exact ordering among the head of
+    the pool so quantization error only costs recall when the true
+    neighbor fell *out* of the rerank window entirely.
+    """
+    n = x_pad.shape[0] - 1
+    rr = min(max(rerank_k, k), pool.ids.shape[1])
+    ids = pool.ids[:, :rr]
+    d2 = bs.score_rows(x_pad, queries, ids)
+    d2 = jnp.where(ids == n, INF_DIST, d2)
+    order = jnp.argsort(d2, axis=1)[:, :k]
+    return (jnp.take_along_axis(ids, order, 1),
+            jnp.take_along_axis(d2, order, 1))
+
+
 def _full_phase(x_pad, adj_pad, queries, state: bs.BeamState,
                 hot: HotFeatures, tree: Optional[TreeArrays], *,
                 k: int, eval_gap: int, add_step: int, tree_depth: int,
@@ -159,7 +178,7 @@ def _full_phase(x_pad, adj_pad, queries, state: bs.BeamState,
 
 @functools.partial(jax.jit, static_argnames=(
     "k", "hot_pool_size", "full_pool_size", "eval_gap", "add_step",
-    "tree_depth", "max_hops", "hot_mode", "use_kernel"))
+    "tree_depth", "max_hops", "hot_mode", "use_kernel", "rerank_k"))
 def dynamic_search(
     x_pad: jnp.ndarray,            # (n+1, d) padded dataset
     adj_pad: jnp.ndarray,          # (n+1, R) padded full adjacency
@@ -179,11 +198,17 @@ def dynamic_search(
     max_hops: int = 512,
     hot_mode: str = "graph",
     use_kernel: bool = False,
+    qtable=None,                   # quantized score table (repro.quant)
+    rerank_k: int = 0,
 ) -> tuple[SearchResult, SearchStats, HotFeatures]:
     """Algorithm 4 end to end. Returns (result, hot_phase_stats, hot_feats).
 
     ``result.stats`` covers the full phase only (post line-12 reset);
     ``hot_phase_stats`` carries the hot phase cost for total-cost reporting.
+
+    When ``qtable`` is given, phase 2 scores against the compressed codes
+    (the hot phase stays float32) and, with ``rerank_k > 0``, the pool's
+    head is re-scored exactly from ``x_pad`` before the final top-k.
     """
     n = x_pad.shape[0] - 1
     hot_pool, hot_stats = hot_phase(
@@ -192,11 +217,16 @@ def dynamic_search(
         use_kernel=use_kernel)
     hfeats = hot_features(hot_pool, k)
     state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size)
+    table = x_pad if qtable is None else qtable.with_queries(queries)
     state = _full_phase(
-        x_pad, adj_pad, queries, state, hfeats, tree,
+        table, adj_pad, queries, state, hfeats, tree,
         k=k, eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
         max_hops=max_hops)
-    ids, dists = bs.topk_from_pool(state.pool, k)
+    if qtable is not None and rerank_k > 0:
+        ids, dists = _exact_rerank(x_pad, queries, state.pool,
+                                   k=k, rerank_k=rerank_k)
+    else:
+        ids, dists = bs.topk_from_pool(state.pool, k)
     return (SearchResult(ids=ids, dists=dists, stats=state.stats),
             hot_stats, hfeats)
 
@@ -207,4 +237,5 @@ def config_kwargs(cfg: DQFConfig) -> dict:
         k=cfg.k, hot_pool_size=cfg.hot_pool, full_pool_size=cfg.full_pool,
         eval_gap=cfg.eval_gap, add_step=cfg.add_step,
         tree_depth=cfg.tree_depth, max_hops=cfg.max_hops,
-        hot_mode=cfg.hot_mode)
+        hot_mode=cfg.hot_mode,
+        rerank_k=cfg.quant.rerank_k if cfg.quant.enabled else 0)

@@ -52,12 +52,18 @@ def collect_training_data(
     eval_gap: int, max_hops: int, hot_mode: str = "graph",
     improve_tol: float = 1e-6, batch: int = 256,
 ):
-    """Returns (features (N,6), labels (N,)) for CART training."""
+    """Returns (features (N,6), labels (N,)) for CART training.
+
+    ``x_pad`` may be a quantized score table: when the deployed search
+    scans compressed codes, the tree must see the same (approximate)
+    distance distributions at train time, or its thresholds are
+    systematically shifted.
+    """
     feats_out, labels_out = [], []
     trace_fn = jax.jit(
         lambda q, st, hf: _trace_full_phase(
-            x_pad, adj_pad, q, st, hf, k=k, hops=max_hops))
-    n = x_pad.shape[0] - 1
+            bs.as_view(x_pad, q), adj_pad, q, st, hf, k=k, hops=max_hops))
+    n = bs.table_n(x_pad)
     for s in range(0, queries.shape[0], batch):
         q = jnp.asarray(queries[s: s + batch], jnp.float32)
         hot_pool, _ = hot_phase(

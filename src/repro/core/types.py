@@ -26,6 +26,38 @@ INF_DIST = jnp.float32(3.0e38)
 
 
 @dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Compressed Full Index configuration (see :mod:`repro.quant`).
+
+    ``mode="none"`` keeps the seed behaviour: a float32 Full Index.  With
+    ``"sq8"`` or ``"pq"`` the full-graph phase scores against quantized
+    codes and the top ``rerank_k`` pool entries are re-scored exactly in
+    float32 before the final top-k — the Hot Index always stays float32,
+    so hot-query latency is untouched.
+    """
+
+    mode: str = "none"       # "none" | "sq8" (int8 scalar) | "pq" (product)
+    pq_m: int = 8            # PQ subspaces (must divide the data dim)
+    pq_bits: int = 8         # log2 centroids per subspace (codes are uint8)
+    pq_iters: int = 15       # k-means iterations per subspace
+    rerank_k: int = 64       # exact float32 rerank depth; 0 disables rerank
+    seed: int = 0            # quantizer training seed
+
+    def __post_init__(self):
+        if self.mode not in ("none", "sq8", "pq"):
+            raise ValueError(
+                f"quant mode must be none|sq8|pq, got {self.mode}")
+        if not (1 <= self.pq_bits <= 8):
+            raise ValueError("pq_bits must be in [1, 8] (uint8 codes)")
+        if self.rerank_k < 0:
+            raise ValueError("rerank_k must be >= 0")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+
+@dataclasses.dataclass(frozen=True)
 class DQFConfig:
     """Configuration for the Dual-Index Query Framework (paper Table 4).
 
@@ -54,6 +86,9 @@ class DQFConfig:
 
     # --- workload (§5.1.2) ---
     zipf_beta: float = 1.2
+
+    # --- compressed Full Index (beyond paper; repro.quant) ---
+    quant: QuantConfig = QuantConfig()
 
     def __post_init__(self):
         if self.hot_mode not in ("graph", "mxu"):

@@ -3,6 +3,10 @@
 * :mod:`~repro.kernels.distance` — tiled pairwise squared-L2 (MXU matmul).
 * :mod:`~repro.kernels.fused_scorer` — fused distances + running top-k
   (the beyond-paper MXU hot layer).
+* :mod:`~repro.kernels.sq_distance` — fused int8 dequantize + squared-L2
+  (the compressed Full Index scan).
+* :mod:`~repro.kernels.pq_adc` — PQ asymmetric distances as a one-hot MXU
+  matmul over per-query LUTs.
 * :mod:`~repro.kernels.topk_merge` — bitonic candidate-pool merge.
 * :mod:`~repro.kernels.ops` — dispatching public wrappers.
 * :mod:`~repro.kernels.ref` — pure-jnp oracles (contract + CPU path).

@@ -17,9 +17,12 @@ import jax.numpy as jnp
 from . import ref
 from .distance import pairwise_l2_pallas
 from .fused_scorer import fused_topk_l2_pallas
+from .pq_adc import pq_adc_pallas
+from .sq_distance import sq8_pairwise_l2_pallas
 from .topk_merge import pool_merge_pallas
 
-__all__ = ["pairwise_l2", "fused_topk_l2", "pool_merge", "kernels_native"]
+__all__ = ["pairwise_l2", "fused_topk_l2", "pool_merge", "sq8_pairwise_l2",
+           "pq_adc", "kernels_native"]
 
 
 def kernels_native() -> bool:
@@ -50,6 +53,25 @@ def fused_topk_l2(q: jnp.ndarray, x: jnp.ndarray, *, k: int,
     if m is None:
         return ref.fused_topk_l2(q, x, k=k)
     return fused_topk_l2_pallas(q, x, k=k, bq=bq, bn=bn, interpret=m)
+
+
+def sq8_pairwise_l2(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                    zero: jnp.ndarray, *, interpret: Optional[bool] = None,
+                    bq: int = 128, bn: int = 128) -> jnp.ndarray:
+    m = _mode(interpret)
+    if m is None:
+        return ref.sq8_pairwise_l2(q, codes, scale, zero)
+    return sq8_pairwise_l2_pallas(q, codes, scale, zero, bq=bq, bn=bn,
+                                  interpret=m)
+
+
+def pq_adc(luts: jnp.ndarray, codes: jnp.ndarray, *,
+           interpret: Optional[bool] = None, bq: int = 128,
+           bn: int = 128) -> jnp.ndarray:
+    m = _mode(interpret)
+    if m is None:
+        return ref.pq_adc(luts, codes)
+    return pq_adc_pallas(luts, codes, bq=bq, bn=bn, interpret=m)
 
 
 def pool_merge(pool_dists, pool_ids, cand_dists, cand_ids, *,

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: PQ asymmetric-distance computation via LUT gather.
+
+ADC is a gather-reduce — ``dist[b, i] = Σ_m lut[b, m, codes[i, m]]`` — and
+per-lane gathers are the one thing the VPU hates.  The MXU formulation
+turns the gather into a matmul: a (bn, M) code block expands on the fly to
+a one-hot matrix (bn, M·K) (iota-compare, no HBM traffic), and the output
+tile is one contraction ``lut_block (bq, M·K) · one_hotᵀ (M·K, bn)``.
+Codes stream HBM→VMEM as narrow int blocks (M bytes per row at K ≤ 256),
+so the scan stays bandwidth-compressed like the int8 scorer.
+
+Oracle: :func:`repro.kernels.ref.pq_adc`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pq_adc_pallas"]
+
+
+def _adc_kernel(l_ref, c_ref, o_ref, *, K: int):
+    lut = l_ref[...]                                       # (bq, M·K) f32
+    codes = c_ref[...].astype(jnp.int32)                   # (bn, M) narrow in
+    bn, M = codes.shape
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, M, K), 2)
+    one_hot = (codes[:, :, None] == k_iota).astype(jnp.float32)
+    one_hot = one_hot.reshape(bn, M * K)
+    o_ref[...] = jax.lax.dot_general(
+        lut, one_hot, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (bq, bn) on MXU
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def pq_adc_pallas(luts: jnp.ndarray, codes: jnp.ndarray, *, bq: int = 128,
+                  bn: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """(B, N) ADC distances from (B, M, K) LUTs and (N, M) codes.
+
+    ``codes`` may be uint8 (the resident-table dtype — blocks stream at
+    1 B/code) or any integer type; the kernel widens after the load.
+    """
+    B, M, K = luts.shape
+    N = codes.shape[0]
+    Bp = -(-B // bq) * bq
+    Np = -(-N // bn) * bn
+    # Padded query rows give garbage rows we slice off; padded code rows
+    # one-hot onto code 0 and their columns are sliced off.
+    lp = jnp.zeros((Bp, M * K), jnp.float32).at[:B].set(
+        luts.astype(jnp.float32).reshape(B, M * K))
+    cp = jnp.zeros((Np, M), codes.dtype).at[:N].set(codes)
+
+    out = pl.pallas_call(
+        functools.partial(_adc_kernel, K=K),
+        grid=(Bp // bq, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bq, M * K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, M), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.float32),
+        interpret=interpret,
+    )(lp, cp)
+    return out[:B, :N]

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["pairwise_l2", "fused_topk_l2", "pool_merge",
-           "gather_distances"]
+           "gather_distances", "sq8_pairwise_l2", "pq_adc"]
 
 
 @jax.jit
@@ -60,6 +60,31 @@ def pool_merge(pool_dists, pool_ids, cand_dists, cand_ids):
     order = jnp.argsort(d, axis=1, stable=True)[:, :L]
     return (jnp.take_along_axis(d, order, 1),
             jnp.take_along_axis(i, order, 1))
+
+
+@jax.jit
+def sq8_pairwise_l2(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                    zero: jnp.ndarray) -> jnp.ndarray:
+    """Fused dequantize + squared L2: (B, N) against int8 codes.
+
+    ``codes`` is (N, d) int8 with per-dim affine params ``scale``/``zero``
+    (both (d,)): row i decodes to ``zero + scale * codes[i]``.
+    """
+    x = codes.astype(jnp.float32) * scale + zero
+    return pairwise_l2(q, x)
+
+
+@jax.jit
+def pq_adc(luts: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """PQ asymmetric distance computation: (B, N) LUT-gather sums.
+
+    ``luts`` is (B, M, K) per-query subspace distance tables (see
+    :func:`repro.quant.pq.pq_luts`); ``codes`` is (N, M) integer codes.
+    ``out[b, i] = Σ_m luts[b, m, codes[i, m]]``.
+    """
+    idx = codes[None, :, :, None].astype(jnp.int32)        # (1, N, M, 1)
+    vals = jnp.take_along_axis(luts[:, None], idx, axis=3)  # (B, N, M, 1)
+    return jnp.sum(vals[..., 0], axis=-1)
 
 
 @jax.jit

@@ -1,0 +1,94 @@
+"""Product quantization (PQ) with asymmetric distance computation (ADC).
+
+The dataset's d dims are split into M subspaces of d/M dims; each subspace
+gets a K-centroid k-means codebook, so a vector compresses to M byte codes
+(``d·4 / M`` × compression at K ≤ 256).  At query time the *query stays
+float*: a (M, K) LUT of exact subspace distances is built once per query
+and database distances reduce to M table lookups + adds — the ADC trick
+that makes compressed-domain scanning cheap on any backend and maps to a
+one-hot matmul on the MXU (see :mod:`repro.kernels.pq_adc`).
+
+Training is plain Lloyd k-means per subspace (numpy, chunked assignment);
+the datasets this repo trains on are CPU-sized, and at production scale
+PQ training runs on a sample anyway.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .types import PQCodebook
+
+__all__ = ["train_pq", "pq_encode", "pq_decode", "pq_luts"]
+
+_ASSIGN_CHUNK = 65536
+
+
+def _assign(sub: np.ndarray, cents: np.ndarray) -> np.ndarray:
+    """Nearest-centroid ids (N,) for one subspace, chunked over rows."""
+    out = np.empty(sub.shape[0], np.int64)
+    c_sq = np.sum(cents * cents, axis=1)
+    for s in range(0, sub.shape[0], _ASSIGN_CHUNK):
+        block = sub[s:s + _ASSIGN_CHUNK]
+        d2 = c_sq[None, :] - 2.0 * (block @ cents.T)   # + ||x||² (const/row)
+        out[s:s + _ASSIGN_CHUNK] = np.argmin(d2, axis=1)
+    return out
+
+
+def train_pq(x: np.ndarray, *, m: int, k: int = 256, iters: int = 15,
+             seed: int = 0) -> PQCodebook:
+    """Lloyd k-means per subspace; empty clusters are reseeded."""
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    if d % m != 0:
+        raise ValueError(f"dim {d} not divisible by pq_m={m}")
+    if k > 256:
+        raise ValueError("PQ codes are stored as uint8; need k <= 256")
+    k = min(k, n)
+    dsub = d // m
+    rng = np.random.default_rng(seed)
+    centroids = np.empty((m, k, dsub), np.float32)
+    for j in range(m):
+        sub = np.ascontiguousarray(x[:, j * dsub:(j + 1) * dsub])
+        cents = sub[rng.choice(n, size=k, replace=False)].copy()
+        for _ in range(iters):
+            asg = _assign(sub, cents)
+            sums = np.zeros((k, dsub), np.float64)
+            np.add.at(sums, asg, sub)
+            counts = np.bincount(asg, minlength=k)
+            filled = counts > 0
+            cents[filled] = (sums[filled]
+                             / counts[filled, None]).astype(np.float32)
+            n_empty = int((~filled).sum())
+            if n_empty:
+                cents[~filled] = sub[rng.choice(n, size=n_empty)]
+        centroids[j] = cents
+    return PQCodebook(centroids=centroids)
+
+
+def pq_encode(x: np.ndarray, cb: PQCodebook) -> np.ndarray:
+    """(N, d) float32 → (N, M) uint8 codes."""
+    x = np.asarray(x, np.float32)
+    m, _, dsub = cb.centroids.shape
+    codes = np.empty((x.shape[0], m), np.uint8)
+    for j in range(m):
+        sub = np.ascontiguousarray(x[:, j * dsub:(j + 1) * dsub])
+        codes[:, j] = _assign(sub, cb.centroids[j]).astype(np.uint8)
+    return codes
+
+
+def pq_decode(codes: np.ndarray, cb: PQCodebook) -> np.ndarray:
+    """(N, M) codes → (N, d) float32 centroid reconstruction."""
+    m = cb.centroids.shape[0]
+    parts = [cb.centroids[j][codes[:, j].astype(np.int64)] for j in range(m)]
+    return np.concatenate(parts, axis=1).astype(np.float32)
+
+
+def pq_luts(queries: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """(B, M, K) exact subspace squared-L2 LUTs (traceable, used in-search)."""
+    B = queries.shape[0]
+    m, _, dsub = centroids.shape
+    qs = queries.astype(jnp.float32).reshape(B, m, dsub)
+    diff = qs[:, :, None, :] - centroids[None]
+    return jnp.sum(diff * diff, axis=-1)

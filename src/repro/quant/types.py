@@ -1,0 +1,184 @@
+"""Shared types for the quantized-vector subsystem.
+
+Two representations live side by side:
+
+* **host side** (numpy): :class:`SQCodebook` / :class:`PQCodebook` hold the
+  trained quantizer parameters, :class:`QuantState` bundles them with the
+  encoded dataset for persistence and byte accounting;
+* **device side** (jnp): :class:`SQTable` / :class:`PQTable` are pytrees
+  that plug into the beam search as drop-in replacements for the float32
+  ``x_pad`` vector table.  They expose the *score-table protocol*::
+
+      table.n                        # number of real rows (sentinel = n)
+      table.with_queries(q)          # per-search-view (PQ builds its LUTs)
+      view.gather_score(q, cols)     # (B, C) approx squared-L2 distances
+
+  ``repro.core.beam_search`` dispatches on this protocol: a plain jnp array
+  takes the exact float32 path, anything else is asked to score itself.
+
+Conventions match :mod:`repro.core.types`: row ids are global with sentinel
+``n``; the code tables carry one extra all-zero sentinel row whose decoded
+distance is garbage — every consumer masks sentinel ids to ``INF_DIST``
+before use, so the sentinel row only has to be *gatherable*, not huge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SQCodebook", "PQCodebook", "SQTable", "PQTable", "QuantState",
+           "ScoreTable"]
+
+
+# ------------------------------------------------------------- host codebooks
+class SQCodebook(NamedTuple):
+    """Per-dimension affine int8 scalar quantizer: x ≈ zero + scale · code."""
+
+    scale: np.ndarray   # (d,) float32, strictly positive
+    zero: np.ndarray    # (d,) float32
+
+
+class PQCodebook(NamedTuple):
+    """Product quantizer: M subspaces × K centroids of dim d/M each."""
+
+    centroids: np.ndarray   # (M, K, dsub) float32
+
+    @property
+    def m(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.centroids.shape[1]
+
+
+# ----------------------------------------------------------- device tables
+class SQTable(NamedTuple):
+    """Device-side int8 table implementing the score-table protocol."""
+
+    codes: jnp.ndarray   # (n+1, d) int8; sentinel row n is all zeros
+    scale: jnp.ndarray   # (d,) float32
+    zero: jnp.ndarray    # (d,) float32
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0] - 1
+
+    def with_queries(self, queries: jnp.ndarray) -> "SQTable":
+        return self
+
+    def gather_score(self, queries: jnp.ndarray,
+                     cols: jnp.ndarray) -> jnp.ndarray:
+        """(B, C) squared L2 against the decoded rows ``cols``."""
+        g = (self.codes[cols].astype(jnp.float32) * self.scale + self.zero)
+        diff = g - queries.astype(jnp.float32)[:, None, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+
+class PQView(NamedTuple):
+    """Per-search PQ view: codes + the query batch's distance LUTs."""
+
+    codes: jnp.ndarray   # (n+1, M) uint8 — resident table stays 1 B/code
+    luts: jnp.ndarray    # (B, M, K) float32
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0] - 1
+
+    def with_queries(self, queries: jnp.ndarray) -> "PQView":
+        return self
+
+    def gather_score(self, queries: jnp.ndarray,
+                     cols: jnp.ndarray) -> jnp.ndarray:
+        """ADC: distance(b, i) = Σ_m lut[b, m, codes[i, m]]."""
+        c = self.codes[cols].astype(jnp.int32)            # (B, C, M)
+        vals = jnp.take_along_axis(self.luts[:, None], c[..., None],
+                                   axis=3)                # (B, C, M, 1)
+        return jnp.sum(vals[..., 0], axis=-1)
+
+
+class PQTable(NamedTuple):
+    """Device-side PQ table; builds per-query LUTs at search entry."""
+
+    codes: jnp.ndarray       # (n+1, M) uint8
+    centroids: jnp.ndarray   # (M, K, dsub) float32
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0] - 1
+
+    def with_queries(self, queries: jnp.ndarray) -> PQView:
+        from .pq import pq_luts   # deferred: types ↛ pq at import time
+        return PQView(self.codes, pq_luts(queries, self.centroids))
+
+
+ScoreTable = Union[jnp.ndarray, SQTable, PQTable, PQView]
+
+
+# --------------------------------------------------------------- host bundle
+@dataclasses.dataclass
+class QuantState:
+    """Trained quantizer + encoded dataset (host side, persistable)."""
+
+    mode: str                          # "sq8" | "pq"
+    codes: np.ndarray                  # (n, d) int8 | (n, M) uint8
+    sq: Optional[SQCodebook] = None
+    pq: Optional[PQCodebook] = None
+
+    def nbytes(self) -> int:
+        """Codes + codebook bytes (what a compressed Full Index stores)."""
+        if self.mode == "sq8":
+            extra = self.sq.scale.nbytes + self.sq.zero.nbytes
+        else:
+            extra = self.pq.centroids.nbytes
+        return int(self.codes.nbytes) + int(extra)
+
+    def decode(self) -> np.ndarray:
+        """Reconstruct the float32 approximation of the dataset."""
+        from .sq import sq_decode
+        from .pq import pq_decode
+        if self.mode == "sq8":
+            return sq_decode(self.codes, self.sq)
+        return pq_decode(self.codes, self.pq)
+
+    def device_table(self) -> Union[SQTable, PQTable]:
+        """Upload as a score table with the sentinel row appended."""
+        if self.mode == "sq8":
+            pad = np.zeros((1, self.codes.shape[1]), np.int8)
+            return SQTable(
+                codes=jnp.asarray(np.concatenate([self.codes, pad])),
+                scale=jnp.asarray(self.sq.scale),
+                zero=jnp.asarray(self.sq.zero))
+        pad = np.zeros((1, self.codes.shape[1]), np.uint8)
+        return PQTable(
+            codes=jnp.asarray(np.concatenate([self.codes, pad])),
+            centroids=jnp.asarray(self.pq.centroids))
+
+    # ---------------------------------------------------------- persistence
+    def to_arrays(self, prefix: str = "quant_") -> dict:
+        out = {prefix + "mode": np.array(self.mode),
+               prefix + "codes": self.codes}
+        if self.mode == "sq8":
+            out[prefix + "scale"] = self.sq.scale
+            out[prefix + "zero"] = self.sq.zero
+        else:
+            out[prefix + "centroids"] = self.pq.centroids
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays, prefix: str = "quant_"
+                    ) -> Optional["QuantState"]:
+        if prefix + "mode" not in arrays:
+            return None
+        mode = str(arrays[prefix + "mode"])
+        codes = arrays[prefix + "codes"]
+        if mode == "sq8":
+            return cls(mode, codes, sq=SQCodebook(
+                scale=arrays[prefix + "scale"],
+                zero=arrays[prefix + "zero"]))
+        return cls(mode, codes, pq=PQCodebook(
+            centroids=arrays[prefix + "centroids"]))

@@ -14,6 +14,11 @@ siblings.  The wave engine converts per-lane termination into throughput:
   current best-k (bounded tail latency), counted in ``stats.straggled``.
 
 This is the ANN analogue of token-level continuous batching in LLM serving.
+
+With a quantized Full Index (``cfg.quant``), the wave scores its lanes
+against the compressed score table (int8 dequant / PQ ADC — see
+:mod:`repro.quant`); each lane gets an exact float32 rerank of its pool
+head at retirement, off the hot path of live lanes.
 """
 
 from __future__ import annotations
@@ -73,15 +78,16 @@ class WaveEngine:
     # ------------------------------------------------------------ jitted ops
     def _build_tick(self):
         cfg = self.cfg
-        x_pad = self.dqf._dev["x_pad"]
         adj_pad = self.dqf._dev["adj_pad"]
         tree = self.dqf.tree.arrays if self.dqf.tree is not None else None
 
-        def tick(state: bs.BeamState, queries, hot_first, hot_ratio,
+        def tick(state: bs.BeamState, table, queries, hot_first, hot_ratio,
                  evals_done):
+            # `table` is the float32 x_pad or a quantized score table view
+            # (per-wave PQ LUTs ride along as part of the pytree).
             def one(carry, _):
                 s, ev = carry
-                s = bs.expand_step(x_pad, adj_pad, queries, s)
+                s = bs.expand_step(table, adj_pad, queries, s)
                 s = s._replace(
                     active=s.active & (s.stats.hops < cfg.max_hops))
                 if tree is not None:
@@ -143,7 +149,16 @@ class WaveEngine:
         self._hot_ratio = np.zeros((W,), np.float32)
         self._evals = np.zeros((W,), np.int32)
         self._state = state
+        self._update_table()
         self._refill()
+
+    def _update_table(self):
+        """Refresh the wave's score table (PQ LUTs follow the queries)."""
+        qtable = self.dqf._dev.get("qtable")
+        if qtable is None:
+            self._table = self.dqf._dev["x_pad"]
+        else:
+            self._table = qtable.with_queries(jnp.asarray(self._queries))
 
     def _refill(self):
         """Seed free lanes from the queue (hot phase runs per refill batch)."""
@@ -180,10 +195,33 @@ class WaveEngine:
             self._evals[lane] = 0
             self._lane_meta[lane] = (reqs[j][0], reqs[j][2])
         self._state = jax.tree.map(jnp.asarray, st)
+        self._update_table()
+
+    def _retire_rerank(self, pool_ids: np.ndarray, query: np.ndarray):
+        """Exact float32 rerank of a retiring lane's pool head (host side).
+
+        Retirements are rare relative to ticks, so a per-lane numpy pass
+        keeps the rerank off the jitted wave without a second device round
+        trip.
+        """
+        k = self.cfg.k
+        n = self.dqf.x.shape[0]
+        rr = min(max(self.dqf._rerank_k, k), pool_ids.shape[0])
+        cand = pool_ids[:rr]
+        cand = cand[cand < n]
+        d2 = np.sum((self.dqf.x[cand] - query) ** 2, axis=1)
+        order = np.argsort(d2, kind="stable")[:k]
+        ids = cand[order].astype(np.int32)
+        dists = d2[order].astype(np.float32)
+        if ids.shape[0] < k:
+            pad = k - ids.shape[0]
+            ids = np.concatenate([ids, np.full(pad, n, np.int32)])
+            dists = np.concatenate([dists, np.full(pad, np.inf, np.float32)])
+        return ids, dists
 
     def _tick(self):
         state, evals = self._tick_fn(
-            self._state, jnp.asarray(self._queries),
+            self._state, self._table, jnp.asarray(self._queries),
             jnp.asarray(self._hot_first), jnp.asarray(self._hot_ratio),
             jnp.asarray(self._evals))
         self._state = state
@@ -195,8 +233,12 @@ class WaveEngine:
             if meta is None or active[lane]:
                 continue
             rid, t_in = meta
-            ids = np.asarray(state.pool.ids[lane][: self.cfg.k])
-            dists = np.asarray(state.pool.dists[lane][: self.cfg.k])
+            if self.dqf._rerank_k:
+                ids, dists = self._retire_rerank(
+                    np.asarray(state.pool.ids[lane]), self._queries[lane])
+            else:
+                ids = np.asarray(state.pool.ids[lane][: self.cfg.k])
+                dists = np.asarray(state.pool.dists[lane][: self.cfg.k])
             hops = int(np.asarray(state.stats.hops[lane]))
             self._results[rid] = {"ids": ids, "dists": dists, "hops": hops}
             self.stats.completed += 1

@@ -1,0 +1,3 @@
+# Package marker so `from tests....` imports resolve under the bare
+# `pytest` entry point too (only `python -m pytest` puts the repo root on
+# sys.path by itself).

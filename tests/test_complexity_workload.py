@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.complexity import (miss_probability, optimal_ir_closed_form,
                                    optimal_ir_numeric, search_cost)

@@ -111,6 +111,54 @@ def test_save_load_roundtrip(tmp_path, built_dqf, small_data):
     np.testing.assert_array_equal(a, b)
 
 
+def test_save_load_full_roundtrip(tmp_path, built_dqf, small_data):
+    """Everything persists: full + hot graph, counter, tree, quant codes.
+
+    A reloaded engine must keep per-query early termination (the tree used
+    to be silently dropped) and, when quantized, the compressed codes —
+    asserted via identical `search()` ids before and after.
+    """
+    from repro.core import DQFConfig, QuantConfig, ZipfWorkload
+
+    dqf, wl = built_dqf
+    assert dqf.tree is not None
+    p = str(tmp_path / "full.npz")
+    dqf.save(p)
+    loaded = DQF.load(p, dqf.cfg)
+    assert loaded.tree is not None
+    np.testing.assert_array_equal(np.asarray(loaded.tree.arrays.feature),
+                                  np.asarray(dqf.tree.arrays.feature))
+    assert loaded.tree.depth == dqf.tree.depth
+    np.testing.assert_array_equal(loaded.counter.counts, dqf.counter.counts)
+    q = wl.sample(64)
+    a = dqf.search(q, record=False)
+    b = loaded.search(q, record=False)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    # the restored tree actually terminates lanes, not just exists
+    np.testing.assert_array_equal(np.asarray(a.stats.terminated_early),
+                                  np.asarray(b.stats.terminated_early))
+    assert np.asarray(b.stats.terminated_early).any()
+
+    # quantized variant: codes + codebooks survive the roundtrip too
+    cfg_q = DQFConfig(knn_k=10, out_degree=10, index_ratio=0.03, k=10,
+                      hot_pool=16, full_pool=32, max_hops=100,
+                      n_query_trigger=100_000,
+                      quant=QuantConfig(mode="sq8", rerank_k=32))
+    dq = DQF(cfg_q).build(small_data)
+    wl2 = ZipfWorkload(small_data, seed=21)
+    _, t = wl2.sample(2000, with_targets=True)
+    dq.counter.record(t)
+    dq.rebuild_hot()
+    pq_path = str(tmp_path / "quant.npz")
+    dq.save(pq_path)
+    lq = DQF.load(pq_path, cfg_q)
+    assert lq.quant is not None and lq.quant.mode == "sq8"
+    np.testing.assert_array_equal(lq.quant.codes, dq.quant.codes)
+    np.testing.assert_array_equal(
+        np.asarray(dq.search(q, record=False).ids),
+        np.asarray(lq.search(q, record=False).ids))
+
+
 def test_mxu_hot_mode_matches_graph_recall(small_data):
     """Beyond-paper MXU hot layer ≥ graph hot layer in recall (it's exact)."""
     import dataclasses

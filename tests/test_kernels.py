@@ -6,7 +6,7 @@ Shape/dtype sweeps + hypothesis property tests, per the deliverable spec.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.bitonic import bitonic_sort_kv, next_pow2

@@ -10,7 +10,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.models.attention import chunked_attention, make_pair_schedule
 from repro.models.common import apply_rope, rms_norm, rope_angles

@@ -1,0 +1,275 @@
+"""repro.quant: trainers, Pallas ADC/int8 kernels vs oracles, and the
+quantized Full Index end to end (recall vs float32, compression, rerank,
+persistence, serving)."""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import quant
+from repro.kernels import ops, ref
+from repro.kernels.pq_adc import pq_adc_pallas
+from repro.kernels.sq_distance import sq8_pairwise_l2_pallas
+from repro.core import (DQF, DQFConfig, QuantConfig, ZipfWorkload,
+                        ground_truth, recall_at_k)
+from tests.conftest import make_clustered
+
+RNG = np.random.default_rng(7)
+
+
+# ------------------------------------------------------------ SQ quantizer
+def test_sq_roundtrip_error_bound():
+    x = RNG.standard_normal((400, 24)).astype(np.float32) * 3.0
+    cb = quant.train_sq(x)
+    xhat = quant.sq_decode(quant.sq_encode(x, cb), cb)
+    # Per-dim error is bounded by half a quantization step.
+    assert (np.abs(x - xhat) <= cb.scale[None, :] * 0.5 + 1e-5).all()
+
+
+def test_sq_encode_clips_out_of_range():
+    x = RNG.standard_normal((100, 8)).astype(np.float32)
+    cb = quant.train_sq(x)
+    far = x * 100.0
+    codes = quant.sq_encode(far, cb)
+    assert codes.max() == 127 and codes.min() == -127
+
+
+def test_sq_constant_dimension_survives():
+    x = RNG.standard_normal((50, 4)).astype(np.float32)
+    x[:, 2] = 1.25                       # zero range → eps scale, no nan/inf
+    cb = quant.train_sq(x)
+    xhat = quant.sq_decode(quant.sq_encode(x, cb), cb)
+    assert np.isfinite(xhat).all()
+    np.testing.assert_allclose(xhat[:, 2], 1.25, atol=1e-5)
+
+
+# ------------------------------------------------------------ PQ quantizer
+def test_pq_reconstruction_beats_global_mean():
+    x = make_clustered(n=600, d=24, seed=3)
+    cb = quant.train_pq(x, m=4, k=16, iters=8, seed=0)
+    xhat = quant.pq_decode(quant.pq_encode(x, cb), cb)
+    mse = ((x - xhat) ** 2).mean()
+    mse_mean = ((x - x.mean(0)) ** 2).mean()
+    assert mse < 0.5 * mse_mean
+
+
+def test_pq_more_centroids_reconstruct_better():
+    x = make_clustered(n=600, d=24, seed=4)
+    mses = []
+    for k in (4, 64):
+        cb = quant.train_pq(x, m=4, k=k, iters=8, seed=0)
+        xhat = quant.pq_decode(quant.pq_encode(x, cb), cb)
+        mses.append(((x - xhat) ** 2).mean())
+    assert mses[1] < mses[0]
+
+
+def test_pq_adc_equals_decoded_distances():
+    """The ADC contract: LUT sums == exact distance to the decoded vector."""
+    x = make_clustered(n=300, d=24, seed=5)
+    q = RNG.standard_normal((9, 24)).astype(np.float32)
+    cb = quant.train_pq(x, m=6, k=16, iters=6, seed=0)
+    codes = quant.pq_encode(x, cb)
+    luts = quant.pq_luts(jnp.asarray(q), jnp.asarray(cb.centroids))
+    got = ref.pq_adc(luts, jnp.asarray(codes))
+    want = ref.pairwise_l2(jnp.asarray(q), jnp.asarray(quant.pq_decode(codes, cb)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_pq_rejects_indivisible_dim():
+    x = RNG.standard_normal((64, 10)).astype(np.float32)
+    with pytest.raises(ValueError):
+        quant.train_pq(x, m=3, k=8)
+
+
+# --------------------------------------------------------- kernel parity
+@pytest.mark.parametrize("B,N,d,bq,bn", [
+    (1, 1, 8, 8, 8),           # degenerate
+    (17, 33, 24, 8, 16),       # ragged vs tiles
+    (64, 128, 128, 32, 64),    # aligned
+])
+def test_sq8_kernel_parity(B, N, d, bq, bn):
+    q = RNG.standard_normal((B, d)).astype(np.float32)
+    x = RNG.standard_normal((N, d)).astype(np.float32) * 2.0
+    cb = quant.train_sq(x)
+    codes = jnp.asarray(quant.sq_encode(x, cb))
+    scale, zero = jnp.asarray(cb.scale), jnp.asarray(cb.zero)
+    got = sq8_pairwise_l2_pallas(jnp.asarray(q), codes, scale, zero,
+                                 bq=bq, bn=bn, interpret=True)
+    want = ref.sq8_pairwise_l2(jnp.asarray(q), codes, scale, zero)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,N,M,K,bq,bn,dtype", [
+    (5, 40, 4, 16, 8, 8, np.int32),
+    (17, 70, 6, 32, 8, 32, np.uint8),    # ragged tiles, resident dtype
+    (32, 128, 8, 256, 16, 64, np.uint8), # full uint8 code range
+])
+def test_pq_adc_kernel_parity(B, N, M, K, bq, bn, dtype):
+    luts = jnp.asarray(RNG.standard_normal((B, M, K)).astype(np.float32))
+    codes = jnp.asarray(RNG.integers(0, K, (N, M)).astype(dtype))
+    got = pq_adc_pallas(luts, codes, bq=bq, bn=bn, interpret=True)
+    want = ref.pq_adc(luts, codes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_ops_dispatch_quant_cpu_uses_ref():
+    assert not ops.kernels_native()
+    q = RNG.standard_normal((4, 8)).astype(np.float32)
+    x = RNG.standard_normal((12, 8)).astype(np.float32)
+    cb = quant.train_sq(x)
+    codes = jnp.asarray(quant.sq_encode(x, cb))
+    d1 = ops.sq8_pairwise_l2(jnp.asarray(q), codes, jnp.asarray(cb.scale),
+                             jnp.asarray(cb.zero))
+    d2 = ops.sq8_pairwise_l2(jnp.asarray(q), codes, jnp.asarray(cb.scale),
+                             jnp.asarray(cb.zero), interpret=True, bq=8, bn=8)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-5, atol=1e-3)
+    pcb = quant.train_pq(x, m=4, k=8, iters=4, seed=0)
+    pc = jnp.asarray(quant.pq_encode(x, pcb))                  # uint8
+    luts = quant.pq_luts(jnp.asarray(q), jnp.asarray(pcb.centroids))
+    a1 = ops.pq_adc(luts, pc)
+    a2 = ops.pq_adc(luts, pc, interpret=True, bq=8, bn=8)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=1e-5, atol=1e-3)
+
+
+# -------------------------------------------------------------- config
+def test_quant_config_validation():
+    with pytest.raises(ValueError):
+        QuantConfig(mode="int4")
+    with pytest.raises(ValueError):
+        QuantConfig(pq_bits=9)
+    with pytest.raises(ValueError):
+        QuantConfig(rerank_k=-1)
+    assert not QuantConfig().enabled
+    assert QuantConfig(mode="sq8").enabled
+
+
+# ------------------------------------------------- quantized DQF end-to-end
+@pytest.fixture(scope="module")
+def quant_stack(small_data):
+    """Float32 baseline + sq8 + pq DQFs warmed on the same Zipf stream."""
+    wl = ZipfWorkload(small_data, beta=1.2, sigma=0.05, seed=11)
+    _, targets = wl.sample(3000, with_targets=True)
+    base = dict(knn_k=12, out_degree=12, index_ratio=0.03, k=10,
+                hot_pool=16, full_pool=32, max_hops=120,
+                n_query_trigger=100_000)
+    dqfs = {}
+    for name, qc in (
+            ("float", QuantConfig()),
+            ("sq8", QuantConfig(mode="sq8", rerank_k=32)),
+            ("pq", QuantConfig(mode="pq", pq_m=8, pq_bits=6, pq_iters=10,
+                               rerank_k=32))):
+        dqf = DQF(DQFConfig(**base, quant=qc)).build(small_data)
+        dqf.counter.record(targets)
+        dqf.rebuild_hot()
+        dqfs[name] = dqf
+    return dqfs, wl
+
+
+@pytest.mark.parametrize("mode", ["sq8", "pq"])
+def test_quantized_search_recall_vs_float(quant_stack, small_data, mode):
+    """Acceptance: quantized search + rerank ≥ 0.9 × float32 recall."""
+    dqfs, wl = quant_stack
+    q = wl.sample(128)
+    gt = ground_truth(small_data, q, 10)
+    r_float = recall_at_k(np.asarray(dqfs["float"].search(q, record=False).ids), gt)
+    r_quant = recall_at_k(np.asarray(dqfs[mode].search(q, record=False).ids), gt)
+    assert r_quant >= 0.9 * r_float
+
+
+@pytest.mark.parametrize("mode,min_ratio", [("sq8", 3.0), ("pq", 6.0)])
+def test_index_nbytes_reports_compression(quant_stack, mode, min_ratio):
+    """Acceptance: codes+codebook ≥ 3× smaller than the float32 vectors."""
+    dqf = quant_stack[0][mode]
+    sizes = dqf.index_nbytes()
+    assert sizes["quant"] > 0
+    assert sizes["full_vec"] / sizes["quant"] >= min_ratio
+    assert sizes["compression"] >= min_ratio
+    # the float path reports no quant footprint
+    assert quant_stack[0]["float"].index_nbytes()["quant"] == 0
+
+
+def test_rerank_recovers_exact_order(quant_stack, small_data):
+    """With rerank the returned dists are exact float32 distances."""
+    dqfs, wl = quant_stack
+    q = wl.sample(16)
+    res = dqfs["sq8"].search(q, record=False)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    valid = ids < small_data.shape[0]
+    exact = np.sum(
+        (small_data[np.minimum(ids, small_data.shape[0] - 1)]
+         - q[:, None, :]) ** 2, axis=-1)
+    np.testing.assert_allclose(dists[valid], exact[valid],
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_quantized_save_load_roundtrip(tmp_path, quant_stack):
+    dqfs, wl = quant_stack
+    q = wl.sample(32)
+    for mode in ("sq8", "pq"):
+        p = str(tmp_path / f"{mode}.npz")
+        dqfs[mode].save(p)
+        loaded = DQF.load(p, dqfs[mode].cfg)
+        assert loaded.quant is not None and loaded.quant.mode == mode
+        a = np.asarray(dqfs[mode].search(q, record=False).ids)
+        b = np.asarray(loaded.search(q, record=False).ids)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_load_with_float_cfg_ignores_stored_codes(tmp_path, quant_stack):
+    """cfg decides behaviour: a float32 cfg loads a quantized file exactly."""
+    dqfs, wl = quant_stack
+    p = str(tmp_path / "sq8_as_float.npz")
+    dqfs["sq8"].save(p)
+    loaded = DQF.load(p, dqfs["float"].cfg)
+    assert loaded.quant is None and "qtable" not in loaded._dev
+    q = wl.sample(16)
+    res = loaded.search(q, record=False)
+    ids = np.asarray(res.ids)
+    # float path: returned dists are exact float32 distances, not approx
+    exact = np.sum((loaded.x[ids] - q[:, None, :]) ** 2, axis=-1)
+    np.testing.assert_allclose(np.asarray(res.dists), exact,
+                               rtol=1e-4, atol=1e-2)
+    # and a quant cfg over a float checkpoint fails loudly
+    pf = str(tmp_path / "float.npz")
+    dqfs["float"].save(pf)
+    with pytest.raises(ValueError):
+        DQF.load(pf, dqfs["sq8"].cfg)
+
+
+def test_tree_trains_on_quantized_features(quant_stack, small_data):
+    """fit_tree with quant enabled traces the compressed table and the
+    resulting tree still terminates lanes early without wrecking recall."""
+    dqfs, wl = quant_stack
+    dqf = dqfs["sq8"]
+    try:
+        dqf.fit_tree(wl.sample(300))
+        q = wl.sample(64)
+        gt = ground_truth(small_data, q, 10)
+        res = dqf.search(q, record=False)
+        assert np.asarray(res.stats.terminated_early).any()
+        assert recall_at_k(np.asarray(res.ids), gt) >= 0.8
+    finally:
+        dqf.tree = None                  # leave the shared fixture tree-less
+
+
+def test_wave_engine_scores_quantized_lanes(quant_stack, small_data):
+    from repro.serving.engine import WaveEngine
+    dqfs, wl = quant_stack
+    q = wl.sample(48)
+    gt = ground_truth(small_data, q, 10)
+    eng = WaveEngine(dqfs["sq8"], wave_size=16, tick_hops=8)
+    rids = eng.submit(q)
+    out = eng.run_until_drained()
+    ids = np.stack([out["results"][r]["ids"] for r in rids])
+    r_engine = recall_at_k(ids, gt)
+    r_search = recall_at_k(
+        np.asarray(dqfs["sq8"].search(q, record=False).ids), gt)
+    assert r_engine >= r_search - 0.05
