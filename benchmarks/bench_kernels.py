@@ -8,7 +8,6 @@ from __future__ import annotations
 import time
 
 import numpy as np
-import jax
 
 import jax.numpy as jnp
 
@@ -122,6 +121,11 @@ def bench_engine():
     res = ctx.dqf.search(q, record=False)
     _np.asarray(res.ids)                     # block on the device result
     static_s = _t.perf_counter() - t0
+    from .common import record_metric
+    record_metric("engine", "continuous", qps=round(out["qps"], 1),
+                  p99_ms=round(out["p99_ms"], 2),
+                  straggled=int(out["straggled"]))
+    record_metric("engine", "static", qps=round(256 / static_s, 1))
     rows = [
         f"engine/continuous,{out['wall_s'] / 256 * 1e6:.0f},"
         f"qps={out['qps']:.0f};p99_ms={out['p99_ms']:.1f};"

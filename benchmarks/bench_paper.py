@@ -14,8 +14,8 @@ import numpy as np
 from repro.core import recall_at_k, ground_truth
 from repro.core.decision_tree import FEATURE_NAMES
 
-from .common import (default_config, eval_row, get_context, timed_search,
-                     N_QUERIES)
+from .common import (default_config, eval_row, get_context, record_metric,
+                     timed_search, N_QUERIES)
 
 
 def _rows(*rows):
@@ -79,6 +79,9 @@ def bench_construction():
 def bench_index_size():
     ctx = get_context()
     s = ctx.dqf.index_nbytes()
+    record_metric("index_size", "bytes", **{k: int(v) if k != "compression"
+                                            else round(v, 2)
+                                            for k, v in s.items()})
     return _rows(
         f"index_size/full,{0.0:.1f},bytes={s['full']}",
         f"index_size/hot,{0.0:.1f},bytes={s['hot']};"
@@ -205,6 +208,80 @@ def bench_drift():
         f"drift/rebuilt_hot,{0.0:.1f},dist_comps={dc_fresh:.0f};"
         f"recall={recall_at_k(np.asarray(r_fresh.ids), gt2):.4f};"
         f"rebuild_s={rebuild_s:.3f}")
+
+
+# ------------------------------------------- search under churn (ISSUE 2)
+def bench_churn():
+    """Insert/delete/compact lifecycle: recall and cost under 10% churn.
+
+    A quantized DQF takes a 10% insert + 10% delete wave, compacts, and is
+    compared against a from-scratch rebuild on the same live set — the
+    mutable path must hold recall within a couple of points at a small
+    fraction of the rebuild cost.
+    """
+    from .common import make_dataset
+    from repro.core import DQF, DQFConfig, QuantConfig, ZipfWorkload
+
+    x = make_dataset(n=4000)
+    cfg = DQFConfig(knn_k=16, out_degree=16, index_ratio=0.01, k=10,
+                    hot_pool=32, full_pool=64, max_hops=200,
+                    n_query_trigger=10 ** 9,
+                    quant=QuantConfig(mode="sq8", rerank_k=64))
+    dqf = DQF(cfg).build(x)
+    wl = ZipfWorkload(x, beta=1.2, sigma=0.05, seed=5)
+    _, t = wl.sample(10_000, with_targets=True)
+    dqf.counter.record(t)
+    dqf.rebuild_hot()
+    q = wl.sample(N_QUERIES)
+    gt0 = ground_truth(x, q, cfg.k)
+    r0, t0 = timed_search(lambda qq: dqf.search(qq, record=False), q)
+    rows = [eval_row("churn/before", r0, t0, gt0)]
+
+    rng = np.random.default_rng(6)
+    n_churn = x.shape[0] // 10
+    t_ins = time.perf_counter()
+    dqf.insert(make_dataset(n=n_churn, seed=17))
+    ins_s = time.perf_counter() - t_ins
+    t_del = time.perf_counter()
+    dqf.delete(dqf.store.to_external(
+        rng.choice(x.shape[0], n_churn, replace=False)))
+    del_s = time.perf_counter() - t_del
+
+    live_x = dqf.store.x[dqf.store.alive]
+    gt1 = ground_truth(live_x, q, cfg.k)
+    # map gt over live rows back to store-internal ids for recall_at_k
+    live_ids = dqf.store.live_ids()
+    r1, t1 = timed_search(lambda qq: dqf.search(qq, record=False), q)
+    rows.append(eval_row("churn/after_churn", r1, t1, live_ids[gt1]))
+
+    t_cmp = time.perf_counter()
+    dqf.compact()
+    cmp_s = time.perf_counter() - t_cmp
+    gt2 = ground_truth(dqf.store.x, q, cfg.k)
+    r2, t2 = timed_search(lambda qq: dqf.search(qq, record=False), q)
+    rows.append(eval_row("churn/after_compact", r2, t2, gt2))
+
+    t_rb = time.perf_counter()
+    fresh = DQF(cfg).build(dqf.store.x)
+    # same preference signal as the churned index: true workload targets,
+    # remapped through the stable external ids (deleted targets drop out)
+    _, t_fresh = wl.sample(10_000, with_targets=True)
+    surviving = np.isin(t_fresh, dqf.store.ext_ids)
+    fresh.counter.record(dqf.store.to_internal(t_fresh[surviving]))
+    fresh.rebuild_hot()
+    rebuild_s = time.perf_counter() - t_rb
+    r3, t3 = timed_search(lambda qq: fresh.search(qq, record=False), q)
+    rows.append(eval_row("churn/fresh_rebuild", r3, t3, gt2))
+
+    rows.append(f"churn/mutation_cost,{0.0:.1f},"
+                f"insert_s={ins_s:.2f};delete_s={del_s:.2f};"
+                f"compact_s={cmp_s:.2f};rebuild_s={rebuild_s:.2f}")
+    record_metric("churn", "mutation_cost",
+                  insert_s=round(ins_s, 3), delete_s=round(del_s, 3),
+                  compact_s=round(cmp_s, 3), rebuild_s=round(rebuild_s, 3),
+                  churn_rows=int(n_churn),
+                  index_bytes=int(dqf.index_nbytes()["total"]))
+    return _rows(*rows)
 
 
 from .common import N_HISTORY  # noqa: E402  (used by bench_drift)

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import lru_cache
 
 import numpy as np
 
@@ -74,6 +73,31 @@ def get_context(**cfg_over) -> BenchContext:
     return ctx
 
 
+# ------------------------------------------------------- metrics registry
+# Sections record structured metrics alongside their CSV rows; run.py dumps
+# one BENCH_<section>.json per executed section so the perf trajectory
+# (qps, p99, recall, index bytes) is machine-readable across PRs.
+_METRICS: dict = {}
+
+
+def record_metric(section: str, name: str, **values) -> None:
+    _METRICS.setdefault(section, {})[name] = values
+
+
+def dump_metrics(out_dir: str = ".") -> list:
+    import json
+    import os
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for section, entries in sorted(_METRICS.items()):
+        p = os.path.join(out_dir, f"BENCH_{section}.json")
+        with open(p, "w") as f:
+            json.dump(entries, f, indent=2, sort_keys=True)
+            f.write("\n")
+        paths.append(p)
+    return paths
+
+
 def timed_search(fn, queries, repeats: int = 3):
     """(result, best_seconds) with a warmup call (jit compile excluded)."""
     res = fn(queries)               # warmup/compile
@@ -92,5 +116,9 @@ def eval_row(name, res, seconds, gt, extra=""):
     qps = ids.shape[0] / seconds
     dc = float(np.mean(np.asarray(res.stats.dist_count)))
     us = seconds / ids.shape[0] * 1e6
+    section, _, variant = name.partition("/")
+    record_metric(section, variant or name, qps=round(qps, 1),
+                  recall=round(rec, 4), dist_comps=round(dc, 1),
+                  us_per_query=round(us, 2))
     return (f"{name},{us:.1f},recall={rec:.4f};qps={qps:.0f};"
             f"dist_comps={dc:.0f}{(';' + extra) if extra else ''}")

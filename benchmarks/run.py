@@ -19,6 +19,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_<section>.json files are written")
     args = ap.parse_args()
 
     from . import bench_paper as bp
@@ -36,6 +38,7 @@ def main() -> None:
         ("hot_mode", bp.bench_hot_mode),              # DESIGN §2.1
         ("features", bp.bench_features),              # Table 2
         ("drift", bp.bench_drift),                    # claim 3
+        ("churn", bp.bench_churn),                    # insert/delete/compact
         ("kernels", bk.bench_kernels),                # Pallas layer
         ("quant", bk.bench_quant_scoring),            # compressed scan
         ("engine", bk.bench_engine),                  # serving layer
@@ -54,6 +57,9 @@ def main() -> None:
             failures += 1
             print(f"{name}/ERROR,0,failed")
             traceback.print_exc()
+    from .common import dump_metrics
+    for p in dump_metrics(args.json_dir):
+        print(f"# wrote {p}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -5,7 +5,6 @@ the current artifacts (run after any dryrun sweep).
   PYTHONPATH=src python scripts/refresh_experiments_tables.py
 """
 
-import re
 import sys
 
 sys.path.insert(0, "src")

@@ -111,8 +111,13 @@ def _merge_pool(pool: PoolState, cand_ids, cand_dists, cand_expanded,
 
 
 def init_state(x_pad, queries: jnp.ndarray,
-               entries: jnp.ndarray, pool_size: int) -> BeamState:
-    """Seed every lane's pool with the entry points (Alg 3 line 1)."""
+               entries: jnp.ndarray, pool_size: int,
+               live_pad: Optional[jnp.ndarray] = None) -> BeamState:
+    """Seed every lane's pool with the entry points (Alg 3 line 1).
+
+    ``live_pad`` is the optional (n+1,) liveness bitmap of a mutable store:
+    tombstoned entry points score INF so they never win a pool slot.
+    """
     n = table_n(x_pad)
     B = queries.shape[0]
     E = entries.shape[0]
@@ -120,6 +125,8 @@ def init_state(x_pad, queries: jnp.ndarray,
         raise ValueError(f"entries ({E}) exceed pool size ({pool_size})")
     ids0 = jnp.broadcast_to(entries[None, :], (B, E))
     d2 = score_rows(x_pad, queries, ids0)                        # (B, E)
+    if live_pad is not None:
+        d2 = jnp.where(live_pad[ids0], d2, INF_DIST)
     order = jnp.argsort(d2, axis=1)
     ids0 = jnp.take_along_axis(ids0, order, 1)
     d2 = jnp.take_along_axis(d2, order, 1)
@@ -146,8 +153,15 @@ def init_state(x_pad, queries: jnp.ndarray,
 
 
 def expand_step(x_pad, adj_pad: jnp.ndarray,
-                queries: jnp.ndarray, state: BeamState) -> BeamState:
-    """One expansion per active lane (Alg 3 lines 4-9, batched)."""
+                queries: jnp.ndarray, state: BeamState,
+                live_pad: Optional[jnp.ndarray] = None) -> BeamState:
+    """One expansion per active lane (Alg 3 lines 4-9, batched).
+
+    With ``live_pad``, tombstoned neighbors are treated like sentinels: not
+    scored, never inserted.  Deleted nodes therefore fall out of the search
+    frontier — reachability through them is preserved by the host-side
+    patch-through at delete time (:func:`repro.core.ssg.patch_dead_edges`).
+    """
     n = table_n(x_pad)
     B, L = state.pool.ids.shape
 
@@ -164,6 +178,8 @@ def expand_step(x_pad, adj_pad: jnp.ndarray,
     nbrs = adj_pad[p]                                            # (B, R)
     already = jnp.take_along_axis(state.seen, nbrs, axis=1)      # (B, R)
     valid = (nbrs != n) & (~already) & lane[:, None]
+    if live_pad is not None:
+        valid &= live_pad[nbrs]
     cols = jnp.where(valid, nbrs, n)
     seen = state.seen.at[rows[:, None], cols].set(True)
 
@@ -190,14 +206,15 @@ TermFn = Callable[[BeamState], jnp.ndarray]  # -> (B,) bool "terminate now"
 
 
 def beam_loop(x_pad, adj_pad, queries, state: BeamState, max_hops: int,
-              term_fn: Optional[TermFn] = None) -> BeamState:
+              term_fn: Optional[TermFn] = None,
+              live_pad: Optional[jnp.ndarray] = None) -> BeamState:
     """Run expansions until every lane is done (pool exhausted / term_fn)."""
 
     def cond(s: BeamState):
         return jnp.any(s.active)
 
     def body(s: BeamState):
-        s = expand_step(x_pad, adj_pad, queries, s)
+        s = expand_step(x_pad, adj_pad, queries, s, live_pad)
         s = s._replace(active=s.active & (s.stats.hops < max_hops))
         if term_fn is not None:
             stop = term_fn(s) & s.active
@@ -220,10 +237,12 @@ def topk_from_pool(pool: PoolState, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     jax.jit, static_argnames=("pool_size", "k", "max_hops"))
 def beam_search(x_pad: jnp.ndarray, adj_pad: jnp.ndarray,
                 entries: jnp.ndarray, queries: jnp.ndarray, *,
-                pool_size: int, k: int, max_hops: int = 512) -> SearchResult:
+                pool_size: int, k: int, max_hops: int = 512,
+                live_pad: Optional[jnp.ndarray] = None) -> SearchResult:
     """Traditional beam search (Algorithm 3), batched over queries."""
-    state = init_state(x_pad, queries, entries, pool_size)
-    state = beam_loop(x_pad, adj_pad, queries, state, max_hops)
+    state = init_state(x_pad, queries, entries, pool_size, live_pad)
+    state = beam_loop(x_pad, adj_pad, queries, state, max_hops,
+                      live_pad=live_pad)
     ids, dists = topk_from_pool(state.pool, k)
     return SearchResult(ids=ids, dists=dists, stats=state.stats)
 

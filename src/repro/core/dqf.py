@@ -1,9 +1,9 @@
 """DQF — the Dual-Index Query Framework (paper §4), end to end.
 
-Host-side orchestrator tying together the full NSSG, the hot index, the
-query counter, the decision tree, and the jitted search kernels.  This is
-the single-shard engine; :mod:`repro.serving.sharded` wraps it with
-shard_map for the multi-device deployment.
+Host-side orchestrator tying together the mutable vector store, the full
+NSSG, the hot index, the query counter, the decision tree, and the jitted
+search kernels.  This is the single-shard engine; :mod:`repro.serving.sharded`
+wraps it with shard_map for the multi-device deployment.
 
 Typical flow::
 
@@ -12,6 +12,16 @@ Typical flow::
     dqf.warm(workload.sample(50_000))     # seed counters, build hot index
     dqf.fit_tree(history_queries)         # train the termination tree
     res = dqf.search(queries)             # Algorithm 4
+
+Mutable lifecycle (beyond paper — DGAI/Quake-style update support)::
+
+    ext = dqf.insert(new_rows)            # append + local graph re-link
+    dqf.delete(ext[:10])                  # tombstone + neighbor patch-through
+    dqf.compact()                         # drop tombstones, remap, repair
+
+All storage (rows, quant codes, liveness, stable external ids) lives in
+``dqf.store`` (:class:`repro.store.VectorStore`); device tables are padded
+to the store's capacity and refreshed lazily whenever ``store.epoch`` moves.
 """
 
 from __future__ import annotations
@@ -24,12 +34,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.quant import QuantState, build_quantizer
+from repro.store import VectorStore
 
 from . import beam_search as bs
 from .decision_tree import DecisionTree, TreeArrays, train_tree
 from .dynamic_search import dynamic_search
 from .hot_index import HotIndex, QueryCounter, build_hot_index
-from .ssg import SSGIndex, SSGParams, build_ssg
+from .ssg import (SSGIndex, SSGParams, build_ssg, compact_adjacency,
+                  link_new_rows, medoid, patch_dead_edges,
+                  repair_free_adjacency)
 from .tree_training import collect_training_data
 from .types import DQFConfig, SearchResult
 
@@ -44,19 +57,38 @@ class _Timings:
     quant_train: float = 0.0
 
 
+def _to_free_slots(adj: np.ndarray, n: int) -> np.ndarray:
+    """Normalize an adjacency to the mutable free-slot convention (-1)."""
+    return np.where((adj < 0) | (adj >= n), -1, adj).astype(np.int32)
+
+
 class DQF:
-    """Dual-Index Query Framework over an in-memory vector table."""
+    """Dual-Index Query Framework over a mutable vector store."""
 
     def __init__(self, cfg: DQFConfig | None = None):
         self.cfg = cfg or DQFConfig()
-        self.x: Optional[np.ndarray] = None
+        self.store: Optional[VectorStore] = None
         self.full: Optional[SSGIndex] = None
         self.hot: Optional[HotIndex] = None
         self.tree: Optional[DecisionTree] = None
         self.counter: Optional[QueryCounter] = None
-        self.quant: Optional[QuantState] = None
         self.timings = _Timings()
         self._dev = {}
+        self._dev_epoch = -1
+        self._dev_rows_epoch = -1
+        self._dev_hot_key = None
+        self._hot_token = 0          # bumps whenever self.hot is replaced
+        self._adj_buf: Optional[np.ndarray] = None
+
+    # -------------------------------------------------------------- storage
+    @property
+    def x(self) -> Optional[np.ndarray]:
+        """The store's row table (live + tombstoned rows), treat read-only."""
+        return self.store.x if self.store is not None else None
+
+    @property
+    def quant(self) -> Optional[QuantState]:
+        return self.store.quant if self.store is not None else None
 
     # ------------------------------------------------------------------ build
     @property
@@ -65,47 +97,105 @@ class DQF:
         return SSGParams(knn_k=c.knn_k, out_degree=c.out_degree,
                          alpha_deg=c.alpha_deg)
 
-    def build(self, x: np.ndarray) -> "DQF":
-        """Build the full index (Alg 2 line 2) and init the counter."""
-        self.x = np.ascontiguousarray(x, np.float32)
-        t0 = time.perf_counter()
-        self.full = build_ssg(self.x, self._ssg_params,
-                              n_entry=self.cfg.n_entry)
-        self.timings.full_build = time.perf_counter() - t0
-        self.counter = QueryCounter(self.x.shape[0],
-                                    trigger=self.cfg.n_query_trigger)
-        self._dev["x_pad"] = bs.pad_dataset(jnp.asarray(self.x))
-        self._dev["adj_pad"] = bs.pad_adjacency(jnp.asarray(self.full.adj))
-        self._dev["entries"] = jnp.asarray(self.full.entries)
+    def build(self, x: np.ndarray,
+              ext_ids: Optional[np.ndarray] = None) -> "DQF":
+        """Build the full index (Alg 2 line 2) and init the counter.
+
+        Rebuilding an existing instance replaces the store wholesale: the
+        hot index (whose ids reference the old store) and every cached
+        device table are dropped.
+        """
+        self.hot = None
+        self._dev = {}
+        self._dev_epoch = self._dev_rows_epoch = -1
+        self._dev_hot_key = None
+        quant = None
+        x = np.ascontiguousarray(x, np.float32)
         if self.cfg.quant.enabled:
             t0 = time.perf_counter()
-            self.quant = build_quantizer(self.x, self.cfg.quant)
+            quant = build_quantizer(x, self.cfg.quant)
             self.timings.quant_train = time.perf_counter() - t0
-            self._dev["qtable"] = self.quant.device_table()
+        self.store = VectorStore(x, ext_ids=ext_ids, quant=quant)
+        t0 = time.perf_counter()
+        built = build_ssg(self.store.x, self._ssg_params,
+                          n_entry=self.cfg.n_entry)
+        self.timings.full_build = time.perf_counter() - t0
+        self._set_full_adj(_to_free_slots(built.adj, built.n),
+                           built.entries)
+        self.counter = QueryCounter(self.store.n,
+                                    trigger=self.cfg.n_query_trigger)
+        self._sync_device()
         return self
 
-    @property
-    def hot_size(self) -> int:
-        return max(self.cfg.k + 1,
-                   int(round(self.cfg.index_ratio * self.x.shape[0])))
+    def _set_full_adj(self, adj: np.ndarray, entries: np.ndarray) -> None:
+        """Install a full-graph adjacency into the capacity-sized host
+        buffer (so inserts extend it by slice instead of copying it)."""
+        n = adj.shape[0]
+        self._adj_buf = np.full((self.store.capacity, adj.shape[1]), -1,
+                                np.int32)
+        self._adj_buf[:n] = adj
+        self.full = SSGIndex(adj=self._adj_buf[:n], entries=entries, n=n)
 
-    def rebuild_hot(self, hot_ids: Optional[np.ndarray] = None) -> HotIndex:
-        """Alg 2 lines 6-10 (hot_ids override = explicit head selection)."""
-        if hot_ids is None:
-            hot_ids = self.counter.top(self.hot_size)
-        version = (self.hot.version + 1) if self.hot else 0
-        self.hot = build_hot_index(self.x, hot_ids, self._ssg_params,
-                                   n_entry=self.cfg.n_entry, version=version)
-        self.timings.hot_build = self.hot.build_seconds
-        self.counter.reset_trigger()
-        n = self.x.shape[0]
-        self._dev["x_hot_pad"] = bs.pad_dataset(jnp.asarray(self.x[self.hot.ids]))
+    # --------------------------------------------------------- device tables
+    def _sync_device(self, force: bool = False) -> None:
+        """Refresh padded device tables when the store epoch moved.
+
+        Tables are padded to ``store.capacity`` (sentinel id = capacity), so
+        inserts within capacity and all deletes keep every jitted search
+        shape stable — only the table *contents* are re-uploaded, and only
+        the tables a mutation actually touched: the big row/code tables
+        follow ``store.rows_epoch`` (deletes skip them), the graph/liveness
+        tables follow ``store.epoch``, and the hot tables follow the hot
+        index identity + capacity.
+        """
+        st = self.store
+        if force or self._dev_epoch != st.epoch:
+            if force or self._dev_rows_epoch != st.rows_epoch:
+                self._dev["x_pad"] = st.padded_rows()
+                if st.quant is not None and self.cfg.quant.enabled:
+                    self._dev["qtable"] = st.padded_quant_table()
+                else:
+                    self._dev.pop("qtable", None)
+                self._dev_rows_epoch = st.rows_epoch
+            self._dev["adj_pad"] = st.pad_adjacency(self.full.adj)
+            self._dev["entries"] = jnp.asarray(self.full.entries)
+            self._dev["live_pad"] = st.padded_live()
+            self._dev_epoch = st.epoch
+        if self.hot is not None:
+            key = (self._hot_token, st.capacity)
+            if force or self._dev_hot_key != key:
+                self._sync_hot_device()
+                self._dev_hot_key = key
+
+    def _sync_hot_device(self) -> None:
+        st = self.store
+        self._dev["x_hot_pad"] = bs.pad_dataset(
+            jnp.asarray(st.x[self.hot.ids]))
         self._dev["adj_hot_pad"] = bs.pad_adjacency(
             jnp.asarray(self.hot.graph.adj))
         self._dev["hot_ids_pad"] = jnp.concatenate(
             [jnp.asarray(self.hot.ids, jnp.int32),
-             jnp.asarray([n], jnp.int32)])
+             jnp.asarray([st.capacity], jnp.int32)])
         self._dev["hot_entries"] = jnp.asarray(self.hot.graph.entries)
+
+    # ------------------------------------------------------------- hot index
+    @property
+    def hot_size(self) -> int:
+        live = self.store.live_count
+        return min(live, max(self.cfg.k + 1,
+                             int(round(self.cfg.index_ratio * live))))
+
+    def rebuild_hot(self, hot_ids: Optional[np.ndarray] = None) -> HotIndex:
+        """Alg 2 lines 6-10 (hot_ids override = explicit head selection)."""
+        if hot_ids is None:
+            hot_ids = self.counter.top(self.hot_size, alive=self.store.alive)
+        version = (self.hot.version + 1) if self.hot else 0
+        self.hot = build_hot_index(self.store.x, hot_ids, self._ssg_params,
+                                   n_entry=self.cfg.n_entry, version=version)
+        self._hot_token += 1
+        self.timings.hot_build = self.hot.build_seconds
+        self.counter.reset_trigger()
+        self._sync_device()
         return self.hot
 
     def warm(self, queries: np.ndarray, targets: Optional[np.ndarray] = None
@@ -126,6 +216,7 @@ class DQF:
                  min_leaf: int = 16) -> DecisionTree:
         """Paper §4.3.2: sample historical queries, dedup, trace, fit CART."""
         self._require(hot=True)
+        self._sync_device()
         q = np.asarray(history_queries, np.float32)
         if dedup:
             q = np.unique(q, axis=0)
@@ -140,7 +231,8 @@ class DQF:
             self._dev["x_hot_pad"], self._dev["adj_hot_pad"],
             self._dev["hot_ids_pad"], self._dev["hot_entries"], q,
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
-            eval_gap=c.eval_gap, max_hops=c.max_hops, hot_mode="graph")
+            eval_gap=c.eval_gap, max_hops=c.max_hops, hot_mode="graph",
+            live_pad=self._dev["live_pad"])
         self.tree = train_tree(feats, labels,
                                max_depth=max_depth or c.tree_depth,
                                min_leaf=min_leaf)
@@ -153,6 +245,7 @@ class DQF:
                ) -> SearchResult:
         """Dynamic dual-index search (Algorithm 4)."""
         self._require(hot=True)
+        self._sync_device()
         c = self.cfg
         res, hot_stats, _ = dynamic_search(
             self._dev["x_pad"], self._dev["adj_pad"],
@@ -164,7 +257,8 @@ class DQF:
             eval_gap=c.eval_gap, add_step=c.add_step,
             tree_depth=c.tree_depth, max_hops=c.max_hops,
             hot_mode=c.hot_mode, use_kernel=use_kernel,
-            qtable=self._dev.get("qtable"), rerank_k=self._rerank_k)
+            qtable=self._dev.get("qtable"), rerank_k=self._rerank_k,
+            live_pad=self._dev["live_pad"])
         if record:
             self.counter.record(np.asarray(res.ids))
             if auto_rebuild and self.counter.due:       # Alg 2 line 5
@@ -174,6 +268,7 @@ class DQF:
     def search_dual_beam(self, queries: np.ndarray) -> SearchResult:
         """Fig 3 ablation: dual index + traditional beam search (no tree)."""
         self._require(hot=True)
+        self._sync_device()
         c = self.cfg
         res, _, _ = dynamic_search(
             self._dev["x_pad"], self._dev["adj_pad"],
@@ -184,23 +279,136 @@ class DQF:
             eval_gap=c.eval_gap, add_step=c.add_step,
             tree_depth=c.tree_depth, max_hops=c.max_hops,
             hot_mode=c.hot_mode,
-            qtable=self._dev.get("qtable"), rerank_k=self._rerank_k)
+            qtable=self._dev.get("qtable"), rerank_k=self._rerank_k,
+            live_pad=self._dev["live_pad"])
         return res
 
     def search_baseline(self, queries: np.ndarray,
                         pool_size: Optional[int] = None) -> SearchResult:
         """Plain NSSG beam search over the full index (Algorithm 3)."""
         self._require()
+        self._sync_device()
         return bs.beam_search(
             self._dev["x_pad"], self._dev["adj_pad"], self._dev["entries"],
             jnp.asarray(queries, jnp.float32),
             pool_size=pool_size or self.cfg.full_pool, k=self.cfg.k,
-            max_hops=self.cfg.max_hops)
+            max_hops=self.cfg.max_hops, live_pad=self._dev["live_pad"])
+
+    # ------------------------------------------------------ mutable lifecycle
+    def insert(self, rows: np.ndarray,
+               ext_ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Append rows; returns their stable external ids.
+
+        Storage: rows (and quant codes, encoded with the existing codebooks)
+        are appended to the store.  Graph: each new node gets search-based
+        neighbor candidates and an SSG-pruned out-edge set, and its chosen
+        neighbors gain reverse edges (:func:`repro.core.ssg.link_new_rows`).
+        Device tables refresh lazily at the next search.
+        """
+        self._require()
+        rows = np.atleast_2d(np.ascontiguousarray(rows, np.float32))
+        start = self.store.n
+        new_ext = self.store.add(rows, ext_ids)
+        n_new = self.store.n
+        if self._adj_buf.shape[0] < self.store.capacity:   # buffers grew
+            buf = np.full((self.store.capacity, self._adj_buf.shape[1]),
+                          -1, np.int32)
+            buf[:start] = self._adj_buf[:start]
+            self._adj_buf = buf
+        self._adj_buf[start:n_new] = -1
+        adj = self._adj_buf[:n_new]
+        link_new_rows(self.store.x, adj, np.arange(start, n_new),
+                      self._ssg_params, self.full.entries,
+                      alive=self.store.alive)
+        self.full = SSGIndex(adj=adj, entries=self.full.entries, n=n_new)
+        self.counter.grow(n_new)
+        return new_ext
+
+    def delete(self, ext_ids: np.ndarray) -> int:
+        """Tombstone rows by external id; returns the number deleted.
+
+        The rows stay gatherable (search masks them everywhere) and their
+        in-neighbors inherit their live out-edges so reachability through
+        the tombstones survives.  If a deleted row was in the hot index,
+        the hot index is rebuilt immediately (it is tiny).  A delete that
+        would leave fewer than two live rows is refused *before* any
+        mutation (an index that empty needs a rebuild, not a delete).
+        """
+        self._require()
+        requested = np.unique(np.asarray(ext_ids).reshape(-1))
+        if self.store.live_count - requested.size < 2:
+            raise ValueError(
+                f"deleting {requested.size} of {self.store.live_count} live "
+                "rows would leave an unsearchable index — rebuild instead")
+        dead = self.store.mark_dead(ext_ids)
+        patch_dead_edges(self.store.x, self.full.adj, dead, self.store.alive)
+        self._refresh_entries()
+        if self.hot is not None and np.isin(dead, self.hot.ids).any():
+            self.rebuild_hot()
+        return int(dead.size)
+
+    def _refresh_entries(self) -> None:
+        """Keep the entry set on live nodes (re-draw tombstoned entries)."""
+        ent = self.full.entries
+        keep = ent[self.store.alive[ent]]
+        if keep.size == ent.size:
+            return
+        live = self.store.live_ids()
+        pool = np.setdiff1d(live, keep)
+        rng = np.random.default_rng(int(self.store.epoch))
+        need = min(ent.size - keep.size, pool.size)
+        extra = rng.choice(pool, size=need, replace=False) if need else []
+        self.full = SSGIndex(
+            adj=self.full.adj,
+            entries=np.unique(np.concatenate([keep, extra])).astype(np.int32),
+            n=self.full.n)
+
+    def compact(self) -> dict:
+        """Rewrite storage without tombstones; preserves external ids.
+
+        Internal ids shift (the store returns the remap); the graph, hot
+        index, and counter are remapped in place and graph connectivity is
+        re-verified.  In-flight search state (e.g. live serving waves) is
+        invalidated — drain engines first.
+        """
+        self._require()
+        res = self.store.compact()
+        remap = res.remap
+        adj = compact_adjacency(self.full.adj, remap)
+        ent = remap[self.full.entries]
+        ent = np.unique(ent[ent >= 0]).astype(np.int32)
+        if ent.size == 0:
+            ent = np.asarray([medoid(self.store.x)], np.int32)
+        adj = repair_free_adjacency(self.store.x, adj, int(ent[0]))
+        self._set_full_adj(adj, ent)
+        self.counter.remap(remap)
+        if self.hot is not None:
+            new_hot = remap[self.hot.ids]
+            if (new_hot >= 0).all():
+                self.hot = dataclasses.replace(
+                    self.hot, ids=new_hot.astype(np.int32))
+                self._hot_token += 1
+            else:                       # unreachable if delete() rebuilt, but
+                self.rebuild_hot()      # stay safe for hot_ids overrides
+        self._sync_device()
+        return {"dropped": res.dropped, "n": self.store.n, "remap": remap}
+
+    def to_external(self, internal_ids: np.ndarray) -> np.ndarray:
+        """Map search-result internal ids to stable external ids.
+
+        Sentinel / padding ids (≥ store.n) map to -1.
+        """
+        ids = np.asarray(internal_ids)
+        valid = (ids >= 0) & (ids < self.store.n)
+        out = np.full(ids.shape, -1, np.int64)
+        out[valid] = self.store.to_external(ids[valid])
+        return out
 
     # ------------------------------------------------------------------ misc
     @property
     def _rerank_k(self) -> int:
-        return self.cfg.quant.rerank_k if self.quant is not None else 0
+        return self.cfg.quant.rerank_k if self._dev.get("qtable") is not None \
+            else 0
 
     def index_nbytes(self) -> dict:
         """Byte accounting per component.
@@ -212,10 +420,11 @@ class DQF:
         index footprint (graphs + codes); ``compression`` = full_vec /
         quant.
         """
+        st = self.store
         out = {"full": int(self.full.adj.nbytes) if self.full else 0,
                "hot": int(self.hot.nbytes()) if self.hot else 0,
-               "full_vec": int(self.x.nbytes) if self.x is not None else 0,
-               "quant": int(self.quant.nbytes()) if self.quant else 0}
+               "full_vec": int(st.x.nbytes) if st is not None else 0,
+               "quant": int(st.quant.nbytes()) if st and st.quant else 0}
         out["total"] = out["full"] + out["hot"] + out["quant"]
         out["compression"] = (out["full_vec"] / out["quant"]
                               if out["quant"] else 1.0)
@@ -223,9 +432,11 @@ class DQF:
 
     def save(self, path: str) -> None:
         self._require(hot=False)
-        arrs = {"x": self.x, "full_adj": self.full.adj,
-                "full_entries": self.full.entries,
-                "counts": self.counter.counts}
+        arrs = self.store.to_arrays()
+        arrs.update(full_adj=self.full.adj,
+                    full_entries=self.full.entries,
+                    counts=self.counter.counts,
+                    counter_since=np.int64(self.counter.since_rebuild))
         if self.hot is not None:
             arrs.update(hot_adj=self.hot.graph.adj,
                         hot_entries=self.hot.graph.entries,
@@ -240,23 +451,20 @@ class DQF:
                         tree_value=np.asarray(t.value),
                         tree_depth=np.int64(self.tree.depth),
                         tree_importance=self.tree.feature_importance)
-        if self.quant is not None:
-            arrs.update(self.quant.to_arrays())
         np.savez_compressed(path, **arrs)
 
     @classmethod
     def load(cls, path: str, cfg: DQFConfig | None = None) -> "DQF":
         z = np.load(path)
         self = cls(cfg)
-        self.x = z["x"]
-        self.full = SSGIndex(adj=z["full_adj"], entries=z["full_entries"],
-                             n=self.x.shape[0])
-        self.counter = QueryCounter(self.x.shape[0],
-                                    trigger=self.cfg.n_query_trigger)
+        self.store = VectorStore.from_arrays(z)
+        n = self.store.n
+        self._set_full_adj(_to_free_slots(z["full_adj"], n),
+                           z["full_entries"])
+        self.counter = QueryCounter(n, trigger=self.cfg.n_query_trigger)
         self.counter.counts = z["counts"]
-        self._dev["x_pad"] = bs.pad_dataset(jnp.asarray(self.x))
-        self._dev["adj_pad"] = bs.pad_adjacency(jnp.asarray(self.full.adj))
-        self._dev["entries"] = jnp.asarray(self.full.entries)
+        if "counter_since" in z:
+            self.counter.since_rebuild = int(z["counter_since"])
         if "tree_feature" in z:
             arrays = TreeArrays(
                 feature=jnp.asarray(z["tree_feature"]),
@@ -267,40 +475,33 @@ class DQF:
             self.tree = DecisionTree(
                 arrays=arrays, depth=int(z["tree_depth"]),
                 feature_importance=z["tree_importance"])
-        if self.cfg.quant.enabled:
+        if not self.cfg.quant.enabled:
             # cfg decides the search behaviour; the checkpoint provides the
-            # artifacts.  A float32 cfg ignores stored codes (x is exact).
-            self.quant = QuantState.from_arrays(z)
-            if self.quant is None:
+            # artifacts.  A float32 cfg drops stored codes (x is exact).
+            self.store.quant = None
+        else:
+            if self.store.quant is None:
                 raise ValueError(
                     f"cfg requests quant mode {self.cfg.quant.mode!r} but "
                     f"{path} holds no quantizer — rebuild with build()")
-            if self.quant.mode != self.cfg.quant.mode:
+            if self.store.quant.mode != self.cfg.quant.mode:
                 raise ValueError(
                     f"cfg quant mode {self.cfg.quant.mode!r} != saved "
-                    f"{self.quant.mode!r}")
-            if self.quant.mode == "pq":
-                m, kk = self.quant.pq.m, self.quant.pq.k
-                want_k = min(2 ** self.cfg.quant.pq_bits, self.x.shape[0])
+                    f"{self.store.quant.mode!r}")
+            if self.store.quant.mode == "pq":
+                m, kk = self.store.quant.pq.m, self.store.quant.pq.k
+                want_k = min(2 ** self.cfg.quant.pq_bits, n)
                 if (m, kk) != (self.cfg.quant.pq_m, want_k):
                     raise ValueError(
                         f"cfg PQ shape (m={self.cfg.quant.pq_m}, "
                         f"k={want_k}) != saved (m={m}, k={kk})")
-            self._dev["qtable"] = self.quant.device_table()
         if "hot_ids" in z:
             graph = SSGIndex(adj=z["hot_adj"], entries=z["hot_entries"],
                              n=int(z["hot_ids"].shape[0]))
             self.hot = HotIndex(graph=graph, ids=z["hot_ids"],
                                 build_seconds=0.0,
                                 version=int(z["hot_version"]))
-            n = self.x.shape[0]
-            self._dev["x_hot_pad"] = bs.pad_dataset(
-                jnp.asarray(self.x[self.hot.ids]))
-            self._dev["adj_hot_pad"] = bs.pad_adjacency(jnp.asarray(graph.adj))
-            self._dev["hot_ids_pad"] = jnp.concatenate(
-                [jnp.asarray(self.hot.ids, jnp.int32),
-                 jnp.asarray([n], jnp.int32)])
-            self._dev["hot_entries"] = jnp.asarray(graph.entries)
+        self._sync_device(force=True)
         return self
 
     def _require(self, hot: bool = False) -> None:

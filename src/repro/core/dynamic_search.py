@@ -82,19 +82,26 @@ def hot_phase(x_hot_pad, adj_hot_pad, hot_entries, queries, *, pool_size,
 
 
 def _seed_full_state(hot_pool: PoolState, hot_ids_pad: jnp.ndarray,
-                     n: int, pool_size: int) -> bs.BeamState:
+                     n: int, pool_size: int,
+                     live_pad: Optional[jnp.ndarray] = None) -> bs.BeamState:
     """Map the hot pool to global ids and seed the phase-2 state.
 
     Implements Alg 4 line 11 ("reset visit status of nodes in L"): all
-    entries arrive unexpanded.
+    entries arrive unexpanded.  ``live_pad`` masks hot results whose global
+    row was tombstoned after the hot index was last rebuilt.
     """
     B, s_l = hot_pool.ids.shape
     gids = hot_ids_pad[hot_pool.ids]                      # (B, s_l) global
     gids = jnp.where(hot_pool.dists >= INF_DIST, n, gids).astype(jnp.int32)
+    dists = hot_pool.dists
+    if live_pad is not None:
+        dead = ~live_pad[gids]
+        gids = jnp.where(dead, n, gids)
+        dists = jnp.where(dead, INF_DIST, dists)
     take = min(s_l, pool_size)
-    order = jnp.argsort(hot_pool.dists, axis=1)[:, :take]
+    order = jnp.argsort(dists, axis=1)[:, :take]
     gids = jnp.take_along_axis(gids, order, 1)
-    gdist = jnp.take_along_axis(hot_pool.dists, order, 1)
+    gdist = jnp.take_along_axis(dists, order, 1)
     pad = pool_size - take
     pool = PoolState(
         ids=jnp.concatenate([gids, jnp.full((B, pad), n, jnp.int32)], 1),
@@ -116,7 +123,8 @@ def _seed_full_state(hot_pool: PoolState, hot_ids_pad: jnp.ndarray,
 
 
 def _exact_rerank(x_pad, queries, pool: PoolState, *, k: int,
-                  rerank_k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+                  rerank_k: int, live_pad: Optional[jnp.ndarray] = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Re-score the pool's best ``rerank_k`` entries in float32, keep top-k.
 
     The quantized full phase ranks the pool by approximate (compressed-
@@ -129,6 +137,8 @@ def _exact_rerank(x_pad, queries, pool: PoolState, *, k: int,
     ids = pool.ids[:, :rr]
     d2 = bs.score_rows(x_pad, queries, ids)
     d2 = jnp.where(ids == n, INF_DIST, d2)
+    if live_pad is not None:
+        d2 = jnp.where(live_pad[ids], d2, INF_DIST)
     order = jnp.argsort(d2, axis=1)[:, :k]
     return (jnp.take_along_axis(ids, order, 1),
             jnp.take_along_axis(d2, order, 1))
@@ -137,7 +147,8 @@ def _exact_rerank(x_pad, queries, pool: PoolState, *, k: int,
 def _full_phase(x_pad, adj_pad, queries, state: bs.BeamState,
                 hot: HotFeatures, tree: Optional[TreeArrays], *,
                 k: int, eval_gap: int, add_step: int, tree_depth: int,
-                max_hops: int) -> bs.BeamState:
+                max_hops: int,
+                live_pad: Optional[jnp.ndarray] = None) -> bs.BeamState:
     """Phase 2 with periodic decision-tree termination checks."""
     B = queries.shape[0]
     dstate = DynamicState(
@@ -150,7 +161,7 @@ def _full_phase(x_pad, adj_pad, queries, state: bs.BeamState,
         return jnp.any(ds.beam.active)
 
     def body(ds: DynamicState):
-        s = bs.expand_step(x_pad, adj_pad, queries, ds.beam)
+        s = bs.expand_step(x_pad, adj_pad, queries, ds.beam, live_pad)
         s = s._replace(active=s.active & (s.stats.hops < max_hops))
         evals_done, stop_at = ds.evals_done, ds.stop_at
         if tree is not None:
@@ -200,6 +211,7 @@ def dynamic_search(
     use_kernel: bool = False,
     qtable=None,                   # quantized score table (repro.quant)
     rerank_k: int = 0,
+    live_pad: Optional[jnp.ndarray] = None,   # (n+1,) liveness bitmap
 ) -> tuple[SearchResult, SearchStats, HotFeatures]:
     """Algorithm 4 end to end. Returns (result, hot_phase_stats, hot_feats).
 
@@ -216,15 +228,16 @@ def dynamic_search(
         pool_size=hot_pool_size, max_hops=max_hops, mode=hot_mode,
         use_kernel=use_kernel)
     hfeats = hot_features(hot_pool, k)
-    state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size)
+    state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size,
+                             live_pad)
     table = x_pad if qtable is None else qtable.with_queries(queries)
     state = _full_phase(
         table, adj_pad, queries, state, hfeats, tree,
         k=k, eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
-        max_hops=max_hops)
+        max_hops=max_hops, live_pad=live_pad)
     if qtable is not None and rerank_k > 0:
         ids, dists = _exact_rerank(x_pad, queries, state.pool,
-                                   k=k, rerank_k=rerank_k)
+                                   k=k, rerank_k=rerank_k, live_pad=live_pad)
     else:
         ids, dists = bs.topk_from_pool(state.pool, k)
     return (SearchResult(ids=ids, dists=dists, stats=state.stats),

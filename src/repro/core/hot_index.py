@@ -31,26 +31,66 @@ class QueryCounter:
         self.since_rebuild = 0
 
     def record(self, ids: np.ndarray) -> None:
-        """Increment counts for each node access (returned result ids)."""
-        ids = np.asarray(ids).reshape(-1)
-        ids = ids[(ids >= 0) & (ids < self.n)]
-        np.add.at(self.counts, ids, 1.0)
-        self.since_rebuild += int(ids.size)
+        """Increment counts for each node access (returned result ids).
+
+        ``ids`` is one row of result ids per query — (B, k) from a search,
+        or (B,) of single targets from a history stream.  The Alg 2 trigger
+        counts *queries* (``n_query``), not result ids, so ``since_rebuild``
+        advances by the number of rows, while every id feeds the counts.
+        """
+        ids = np.asarray(ids)
+        n_queries = int(ids.shape[0]) if ids.ndim >= 1 else 1
+        flat = ids.reshape(-1)
+        flat = flat[(flat >= 0) & (flat < self.n)]
+        np.add.at(self.counts, flat, 1.0)
+        self.since_rebuild += n_queries
 
     @property
     def due(self) -> bool:
         return self.since_rebuild > self.trigger          # Alg 2 line 5
 
-    def top(self, n_idx: int) -> np.ndarray:
-        """Alg 2 lines 6-7: ids of the ``n_idx`` most-accessed nodes."""
-        n_idx = min(n_idx, self.n)
-        part = np.argpartition(-self.counts, n_idx - 1)[:n_idx]
-        return part[np.argsort(-self.counts[part], kind="stable")]
+    def top(self, n_idx: int,
+            alive: np.ndarray | None = None) -> np.ndarray:
+        """Alg 2 lines 6-7: ids of the ``n_idx`` most-accessed nodes.
+
+        With an ``alive`` bitmap, tombstoned rows are never promoted no
+        matter how hot their history was.
+        """
+        if alive is None:
+            counts = self.counts
+            n_idx = min(n_idx, self.n)
+        else:
+            counts = np.where(alive, self.counts, -np.inf)
+            n_idx = min(n_idx, int(alive.sum()))
+        part = np.argpartition(-counts, n_idx - 1)[:n_idx]
+        return part[np.argsort(-counts[part], kind="stable")]
 
     def reset_trigger(self) -> None:                      # Alg 2 line 10
         self.since_rebuild = 0
         if self.decay != 1.0:
             self.counts *= self.decay
+
+    # ------------------------------------------------- mutable-store support
+    def grow(self, n_new: int) -> None:
+        """Extend the id space after inserts (new rows start cold)."""
+        if n_new < self.n:
+            raise ValueError(f"grow to {n_new} < current {self.n}")
+        self.counts = np.concatenate(
+            [self.counts, np.zeros(n_new - self.n, np.float64)])
+        self.n = n_new
+
+    def remap(self, remap: np.ndarray) -> None:
+        """Apply a compaction remap (old→new id, -1 dropped) to the counts.
+
+        Preference mass on surviving rows is preserved exactly, so the next
+        rebuild sees the same hot set it would have pre-compaction; the
+        trigger clock keeps running (compaction is not a rebuild).
+        """
+        keep = remap >= 0
+        new_counts = np.zeros(int(keep.sum()), np.float64)
+        new_counts[remap[keep]] = self.counts[keep]
+        self.counts = new_counts
+        self.n = int(new_counts.shape[0])
 
 
 @dataclasses.dataclass

@@ -33,9 +33,10 @@ class TraceRecord(NamedTuple):
     active: jnp.ndarray      # (T, B)
 
 
-def _trace_full_phase(x_pad, adj_pad, queries, state, hfeats, *, k, hops):
+def _trace_full_phase(x_pad, adj_pad, queries, state, hfeats, *, k, hops,
+                      live_pad=None):
     def step(s, _):
-        s = bs.expand_step(x_pad, adj_pad, queries, s)
+        s = bs.expand_step(x_pad, adj_pad, queries, s, live_pad)
         feats = feature_matrix(hfeats, s.pool, s.stats, k)
         kth = s.pool.dists[:, min(k, s.pool.dists.shape[1]) - 1]
         rec = (feats, kth, s.stats.dist_count, s.active)
@@ -50,7 +51,7 @@ def collect_training_data(
     x_pad, adj_pad, x_hot_pad, adj_hot_pad, hot_ids_pad, hot_entries,
     queries: np.ndarray, *, k: int, hot_pool_size: int, full_pool_size: int,
     eval_gap: int, max_hops: int, hot_mode: str = "graph",
-    improve_tol: float = 1e-6, batch: int = 256,
+    improve_tol: float = 1e-6, batch: int = 256, live_pad=None,
 ):
     """Returns (features (N,6), labels (N,)) for CART training.
 
@@ -62,7 +63,8 @@ def collect_training_data(
     feats_out, labels_out = [], []
     trace_fn = jax.jit(
         lambda q, st, hf: _trace_full_phase(
-            bs.as_view(x_pad, q), adj_pad, q, st, hf, k=k, hops=max_hops))
+            bs.as_view(x_pad, q), adj_pad, q, st, hf, k=k, hops=max_hops,
+            live_pad=live_pad))
     n = bs.table_n(x_pad)
     for s in range(0, queries.shape[0], batch):
         q = jnp.asarray(queries[s: s + batch], jnp.float32)
@@ -70,7 +72,8 @@ def collect_training_data(
             x_hot_pad, adj_hot_pad, hot_entries, q,
             pool_size=hot_pool_size, max_hops=max_hops, mode=hot_mode)
         hfeats = hot_features(hot_pool, k)
-        state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size)
+        state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size,
+                                 live_pad)
         rec = trace_fn(q, state, hfeats)
         f, l = _label_trace(rec, eval_gap, improve_tol)
         feats_out.append(f)

@@ -19,7 +19,6 @@ mesh.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -26,7 +26,6 @@ Usage:
 
 import argparse
 import json
-import math
 import time
 import traceback
 

@@ -19,7 +19,6 @@ import argparse
 import os
 import time
 
-import numpy as np
 
 
 def main():

@@ -20,7 +20,6 @@ of materializing (B, S, H, hd).
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple, Optional
 
 import numpy as np

@@ -12,7 +12,6 @@ the image, and none needed).  Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

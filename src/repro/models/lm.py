@@ -15,8 +15,7 @@ One generic model reads an :class:`repro.configs.ArchConfig`:
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .common import Initializer, dense_init, kernel_init
+from .common import Initializer, kernel_init
 from .mlp import init_mlp_params, mlp_forward
 
 __all__ = ["init_moe_params", "moe_forward", "MoEAux"]

@@ -9,7 +9,7 @@ axis — see :mod:`repro.distributed.sharding`.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -145,15 +145,25 @@ class QuantState:
             return sq_decode(self.codes, self.sq)
         return pq_decode(self.codes, self.pq)
 
-    def device_table(self) -> Union[SQTable, PQTable]:
-        """Upload as a score table with the sentinel row appended."""
+    def device_table(self, capacity: Optional[int] = None
+                     ) -> Union[SQTable, PQTable]:
+        """Upload as a score table with the sentinel row appended.
+
+        With ``capacity`` the code table is zero-padded to ``capacity + 1``
+        rows so its shape tracks the (mutable) store's padded vector table —
+        padding rows decode to garbage but are masked like the sentinel.
+        """
+        n = self.codes.shape[0]
+        rows = 1 if capacity is None else capacity + 1 - n
+        if rows < 1:
+            raise ValueError(f"capacity {capacity} < code rows {n}")
         if self.mode == "sq8":
-            pad = np.zeros((1, self.codes.shape[1]), np.int8)
+            pad = np.zeros((rows, self.codes.shape[1]), np.int8)
             return SQTable(
                 codes=jnp.asarray(np.concatenate([self.codes, pad])),
                 scale=jnp.asarray(self.sq.scale),
                 zero=jnp.asarray(self.sq.zero))
-        pad = np.zeros((1, self.codes.shape[1]), np.uint8)
+        pad = np.zeros((rows, self.codes.shape[1]), np.uint8)
         return PQTable(
             codes=jnp.asarray(np.concatenate([self.codes, pad])),
             centroids=jnp.asarray(self.pq.centroids))

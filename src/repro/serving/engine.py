@@ -19,6 +19,12 @@ With a quantized Full Index (``cfg.quant``), the wave scores its lanes
 against the compressed score table (int8 dequant / PQ ADC — see
 :mod:`repro.quant`); each lane gets an exact float32 rerank of its pool
 head at retirement, off the hot path of live lanes.
+
+The engine serves *under churn*: it watches ``dqf.store.epoch`` and
+re-captures the padded device tables (adjacency, liveness, codes) whenever
+an insert/delete lands, without disturbing in-flight lanes.  Rows deleted
+mid-flight are filtered at retirement.  Compaction remaps internal ids, so
+it is only legal on a drained engine (the refresh check enforces this).
 """
 
 from __future__ import annotations
@@ -26,7 +32,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Optional
 
 import numpy as np
 import jax
@@ -68,8 +73,11 @@ class WaveEngine:
         self.tick_hops = tick_hops
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats()
-        d = dqf.x.shape[1]
-        self._d = d
+        dqf._sync_device()
+        self._d = dqf.store.d
+        self._epoch = dqf.store.epoch
+        self._remap_epoch = dqf.store.remap_epoch
+        self._cap = dqf.store.capacity
         self._tick_fn = self._build_tick()
         self._lane_meta = [None] * wave_size   # (request_id, t_enqueue)
         self._results: dict = {}
@@ -78,16 +86,18 @@ class WaveEngine:
     # ------------------------------------------------------------ jitted ops
     def _build_tick(self):
         cfg = self.cfg
-        adj_pad = self.dqf._dev["adj_pad"]
         tree = self.dqf.tree.arrays if self.dqf.tree is not None else None
 
-        def tick(state: bs.BeamState, table, queries, hot_first, hot_ratio,
-                 evals_done):
+        # adj_pad/live_pad are *arguments*, not closure captures: a store
+        # mutation swaps table contents but (within capacity) not shapes,
+        # so the compiled executable is reused across insert/delete epochs.
+        def tick(state: bs.BeamState, table, adj_pad, live_pad, queries,
+                 hot_first, hot_ratio, evals_done):
             # `table` is the float32 x_pad or a quantized score table view
             # (per-wave PQ LUTs ride along as part of the pytree).
             def one(carry, _):
                 s, ev = carry
-                s = bs.expand_step(table, adj_pad, queries, s)
+                s = bs.expand_step(table, adj_pad, queries, s, live_pad)
                 s = s._replace(
                     active=s.active & (s.stats.hops < cfg.max_hops))
                 if tree is not None:
@@ -137,9 +147,49 @@ class WaveEngine:
     def _any_live(self) -> bool:
         return any(m is not None for m in self._lane_meta)
 
+    def _maybe_refresh(self):
+        """Track the store epoch: re-capture device tables after mutations.
+
+        Inserts/deletes are safe mid-wave (ids are stable, shapes only move
+        when capacity grows, and grown state is re-padded in place); a
+        compaction remaps internal ids, so in-flight lanes would retire
+        garbage — the engine refuses and asks to drain first.
+        """
+        st = self.dqf.store
+        if st.epoch == self._epoch:
+            return
+        if st.remap_epoch != self._remap_epoch and self._any_live():
+            raise RuntimeError(
+                "store compacted while lanes are in flight — drain the "
+                "engine before calling compact()")
+        self.dqf._sync_device()
+        old_cap = self._cap
+        if self._state is not None:
+            if st.capacity != old_cap:
+                self._state = self._grow_state(self._state, old_cap,
+                                               st.capacity)
+            self._update_table()
+        self._cap = st.capacity
+        self._epoch = st.epoch
+        self._remap_epoch = st.remap_epoch
+
+    @staticmethod
+    def _grow_state(state: bs.BeamState, old_cap: int,
+                    new_cap: int) -> bs.BeamState:
+        """Re-pad wave state after capacity growth (sentinel id moved)."""
+        seen = np.asarray(state.seen)
+        W = seen.shape[0]
+        grown = np.zeros((W, new_cap + 1), bool)
+        grown[:, :old_cap] = seen[:, :old_cap]    # old sentinel col dropped
+        grown[:, new_cap] = True
+        ids = np.asarray(state.pool.ids)
+        ids = np.where(ids == old_cap, new_cap, ids).astype(np.int32)
+        return state._replace(pool=state.pool._replace(ids=jnp.asarray(ids)),
+                              seen=jnp.asarray(grown))
+
     def _init_wave(self):
+        self._maybe_refresh()
         W, d = self.wave, self._d
-        n = self.dqf.x.shape[0]
         dummy_q = jnp.zeros((W, d), jnp.float32)
         state = bs.init_state(self.dqf._dev["x_pad"], dummy_q,
                               self.dqf._dev["entries"], self.cfg.full_pool)
@@ -176,7 +226,9 @@ class WaveEngine:
             mode=self.cfg.hot_mode)
         hf = hot_features(hot_pool, self.cfg.k)
         seeded = _seed_full_state(hot_pool, self.dqf._dev["hot_ids_pad"],
-                                  self.dqf.x.shape[0], self.cfg.full_pool)
+                                  self.dqf.store.capacity,
+                                  self.cfg.full_pool,
+                                  self.dqf._dev["live_pad"])
         # splice the new lanes into the wave state (host-side: simple, and
         # refills are rare relative to ticks)
         st = jax.tree.map(lambda a: np.array(a), self._state)  # writable
@@ -197,31 +249,42 @@ class WaveEngine:
         self._state = jax.tree.map(jnp.asarray, st)
         self._update_table()
 
-    def _retire_rerank(self, pool_ids: np.ndarray, query: np.ndarray):
-        """Exact float32 rerank of a retiring lane's pool head (host side).
+    def _retire_result(self, pool_ids: np.ndarray, pool_dists: np.ndarray,
+                       query: np.ndarray):
+        """Final result of a retiring lane (host side).
 
-        Retirements are rare relative to ticks, so a per-lane numpy pass
-        keeps the rerank off the jitted wave without a second device round
-        trip.
+        Drops sentinel/padding ids and rows tombstoned while the lane was
+        in flight; with a quantized table the pool head is re-scored
+        exactly in float32 (retirements are rare relative to ticks, so the
+        per-lane numpy pass keeps the rerank off the jitted wave).
         """
+        st = self.dqf.store
         k = self.cfg.k
-        n = self.dqf.x.shape[0]
+        # filter the whole pool first (mid-flight deletes can hit its head),
+        # then truncate to the rerank window / top-k among live candidates
+        keep = pool_ids < st.n
+        keep[keep] = st.alive[pool_ids[keep]]
         rr = min(max(self.dqf._rerank_k, k), pool_ids.shape[0])
-        cand = pool_ids[:rr]
-        cand = cand[cand < n]
-        d2 = np.sum((self.dqf.x[cand] - query) ** 2, axis=1)
-        order = np.argsort(d2, kind="stable")[:k]
+        cand = pool_ids[keep][:rr]
+        cd = pool_dists[keep][:rr]
+        if self.dqf._rerank_k:
+            cd = np.sum((st.x[cand] - query) ** 2, axis=1)
+            order = np.argsort(cd, kind="stable")[:k]
+        else:
+            order = np.arange(min(k, cand.shape[0]))   # pool is sorted
         ids = cand[order].astype(np.int32)
-        dists = d2[order].astype(np.float32)
+        dists = cd[order].astype(np.float32)
         if ids.shape[0] < k:
             pad = k - ids.shape[0]
-            ids = np.concatenate([ids, np.full(pad, n, np.int32)])
+            ids = np.concatenate([ids, np.full(pad, st.capacity, np.int32)])
             dists = np.concatenate([dists, np.full(pad, np.inf, np.float32)])
         return ids, dists
 
     def _tick(self):
+        self._maybe_refresh()
         state, evals = self._tick_fn(
-            self._state, self._table, jnp.asarray(self._queries),
+            self._state, self._table, self.dqf._dev["adj_pad"],
+            self.dqf._dev["live_pad"], jnp.asarray(self._queries),
             jnp.asarray(self._hot_first), jnp.asarray(self._hot_ratio),
             jnp.asarray(self._evals))
         self._state = state
@@ -233,12 +296,9 @@ class WaveEngine:
             if meta is None or active[lane]:
                 continue
             rid, t_in = meta
-            if self.dqf._rerank_k:
-                ids, dists = self._retire_rerank(
-                    np.asarray(state.pool.ids[lane]), self._queries[lane])
-            else:
-                ids = np.asarray(state.pool.ids[lane][: self.cfg.k])
-                dists = np.asarray(state.pool.dists[lane][: self.cfg.k])
+            ids, dists = self._retire_result(
+                np.asarray(state.pool.ids[lane]),
+                np.asarray(state.pool.dists[lane]), self._queries[lane])
             hops = int(np.asarray(state.stats.hops[lane]))
             self._results[rid] = {"ids": ids, "dists": dists, "hops": hops}
             self.stats.completed += 1

@@ -17,13 +17,11 @@ share instead of failing the query (measured in tests/test_distributed.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import beam_search as bs
 from repro.core.ssg import SSGParams, build_ssg

@@ -1,0 +1,13 @@
+"""Mutable index lifecycle: the single source of truth for rows.
+
+:class:`VectorStore` owns the float32 row table, the (optional) quantized
+code table, the liveness bitmap (tombstone delete) and the stable external
+id map.  Every other layer — the full NSSG, the hot index, the query
+counter, the serving engine, persistence — routes through it instead of a
+frozen ``x`` array, which is what makes ``DQF.insert/delete/compact``
+possible without a full rebuild.
+"""
+
+from .store import CompactionResult, VectorStore  # noqa: F401
+
+__all__ = ["VectorStore", "CompactionResult"]

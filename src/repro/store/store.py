@@ -1,0 +1,320 @@
+"""VectorStore — mutable row storage with tombstones and stable ids.
+
+Design (DGAI / FreshDiskANN-style lifecycle, adapted to the padded-table
+conventions of :mod:`repro.core`):
+
+* **Internal ids** are row positions in the backing arrays.  They are what
+  the graph, the counter and the search kernels speak; they are only
+  invalidated by :meth:`compact`, which returns an explicit remap.
+* **External ids** are stable handles (monotonic int64) that survive
+  compaction; the store owns the bidirectional map.  ``insert`` returns
+  them, ``delete`` takes them.
+* **Delete is a tombstone**: the row (and its code) stays gatherable so the
+  graph remains traversable, but ``alive`` goes False and every search
+  layer masks the id out of candidate pools and results.
+* **Capacity** is the device-table padding target: padded tables are sized
+  ``(capacity + 1, ·)`` with sentinel id ``capacity``, so inserts within
+  capacity keep every jitted search shape stable (no recompiles).  It grows
+  geometrically and never shrinks (compaction keeps it, for the same
+  reason).
+* **Epochs**: ``epoch`` bumps on every mutation (consumers refresh device
+  tables when it moves); ``remap_epoch`` bumps only on compaction (internal
+  ids changed — in-flight search state is stale).
+
+The store intentionally knows nothing about graphs or searches; it is the
+storage layer the rest of the system routes through.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import QuantState, pq_encode, sq_encode
+
+__all__ = ["VectorStore", "CompactionResult"]
+
+# Matches repro.core.types.PAD_VALUE (not imported: store must stay
+# import-cycle-free below repro.core).
+_PAD_VALUE = 1e9
+
+
+def _ceil_capacity(n: int) -> int:
+    """Next power of two ≥ n (≥ 8), the geometric growth target."""
+    cap = 8
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionResult:
+    """Outcome of :meth:`VectorStore.compact`.
+
+    ``remap[old_internal] = new_internal`` for surviving rows, ``-1`` for
+    dropped (tombstoned) rows.
+    """
+
+    remap: np.ndarray
+    n_before: int
+    n_after: int
+
+    @property
+    def dropped(self) -> int:
+        return self.n_before - self.n_after
+
+
+class VectorStore:
+    """Rows + quant codes + liveness bitmap + stable external ids."""
+
+    def __init__(self, x: np.ndarray, *,
+                 ext_ids: Optional[np.ndarray] = None,
+                 alive: Optional[np.ndarray] = None,
+                 quant: Optional[QuantState] = None,
+                 next_ext: Optional[int] = None,
+                 capacity: Optional[int] = None):
+        x = np.ascontiguousarray(x, np.float32)
+        n = self._n = x.shape[0]
+        self._d = x.shape[1]
+        if ext_ids is not None and np.asarray(ext_ids).shape != (n,):
+            raise ValueError("ext_ids must have one entry per row")
+        if alive is not None and np.asarray(alive).shape != (n,):
+            raise ValueError("alive must have one entry per row")
+        # capacity starts at exactly n so a build-once store pads its device
+        # tables identically to the pre-store code (sentinel = n).
+        self.capacity = max(int(capacity) if capacity is not None else n, n)
+        # Host arrays are preallocated to capacity and written by slice, so
+        # streamed inserts cost O(batch) amortized instead of O(n) copies.
+        self._x = np.empty((self.capacity, self._d), np.float32)
+        self._x[:n] = x
+        self._alive = np.zeros(self.capacity, bool)
+        self._alive[:n] = True if alive is None else np.asarray(alive, bool)
+        self._ext = np.full(self.capacity, -1, np.int64)
+        self._ext[:n] = (np.arange(n, dtype=np.int64) if ext_ids is None
+                         else np.asarray(ext_ids, np.int64))
+        self._ext2int = {int(e): i for i, e in enumerate(self._ext[:n])}
+        if len(self._ext2int) != n:
+            raise ValueError("external ids must be unique")
+        self.next_ext = int(next_ext if next_ext is not None
+                            else (self._ext[:n].max() + 1 if n else 0))
+        self.quant = quant
+        if quant is not None:
+            self._codes = np.zeros((self.capacity,) + quant.codes.shape[1:],
+                                   quant.codes.dtype)
+            self._codes[:n] = quant.codes
+            quant.codes = self._codes[:n]
+        self.epoch = 0
+        self.remap_epoch = 0
+        # rows_epoch moves only when row/code *contents* change (append,
+        # compact) — consumers skip re-uploading the big tables on deletes.
+        self.rows_epoch = 0
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def n(self) -> int:
+        """Total rows, live + tombstoned (the internal id space)."""
+        return self._n
+
+    @property
+    def d(self) -> int:
+        return self._d
+
+    @property
+    def x(self) -> np.ndarray:
+        """(n, d) float32 row table — a view into the capacity buffer."""
+        return self._x[: self._n]
+
+    @property
+    def alive(self) -> np.ndarray:
+        """(n,) liveness bitmap view (False = tombstoned)."""
+        return self._alive[: self._n]
+
+    @property
+    def ext_ids(self) -> np.ndarray:
+        """(n,) stable external id per internal row (view)."""
+        return self._ext[: self._n]
+
+    @property
+    def live_count(self) -> int:
+        return int(self.alive.sum())
+
+    def live_ids(self) -> np.ndarray:
+        return np.flatnonzero(self.alive)
+
+    def to_external(self, internal_ids: np.ndarray) -> np.ndarray:
+        """Map internal ids to stable external ids (shape-preserving)."""
+        ids = np.asarray(internal_ids)
+        return self.ext_ids[ids]
+
+    def to_internal(self, external_ids: np.ndarray) -> np.ndarray:
+        """Map external ids to current internal ids; KeyError if unknown."""
+        flat = np.asarray(external_ids, np.int64).reshape(-1)
+        out = np.array([self._ext2int[int(e)] for e in flat], np.int64)
+        return out.reshape(np.asarray(external_ids).shape)
+
+    # ------------------------------------------------------------- mutation
+    def add(self, rows: np.ndarray,
+            ext_ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Append rows (encode-on-insert when quantized); returns ext ids."""
+        rows = np.ascontiguousarray(np.atleast_2d(rows), np.float32)
+        if rows.shape[1] != self.d:
+            raise ValueError(f"dim mismatch: {rows.shape[1]} != {self.d}")
+        m = rows.shape[0]
+        if ext_ids is None:
+            new_ext = np.arange(self.next_ext, self.next_ext + m, dtype=np.int64)
+        else:
+            new_ext = np.asarray(ext_ids, np.int64)
+            if new_ext.shape != (m,):
+                raise ValueError("one external id per row required")
+            if np.unique(new_ext).size != m:
+                raise ValueError("duplicate external ids in batch")
+            if any(int(e) in self._ext2int for e in new_ext):
+                raise ValueError("external id already in use")
+        if m == 0:
+            return new_ext
+        start = self._n
+        if start + m > self.capacity:
+            self._grow(_ceil_capacity(start + m))
+        self._x[start:start + m] = rows
+        self._alive[start:start + m] = True
+        self._ext[start:start + m] = new_ext
+        for j, e in enumerate(new_ext):
+            self._ext2int[int(e)] = start + j
+        self.next_ext = max(self.next_ext, int(new_ext.max()) + 1)
+        self._n = start + m
+        if self.quant is not None:
+            self._codes[start:start + m] = self._encode(rows)
+            self.quant.codes = self._codes[: self._n]
+        self.epoch += 1
+        self.rows_epoch += 1
+        return new_ext
+
+    def _grow(self, new_cap: int) -> None:
+        """Reallocate the capacity buffers (geometric, so O(1) amortized)."""
+        n = self._n
+        x = np.empty((new_cap, self._d), np.float32)
+        x[:n] = self._x[:n]
+        self._x = x
+        a = np.zeros(new_cap, bool)
+        a[:n] = self._alive[:n]
+        self._alive = a
+        e = np.full(new_cap, -1, np.int64)
+        e[:n] = self._ext[:n]
+        self._ext = e
+        if self.quant is not None:
+            c = np.zeros((new_cap,) + self._codes.shape[1:],
+                         self._codes.dtype)
+            c[:n] = self._codes[:n]
+            self._codes = c
+            self.quant.codes = self._codes[:n]
+        self.capacity = new_cap
+
+    def _encode(self, rows: np.ndarray) -> np.ndarray:
+        """Encode rows with the already-trained codebooks (no retraining)."""
+        if self.quant.mode == "sq8":
+            return sq_encode(rows, self.quant.sq)
+        return pq_encode(rows, self.quant.pq)
+
+    def mark_dead(self, external_ids: np.ndarray) -> np.ndarray:
+        """Tombstone rows by external id; returns their internal ids."""
+        internal = np.unique(self.to_internal(
+            np.asarray(external_ids).reshape(-1)))
+        if not self.alive[internal].all():
+            raise ValueError("row already tombstoned")
+        self.alive[internal] = False
+        self.epoch += 1
+        return internal
+
+    def compact(self) -> CompactionResult:
+        """Drop tombstoned rows; returns the old→new internal id remap."""
+        n_before = self._n
+        keep = self.alive.copy()
+        remap = np.full(n_before, -1, np.int64)
+        n_after = int(keep.sum())
+        remap[keep] = np.arange(n_after)
+        # left-pack the capacity buffers in place (fancy-index RHS copies
+        # first, so the overlapping assignment is safe)
+        self._x[:n_after] = self._x[:n_before][keep]
+        self._ext[:n_after] = self._ext[:n_before][keep]
+        self._ext[n_after:] = -1
+        self._alive[:n_after] = True
+        self._alive[n_after:] = False
+        self._n = n_after
+        self._ext2int = {int(e): i for i, e in enumerate(self.ext_ids)}
+        if self.quant is not None:
+            self._codes[:n_after] = self._codes[:n_before][keep]
+            self.quant.codes = self._codes[:n_after]
+        # capacity is sticky: shapes stay stable across compaction too.
+        self.epoch += 1
+        self.rows_epoch += 1
+        self.remap_epoch += 1
+        return CompactionResult(remap=remap, n_before=n_before,
+                                n_after=self._n)
+
+    # ------------------------------------------------------- device padding
+    def padded_rows(self) -> jnp.ndarray:
+        """(capacity+1, d) device table; rows ≥ n are huge-valued padding."""
+        pad = self.capacity + 1 - self.n
+        filler = np.full((pad, self.d), _PAD_VALUE, np.float32)
+        return jnp.asarray(np.concatenate([self.x, filler]))
+
+    def padded_live(self) -> jnp.ndarray:
+        """(capacity+1,) bool liveness; padding rows and sentinel are dead."""
+        pad = self.capacity + 1 - self.n
+        return jnp.asarray(np.concatenate([self.alive,
+                                           np.zeros(pad, bool)]))
+
+    def pad_adjacency(self, adj: np.ndarray) -> jnp.ndarray:
+        """(capacity+1, R) device adjacency from a free-slot (-1) host graph.
+
+        Host graphs over a mutable store mark empty slots with ``-1`` (the
+        row count moves, so the classic pad-with-``n`` sentinel would
+        collide with ids minted by later inserts).  On device the sentinel
+        becomes ``capacity`` — the padded tables' no-op row.
+        """
+        cap = self.capacity
+        if adj.shape[0] != self.n:
+            raise ValueError(f"adjacency rows {adj.shape[0]} != n {self.n}")
+        dev = np.where(adj < 0, cap, adj).astype(np.int32)
+        filler = np.full((cap + 1 - self.n, adj.shape[1]), cap, np.int32)
+        return jnp.asarray(np.concatenate([dev, filler]))
+
+    def padded_quant_table(self):
+        """Device score table sized to capacity (None when not quantized)."""
+        if self.quant is None:
+            return None
+        return self.quant.device_table(capacity=self.capacity)
+
+    # ---------------------------------------------------------- persistence
+    def nbytes(self) -> int:
+        return int(self.x.nbytes + self.alive.nbytes + self.ext_ids.nbytes
+                   + (self.quant.nbytes() if self.quant else 0))
+
+    def to_arrays(self, prefix: str = "store_") -> dict:
+        out = {"x": self.x,                        # legacy key, kept readable
+               prefix + "alive": self.alive,
+               prefix + "ext_ids": self.ext_ids,
+               prefix + "next_ext": np.int64(self.next_ext),
+               prefix + "capacity": np.int64(self.capacity)}
+        if self.quant is not None:
+            out.update(self.quant.to_arrays())
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays, prefix: str = "store_") -> "VectorStore":
+        """Rebuild from :meth:`to_arrays` output (or a pre-store checkpoint
+        holding only ``x``, for which everything defaults to live)."""
+        x = arrays["x"]
+        get = (arrays.get if hasattr(arrays, "get")
+               else lambda k, d=None: arrays[k] if k in arrays else d)
+        alive = get(prefix + "alive")
+        ext = get(prefix + "ext_ids")
+        nxt = get(prefix + "next_ext")
+        cap = get(prefix + "capacity")
+        return cls(x, alive=alive, ext_ids=ext,
+                   next_ext=int(nxt) if nxt is not None else None,
+                   capacity=int(cap) if cap is not None else None,
+                   quant=QuantState.from_arrays(arrays))

@@ -2,7 +2,6 @@
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.core.decision_tree import predict_jax, train_tree

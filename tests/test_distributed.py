@@ -10,8 +10,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
-import pytest
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -1,7 +1,6 @@
 """End-to-end DQF behaviour (Algorithms 2+4, drift adaptation, persistence)."""
 
 import numpy as np
-import pytest
 
 from repro.core import DQF, DQFConfig, ZipfWorkload, ground_truth, recall_at_k
 
@@ -49,13 +48,18 @@ def test_counter_trigger_and_rebuild(small_data):
     wl = ZipfWorkload(small_data, seed=3)
     _, t = wl.sample(500, with_targets=True)
     dqf.counter.record(t)
+    # Alg 2 counts *queries* against n_query, not returned result ids
+    assert dqf.counter.since_rebuild == 500
     assert dqf.counter.due
     h0 = dqf.rebuild_hot()
     assert not dqf.counter.due
     assert h0.version == 0
-    # searching with record=True re-accumulates and auto-rebuilds
+    # searching with record=True re-accumulates and auto-rebuilds once the
+    # *query* count (not id count) passes the trigger
     dqf.search(wl.sample(16), record=True, auto_rebuild=True)
-    assert dqf.hot.version >= 1
+    assert dqf.hot.version == 0       # 16 queries < trigger of 50
+    dqf.search(wl.sample(64), record=True, auto_rebuild=True)
+    assert dqf.hot.version >= 1       # 16 + 64 queries > 50
 
 
 def test_drift_changes_hot_set(small_data):

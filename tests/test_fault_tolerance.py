@@ -1,9 +1,7 @@
 """Fault-tolerance contracts: crash-safe checkpoints, straggler bounds,
 degraded serving."""
 
-import json
 import os
-import shutil
 
 import numpy as np
 import jax
@@ -11,7 +9,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer, latest_step
-from repro.core import DQFConfig
 
 
 def _tiny_state():

@@ -1,7 +1,6 @@
 """KNNG + SSG construction tests (paper §4.2.1, Algorithm 1)."""
 
 import numpy as np
-import pytest
 
 from repro.core.knng import build_knng, exact_knn, nn_descent
 from repro.core.ssg import (SSGParams, build_ssg, ensure_connected, medoid,

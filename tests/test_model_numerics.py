@@ -7,7 +7,6 @@
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from tests._hypothesis_compat import given, settings, st

@@ -17,7 +17,6 @@ import textwrap
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_config
 from repro.models import lm

@@ -2,7 +2,6 @@
 quantized Full Index end to end (recall vs float32, compression, rerank,
 persistence, serving)."""
 
-import dataclasses
 
 import numpy as np
 import jax.numpy as jnp

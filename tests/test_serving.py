@@ -4,11 +4,10 @@ degraded merge (fault tolerance)."""
 import numpy as np
 import pytest
 
-from repro.core import DQF, DQFConfig, ZipfWorkload, ground_truth, recall_at_k
+from repro.core import DQFConfig, ground_truth, recall_at_k
 from repro.serving.engine import WaveEngine
 from repro.serving.retrieval import KNNLMHead, RetrievalService
 from repro.serving.sharded import merge_with_dropout
-from tests.conftest import make_clustered
 
 
 def test_wave_engine_matches_batch_search(built_dqf, small_data):
