@@ -1,0 +1,155 @@
+"""Multi-tenant preference benchmark (ISSUE 3, ROADMAP multi-tenant item).
+
+T tenants with *disjoint* Zipf heads share one Full Index.  Measured
+against a single shared Hot Index built from the union stream:
+
+* per-tenant hot hit-rate (top-1 result served from the tenant's hot set)
+  and recall — per-tenant hot indexes follow each workload's head, the
+  shared one averages all heads away;
+* mixed-tenant wave-engine QPS — lanes of all tenants in the same jitted
+  tick, tenant hot-table selection by gather;
+* memory — every extra tenant costs one IR·n hot set + a counter, so the
+  whole preference layer is a small fraction of the shared Full Index.
+
+Emits ``BENCH_multitenant.json`` via the shared metrics registry.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DQF, DQFConfig, ZipfWorkload, ground_truth, recall_at_k
+from repro.serving.engine import WaveEngine
+
+from .common import make_dataset, record_metric
+
+N = 3_000
+D = 32
+N_TENANTS = 6
+N_HISTORY = 6_000
+N_EVAL = 128
+SEED = 13
+
+
+def _rows(*rows):
+    for r in rows:
+        print(r)
+    return list(rows)
+
+
+def disjoint_workloads(x, n_tenants, seed=SEED, beta=1.2, sigma=0.05):
+    """One ZipfWorkload per tenant, heads drawn from disjoint id blocks."""
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    block = n // n_tenants
+    wls = []
+    for t in range(n_tenants):
+        head = perm[t * block:(t + 1) * block]
+        rest = np.concatenate([perm[:t * block], perm[(t + 1) * block:]])
+        wl = ZipfWorkload(x, beta=beta, sigma=sigma, seed=seed + 100 + t)
+        wl.rank_to_point = np.concatenate(
+            [rng.permutation(head), rng.permutation(rest)])
+        wls.append(wl)
+    return wls
+
+
+def _hit_rate(dqf, queries, tenant):
+    res = dqf.search(queries, record=False, tenant=tenant)
+    top1 = np.asarray(res.ids)[:, 0]
+    return float(np.isin(top1, dqf.tenants.get(tenant).hot.ids).mean())
+
+
+def bench_multitenant():
+    x = make_dataset(n=N, d=D, seed=SEED)
+    cfg = DQFConfig(knn_k=16, out_degree=16, index_ratio=0.01, k=10,
+                    hot_pool=32, full_pool=64, max_hops=200,
+                    n_query_trigger=10 ** 9)
+    dqf = DQF(cfg).build(x)
+    wls = disjoint_workloads(x, N_TENANTS)
+
+    t0 = time.perf_counter()
+    union_targets = []
+    for t, wl in enumerate(wls):
+        q, tg = wl.sample(N_HISTORY, with_targets=True)
+        dqf.warm(q, tg, tenant=f"t{t}")
+        union_targets.append(tg)
+    warm_s = time.perf_counter() - t0
+    dqf.fit_tree(wls[0].sample(1000), tenant="t0")
+
+    # the single-hot-index baseline: one hot set over the union stream
+    dqf.create_tenant("union")
+    dqf.record(np.concatenate(union_targets), tenant="union")
+    dqf.rebuild_hot(tenant="union")
+
+    rows = []
+    hit_pt, hit_sh, rec_pt, rec_sh = [], [], [], []
+    queries = {}
+    for t in range(N_TENANTS):
+        name = f"t{t}"
+        q = wls[t].sample(N_EVAL)
+        queries[name] = q
+        gt = ground_truth(x, q, cfg.k)
+        hit_pt.append(_hit_rate(dqf, q, name))
+        hit_sh.append(_hit_rate(dqf, q, "union"))
+        rec_pt.append(recall_at_k(
+            np.asarray(dqf.search(q, record=False, tenant=name).ids), gt))
+        rec_sh.append(recall_at_k(
+            np.asarray(dqf.search(q, record=False, tenant="union").ids), gt))
+    rows.append(f"multitenant/per_tenant_hot,{0.0:.1f},"
+                f"hot_hit={np.mean(hit_pt):.4f};recall={np.mean(rec_pt):.4f}")
+    rows.append(f"multitenant/shared_hot,{0.0:.1f},"
+                f"hot_hit={np.mean(hit_sh):.4f};recall={np.mean(rec_sh):.4f}")
+    record_metric("multitenant", "per_tenant_hot",
+                  hot_hit=round(float(np.mean(hit_pt)), 4),
+                  hot_hit_min=round(float(np.min(hit_pt)), 4),
+                  recall=round(float(np.mean(rec_pt)), 4),
+                  tenants=N_TENANTS, warm_s=round(warm_s, 3))
+    record_metric("multitenant", "shared_hot",
+                  hot_hit=round(float(np.mean(hit_sh)), 4),
+                  recall=round(float(np.mean(rec_sh)), 4))
+
+    # mixed-tenant serving: all tenants interleaved through one wave.
+    # Closed loop (submit one wave's worth, drain, repeat) after a warmup
+    # drain, so p99 measures service latency — not queue depth + compile.
+    from repro.serving.engine import EngineStats
+    eng = WaveEngine(dqf, wave_size=64, tick_hops=8)
+    eng.submit(wls[0].sample(64), tenant="t0")      # warmup: compiles
+    eng.run_until_drained()
+    eng.stats = EngineStats()
+    eng._results.clear()
+    n_served, wall = 0, 0.0
+    per_wave = max(64 // N_TENANTS, 1)
+    for _ in range(3):
+        for t in range(N_TENANTS):                  # interleave tenants
+            eng.submit(queries[f"t{t}"][:per_wave], tenant=f"t{t}")
+        out = eng.run_until_drained()
+        n_served += len(out["results"])
+        wall += out["wall_s"]
+        eng._results.clear()
+    qps = n_served / wall if wall else 0.0
+    p99 = eng.stats.p99_ms()
+    rows.append(f"multitenant/engine_mixed,{0.0:.1f},"
+                f"qps={qps:.0f};p99_ms={p99:.1f};served={n_served}")
+    record_metric("multitenant", "engine_mixed",
+                  qps=round(qps, 1), p99_ms=round(p99, 2),
+                  served=n_served, straggled=eng.stats.straggled)
+
+    # memory: the whole preference layer vs the shared index
+    nb = dqf.index_nbytes()
+    hot_bytes = nb["hot"]
+    per_tenant = hot_bytes / (N_TENANTS + 1)          # + union baseline
+    rows.append(f"multitenant/memory,{0.0:.1f},"
+                f"hot_total_bytes={hot_bytes};"
+                f"per_tenant_bytes={per_tenant:.0f};"
+                f"full_vec_bytes={nb['full_vec']}")
+    record_metric("multitenant", "memory",
+                  hot_total_bytes=int(hot_bytes),
+                  per_tenant_bytes=int(per_tenant),
+                  full_graph_bytes=int(nb["full"]),
+                  full_vec_bytes=int(nb["full_vec"]),
+                  tenants_per_full_index=round(
+                      nb["full_vec"] / max(per_tenant, 1), 1))
+    return _rows(*rows)

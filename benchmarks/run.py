@@ -25,6 +25,7 @@ def main() -> None:
 
     from . import bench_paper as bp
     from . import bench_kernels as bk
+    from . import bench_multitenant as bm
 
     benches = [
         ("construction", bp.bench_construction),      # Table 5
@@ -39,6 +40,7 @@ def main() -> None:
         ("features", bp.bench_features),              # Table 2
         ("drift", bp.bench_drift),                    # claim 3
         ("churn", bp.bench_churn),                    # insert/delete/compact
+        ("multitenant", bm.bench_multitenant),        # tenancy layer
         ("kernels", bk.bench_kernels),                # Pallas layer
         ("quant", bk.bench_quant_scoring),            # compressed scan
         ("engine", bk.bench_engine),                  # serving layer

@@ -1,7 +1,8 @@
 """repro — DQF (Dual-Index Query Framework) on JAX/TPU, framework-scale.
 
-Layers: core (the paper), kernels (Pallas), models/configs (assigned arch
-zoo), training, serving, data, optim, checkpoint, launch (mesh/dryrun).
+Layers: core (the paper), tenancy (per-tenant preference state), kernels
+(Pallas), models/configs (assigned arch zoo), training, serving, data,
+optim, checkpoint, launch (mesh/dryrun).
 """
 
 __version__ = "0.1.0"

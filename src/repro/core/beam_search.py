@@ -18,6 +18,13 @@ accepts a *score table* (:mod:`repro.quant.types`) — any pytree exposing
 compressed codes (int8 dequant or PQ ADC) instead of float32 rows; all
 sentinel handling is by masking, so the table's sentinel row only has to
 exist, not hold huge values.
+
+Per-lane (stacked) tables: for multi-tenant hot search
+(:mod:`repro.tenancy`), ``x_pad``/``adj_pad``/``entries`` may carry a
+leading lane axis — ``(B, n+1, d)`` vectors, ``(B, n+1, R)`` adjacency,
+``(B, E)`` entries — so every lane traverses *its own* (tiny) graph while
+staying in one jitted batch.  Dimensionality is the dispatch: 2-D tables
+are shared, 3-D are per-lane.
 """
 
 from __future__ import annotations
@@ -57,9 +64,12 @@ def pad_adjacency(adj: jnp.ndarray) -> jnp.ndarray:
 
 
 def table_n(x_pad) -> int:
-    """Real row count of a padded vector table *or* quantized score table."""
+    """Real row count of a padded vector table *or* quantized score table.
+
+    Works for shared ``(n+1, d)`` and per-lane ``(B, n+1, d)`` tables.
+    """
     if isinstance(x_pad, jnp.ndarray):
-        return x_pad.shape[0] - 1
+        return x_pad.shape[-2] - 1
     return x_pad.n
 
 
@@ -77,7 +87,10 @@ def score_rows(x_pad, queries: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
     score table (which scores from its codes — the table decides how).
     """
     if isinstance(x_pad, jnp.ndarray):
-        g = x_pad[cols]                                      # (B, C, d)
+        if x_pad.ndim == 3:                                  # per-lane table
+            g = jnp.take_along_axis(x_pad, cols[..., None], axis=1)
+        else:
+            g = x_pad[cols]                                  # (B, C, d)
         diff = g - queries[:, None, :]
         return jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
     return x_pad.gather_score(queries, cols).astype(jnp.float32)
@@ -117,14 +130,21 @@ def init_state(x_pad, queries: jnp.ndarray,
 
     ``live_pad`` is the optional (n+1,) liveness bitmap of a mutable store:
     tombstoned entry points score INF so they never win a pool slot.
+    ``entries`` may be shared ``(E,)`` or per-lane ``(B, E)``; per-lane
+    entry slots equal to the sentinel (stacked-table padding) score INF
+    and never enter the frontier.
     """
     n = table_n(x_pad)
     B = queries.shape[0]
-    E = entries.shape[0]
+    E = entries.shape[-1]
     if E > pool_size:
         raise ValueError(f"entries ({E}) exceed pool size ({pool_size})")
-    ids0 = jnp.broadcast_to(entries[None, :], (B, E))
+    if entries.ndim == 1:
+        ids0 = jnp.broadcast_to(entries[None, :], (B, E))
+    else:
+        ids0 = entries                                           # (B, E)
     d2 = score_rows(x_pad, queries, ids0)                        # (B, E)
+    d2 = jnp.where(ids0 == n, INF_DIST, d2)
     if live_pad is not None:
         d2 = jnp.where(live_pad[ids0], d2, INF_DIST)
     order = jnp.argsort(d2, axis=1)
@@ -139,12 +159,13 @@ def init_state(x_pad, queries: jnp.ndarray,
             [d2, jnp.full((B, pad), INF_DIST, jnp.float32)], 1),
         expanded=jnp.zeros((B, pool_size), bool),
     )
-    seen = jnp.zeros((B, n + 1), bool).at[:, entries].set(True)
+    seen = jnp.zeros((B, n + 1), bool).at[
+        jnp.arange(B)[:, None], ids0].set(True)
     # The sentinel column stays True so scatters of invalid ids are no-ops
     # for the "unseen" test.
     seen = seen.at[:, n].set(True)
     stats = SearchStats(
-        dist_count=jnp.full((B,), E, jnp.int32),
+        dist_count=jnp.sum((ids0 != n).astype(jnp.int32), axis=1),
         update_count=jnp.zeros((B,), jnp.int32),
         hops=jnp.zeros((B,), jnp.int32),
         terminated_early=jnp.zeros((B,), bool),
@@ -175,7 +196,10 @@ def expand_step(x_pad, adj_pad: jnp.ndarray,
     expanded = state.pool.expanded.at[rows, slot].set(
         state.pool.expanded[rows, slot] | lane)
 
-    nbrs = adj_pad[p]                                            # (B, R)
+    if adj_pad.ndim == 3:                                        # per-lane
+        nbrs = adj_pad[rows, p]                                  # (B, R)
+    else:
+        nbrs = adj_pad[p]                                        # (B, R)
     already = jnp.take_along_axis(state.seen, nbrs, axis=1)      # (B, R)
     valid = (nbrs != n) & (~already) & lane[:, None]
     if live_pad is not None:

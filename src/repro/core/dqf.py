@@ -1,9 +1,10 @@
 """DQF — the Dual-Index Query Framework (paper §4), end to end.
 
 Host-side orchestrator tying together the mutable vector store, the full
-NSSG, the hot index, the query counter, the decision tree, and the jitted
-search kernels.  This is the single-shard engine; :mod:`repro.serving.sharded`
-wraps it with shard_map for the multi-device deployment.
+NSSG, the tenant registry (per-tenant query counters + hot indexes), the
+decision tree, and the jitted search kernels.  This is the single-shard
+engine; :mod:`repro.serving.sharded` wraps it with shard_map for the
+multi-device deployment.
 
 Typical flow::
 
@@ -18,6 +19,16 @@ Mutable lifecycle (beyond paper — DGAI/Quake-style update support)::
     ext = dqf.insert(new_rows)            # append + local graph re-link
     dqf.delete(ext[:10])                  # tombstone + neighbor patch-through
     dqf.compact()                         # drop tombstones, remap, repair
+
+Multi-tenant preference (beyond paper — :mod:`repro.tenancy`): every
+preference-shaped thing (counter, hot index, Alg-2 rebuild clock) lives
+per tenant while the Full Index stays shared.  ``search``/``record``/
+``warm``/``rebuild_hot``/``maybe_rebuild_hot`` take ``tenant=``; omitting
+it targets the default tenant, which preserves the single-workload API
+exactly (``dqf.counter``/``dqf.hot`` alias the default tenant's state)::
+
+    dqf.warm(stream_a, tenant="a")        # auto-creates tenant "a"
+    dqf.search(queries_a, tenant="a")     # a's hot index, a's counter
 
 All storage (rows, quant codes, liveness, stable external ids) lives in
 ``dqf.store`` (:class:`repro.store.VectorStore`); device tables are padded
@@ -35,6 +46,7 @@ import numpy as np
 
 from repro.quant import QuantState, build_quantizer
 from repro.store import VectorStore
+from repro.tenancy import DEFAULT_TENANT, TenantRegistry, TenantState
 
 from . import beam_search as bs
 from .decision_tree import DecisionTree, TreeArrays, train_tree
@@ -69,15 +81,12 @@ class DQF:
         self.cfg = cfg or DQFConfig()
         self.store: Optional[VectorStore] = None
         self.full: Optional[SSGIndex] = None
-        self.hot: Optional[HotIndex] = None
         self.tree: Optional[DecisionTree] = None
-        self.counter: Optional[QueryCounter] = None
+        self.tenants: Optional[TenantRegistry] = None
         self.timings = _Timings()
         self._dev = {}
         self._dev_epoch = -1
         self._dev_rows_epoch = -1
-        self._dev_hot_key = None
-        self._hot_token = 0          # bumps whenever self.hot is replaced
         self._adj_buf: Optional[np.ndarray] = None
 
     # -------------------------------------------------------------- storage
@@ -90,6 +99,44 @@ class DQF:
     def quant(self) -> Optional[QuantState]:
         return self.store.quant if self.store is not None else None
 
+    # ------------------------------------------------------------- tenants
+    @property
+    def counter(self) -> Optional[QueryCounter]:
+        """The default tenant's query counter (single-workload API)."""
+        return self.tenants.default.counter if self.tenants else None
+
+    @counter.setter
+    def counter(self, c: QueryCounter) -> None:
+        self.tenants.default.counter = c
+
+    @property
+    def hot(self) -> Optional[HotIndex]:
+        """The default tenant's hot index (single-workload API)."""
+        return self.tenants.default.hot if self.tenants else None
+
+    @hot.setter
+    def hot(self, h: Optional[HotIndex]) -> None:
+        self.tenants.default.set_hot(h)
+
+    def _tenant(self, tenant, *, create: bool = False) -> TenantState:
+        """Resolve a tenant name (or TenantState) to its state."""
+        self._require()                 # no registry before build()
+        if isinstance(tenant, TenantState):
+            return tenant
+        if create and tenant not in self.tenants:
+            return self.tenants.create(tenant)
+        return self.tenants.get(tenant)
+
+    def create_tenant(self, name: str) -> TenantState:
+        """Register a new tenant (cold counter, no hot index yet)."""
+        self._require()
+        return self.tenants.create(name)
+
+    def evict_tenant(self, name: str) -> None:
+        """Drop a tenant's preference state; the Full Index is untouched."""
+        self._require()
+        self.tenants.evict(name)
+
     # ------------------------------------------------------------------ build
     @property
     def _ssg_params(self) -> SSGParams:
@@ -99,16 +146,15 @@ class DQF:
 
     def build(self, x: np.ndarray,
               ext_ids: Optional[np.ndarray] = None) -> "DQF":
-        """Build the full index (Alg 2 line 2) and init the counter.
+        """Build the full index (Alg 2 line 2) and init the tenant registry.
 
-        Rebuilding an existing instance replaces the store wholesale: the
-        hot index (whose ids reference the old store) and every cached
-        device table are dropped.
+        Rebuilding an existing instance replaces the store wholesale: every
+        tenant (whose counters and hot ids reference the old store) and
+        every cached device table are dropped; a fresh default tenant is
+        created.
         """
-        self.hot = None
         self._dev = {}
         self._dev_epoch = self._dev_rows_epoch = -1
-        self._dev_hot_key = None
         quant = None
         x = np.ascontiguousarray(x, np.float32)
         if self.cfg.quant.enabled:
@@ -122,8 +168,8 @@ class DQF:
         self.timings.full_build = time.perf_counter() - t0
         self._set_full_adj(_to_free_slots(built.adj, built.n),
                            built.entries)
-        self.counter = QueryCounter(self.store.n,
-                                    trigger=self.cfg.n_query_trigger)
+        self.tenants = TenantRegistry(self.store.n,
+                                      trigger=self.cfg.n_query_trigger)
         self._sync_device()
         return self
 
@@ -144,9 +190,10 @@ class DQF:
         inserts within capacity and all deletes keep every jitted search
         shape stable — only the table *contents* are re-uploaded, and only
         the tables a mutation actually touched: the big row/code tables
-        follow ``store.rows_epoch`` (deletes skip them), the graph/liveness
-        tables follow ``store.epoch``, and the hot tables follow the hot
-        index identity + capacity.
+        follow ``store.rows_epoch`` (deletes skip them) and the
+        graph/liveness tables follow ``store.epoch``.  Hot tables are
+        per-tenant and live in :meth:`TenantState.hot_tables` (cached on
+        hot identity + capacity there).
         """
         st = self.store
         if force or self._dev_epoch != st.epoch:
@@ -161,22 +208,6 @@ class DQF:
             self._dev["entries"] = jnp.asarray(self.full.entries)
             self._dev["live_pad"] = st.padded_live()
             self._dev_epoch = st.epoch
-        if self.hot is not None:
-            key = (self._hot_token, st.capacity)
-            if force or self._dev_hot_key != key:
-                self._sync_hot_device()
-                self._dev_hot_key = key
-
-    def _sync_hot_device(self) -> None:
-        st = self.store
-        self._dev["x_hot_pad"] = bs.pad_dataset(
-            jnp.asarray(st.x[self.hot.ids]))
-        self._dev["adj_hot_pad"] = bs.pad_adjacency(
-            jnp.asarray(self.hot.graph.adj))
-        self._dev["hot_ids_pad"] = jnp.concatenate(
-            [jnp.asarray(self.hot.ids, jnp.int32),
-             jnp.asarray([st.capacity], jnp.int32)])
-        self._dev["hot_entries"] = jnp.asarray(self.hot.graph.entries)
 
     # ------------------------------------------------------------- hot index
     @property
@@ -185,51 +216,73 @@ class DQF:
         return min(live, max(self.cfg.k + 1,
                              int(round(self.cfg.index_ratio * live))))
 
-    def rebuild_hot(self, hot_ids: Optional[np.ndarray] = None) -> HotIndex:
-        """Alg 2 lines 6-10 (hot_ids override = explicit head selection)."""
+    def rebuild_hot(self, hot_ids: Optional[np.ndarray] = None, *,
+                    tenant=DEFAULT_TENANT) -> HotIndex:
+        """Alg 2 lines 6-10 for one tenant (hot_ids override = explicit
+        head selection).  Each tenant rebuilds on its own clock."""
+        t = self._tenant(tenant)
         if hot_ids is None:
-            hot_ids = self.counter.top(self.hot_size, alive=self.store.alive)
-        version = (self.hot.version + 1) if self.hot else 0
-        self.hot = build_hot_index(self.store.x, hot_ids, self._ssg_params,
-                                   n_entry=self.cfg.n_entry, version=version)
-        self._hot_token += 1
-        self.timings.hot_build = self.hot.build_seconds
-        self.counter.reset_trigger()
-        self._sync_device()
-        return self.hot
+            hot_ids = t.counter.top(self.hot_size, alive=self.store.alive)
+        version = (t.hot.version + 1) if t.hot else 0
+        t.set_hot(build_hot_index(self.store.x, hot_ids, self._ssg_params,
+                                  n_entry=self.cfg.n_entry, version=version))
+        self.timings.hot_build = t.hot.build_seconds
+        t.counter.reset_trigger()
+        return t.hot
 
-    def warm(self, queries: np.ndarray, targets: Optional[np.ndarray] = None
-             ) -> HotIndex:
-        """Seed the counter from a historical stream and build the hot index.
+    def warm(self, queries: np.ndarray, targets: Optional[np.ndarray] = None,
+             *, tenant=DEFAULT_TENANT) -> HotIndex:
+        """Seed a tenant's counter from a historical stream and build its
+        hot index.  An unknown tenant name is created on the spot.
 
         If target ids are unknown, resolves them with a baseline search.
         """
+        t = self._tenant(tenant, create=True)
         if targets is None:
             res = self.search_baseline(queries)
             targets = np.asarray(res.ids)
-        self.counter.record(targets)
-        return self.rebuild_hot()
+        t.counter.record(targets)
+        return self.rebuild_hot(tenant=t)
+
+    def record(self, ids: np.ndarray, *, tenant=DEFAULT_TENANT) -> None:
+        """Feed result ids into a tenant's counter (Alg 2 line 4)."""
+        self._tenant(tenant).counter.record(np.asarray(ids))
+
+    def maybe_rebuild_hot(self, *, tenant=DEFAULT_TENANT) -> bool:
+        """Rebuild a tenant's hot index iff its Alg-2 trigger is due."""
+        t = self._tenant(tenant)
+        if not t.counter.due:
+            return False
+        self.rebuild_hot(tenant=t)
+        return True
 
     # ------------------------------------------------------------ decision tree
     def fit_tree(self, history_queries: np.ndarray, *,
                  max_depth: Optional[int] = None, dedup: bool = True,
-                 min_leaf: int = 16) -> DecisionTree:
-        """Paper §4.3.2: sample historical queries, dedup, trace, fit CART."""
-        self._require(hot=True)
+                 min_leaf: int = 16, tenant=DEFAULT_TENANT) -> DecisionTree:
+        """Paper §4.3.2: sample historical queries, dedup, trace, fit CART.
+
+        The tree is a *shared* artifact (its features are distribution
+        shapes, not ids); ``tenant`` selects whose hot index the training
+        traces run against — the default tenant unless stated.
+        """
+        t = self._tenant(tenant)
+        self._require(t)
         self._sync_device()
         q = np.asarray(history_queries, np.float32)
         if dedup:
             q = np.unique(q, axis=0)
         t0 = time.perf_counter()
         c = self.cfg
+        hd = t.hot_tables(self.store)
         # Train on what the deployed search will scan: the quantized table
         # when quant is enabled, else the float32 vectors.
         table = self._dev.get("qtable")
         feats, labels = collect_training_data(
             table if table is not None else self._dev["x_pad"],
             self._dev["adj_pad"],
-            self._dev["x_hot_pad"], self._dev["adj_hot_pad"],
-            self._dev["hot_ids_pad"], self._dev["hot_entries"], q,
+            hd["x_hot_pad"], hd["adj_hot_pad"],
+            hd["hot_ids_pad"], hd["hot_entries"], q,
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
             eval_gap=c.eval_gap, max_hops=c.max_hops, hot_mode="graph",
             live_pad=self._dev["live_pad"])
@@ -241,16 +294,19 @@ class DQF:
 
     # ----------------------------------------------------------------- search
     def search(self, queries: np.ndarray, *, record: bool = True,
-               auto_rebuild: bool = True, use_kernel: bool = False
-               ) -> SearchResult:
-        """Dynamic dual-index search (Algorithm 4)."""
-        self._require(hot=True)
+               auto_rebuild: bool = True, use_kernel: bool = False,
+               tenant=DEFAULT_TENANT) -> SearchResult:
+        """Dynamic dual-index search (Algorithm 4) through one tenant's
+        hot index; results feed that tenant's counter and rebuild clock."""
+        t = self._tenant(tenant)
+        self._require(t)
         self._sync_device()
         c = self.cfg
+        hd = t.hot_tables(self.store)
         res, hot_stats, _ = dynamic_search(
             self._dev["x_pad"], self._dev["adj_pad"],
-            self._dev["x_hot_pad"], self._dev["adj_hot_pad"],
-            self._dev["hot_ids_pad"], self._dev["hot_entries"],
+            hd["x_hot_pad"], hd["adj_hot_pad"],
+            hd["hot_ids_pad"], hd["hot_entries"],
             self.tree.arrays if self.tree is not None else None,
             jnp.asarray(queries, jnp.float32),
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
@@ -260,20 +316,23 @@ class DQF:
             qtable=self._dev.get("qtable"), rerank_k=self._rerank_k,
             live_pad=self._dev["live_pad"])
         if record:
-            self.counter.record(np.asarray(res.ids))
-            if auto_rebuild and self.counter.due:       # Alg 2 line 5
-                self.rebuild_hot()
+            t.counter.record(np.asarray(res.ids))
+            if auto_rebuild and t.counter.due:          # Alg 2 line 5
+                self.rebuild_hot(tenant=t)
         return res
 
-    def search_dual_beam(self, queries: np.ndarray) -> SearchResult:
+    def search_dual_beam(self, queries: np.ndarray, *,
+                         tenant=DEFAULT_TENANT) -> SearchResult:
         """Fig 3 ablation: dual index + traditional beam search (no tree)."""
-        self._require(hot=True)
+        t = self._tenant(tenant)
+        self._require(t)
         self._sync_device()
         c = self.cfg
+        hd = t.hot_tables(self.store)
         res, _, _ = dynamic_search(
             self._dev["x_pad"], self._dev["adj_pad"],
-            self._dev["x_hot_pad"], self._dev["adj_hot_pad"],
-            self._dev["hot_ids_pad"], self._dev["hot_entries"], None,
+            hd["x_hot_pad"], hd["adj_hot_pad"],
+            hd["hot_ids_pad"], hd["hot_entries"], None,
             jnp.asarray(queries, jnp.float32),
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
             eval_gap=c.eval_gap, add_step=c.add_step,
@@ -321,7 +380,7 @@ class DQF:
                       self._ssg_params, self.full.entries,
                       alive=self.store.alive)
         self.full = SSGIndex(adj=adj, entries=self.full.entries, n=n_new)
-        self.counter.grow(n_new)
+        self.tenants.grow(n_new)        # every tenant's new rows start cold
         return new_ext
 
     def delete(self, ext_ids: np.ndarray) -> int:
@@ -329,10 +388,11 @@ class DQF:
 
         The rows stay gatherable (search masks them everywhere) and their
         in-neighbors inherit their live out-edges so reachability through
-        the tombstones survives.  If a deleted row was in the hot index,
-        the hot index is rebuilt immediately (it is tiny).  A delete that
-        would leave fewer than two live rows is refused *before* any
-        mutation (an index that empty needs a rebuild, not a delete).
+        the tombstones survives.  Every tenant whose hot index held a
+        deleted row gets its hot index rebuilt immediately (hot sets are
+        tiny).  A delete that would leave fewer than two live rows is
+        refused *before* any mutation (an index that empty needs a
+        rebuild, not a delete).
         """
         self._require()
         requested = np.unique(np.asarray(ext_ids).reshape(-1))
@@ -343,8 +403,8 @@ class DQF:
         dead = self.store.mark_dead(ext_ids)
         patch_dead_edges(self.store.x, self.full.adj, dead, self.store.alive)
         self._refresh_entries()
-        if self.hot is not None and np.isin(dead, self.hot.ids).any():
-            self.rebuild_hot()
+        for name in self.tenants.hot_tenants_containing(dead):
+            self.rebuild_hot(tenant=name)
         return int(dead.size)
 
     def _refresh_entries(self) -> None:
@@ -366,10 +426,11 @@ class DQF:
     def compact(self) -> dict:
         """Rewrite storage without tombstones; preserves external ids.
 
-        Internal ids shift (the store returns the remap); the graph, hot
-        index, and counter are remapped in place and graph connectivity is
-        re-verified.  In-flight search state (e.g. live serving waves) is
-        invalidated — drain engines first.
+        Internal ids shift (the store returns the remap); the graph, every
+        tenant's hot index, and every tenant's counter are remapped in
+        place and graph connectivity is re-verified.  In-flight search
+        state (e.g. live serving waves) is invalidated — drain engines
+        first.
         """
         self._require()
         res = self.store.compact()
@@ -381,15 +442,10 @@ class DQF:
             ent = np.asarray([medoid(self.store.x)], np.int32)
         adj = repair_free_adjacency(self.store.x, adj, int(ent[0]))
         self._set_full_adj(adj, ent)
-        self.counter.remap(remap)
-        if self.hot is not None:
-            new_hot = remap[self.hot.ids]
-            if (new_hot >= 0).all():
-                self.hot = dataclasses.replace(
-                    self.hot, ids=new_hot.astype(np.int32))
-                self._hot_token += 1
-            else:                       # unreachable if delete() rebuilt, but
-                self.rebuild_hot()      # stay safe for hot_ids overrides
+        for name in self.tenants.remap(remap):
+            # unreachable if delete() rebuilt eagerly, but stay safe for
+            # explicit hot_ids overrides
+            self.rebuild_hot(tenant=name)
         self._sync_device()
         return {"dropped": res.dropped, "n": self.store.n, "remap": remap}
 
@@ -413,16 +469,18 @@ class DQF:
     def index_nbytes(self) -> dict:
         """Byte accounting per component.
 
-        ``full``/``hot`` are graph bytes (paper Table 6); ``full_vec`` is
-        the float32 vector table (reported separately — it is data, not
-        index, and moves off-device in a rerank-only deployment);
-        ``quant`` the compressed codes+codebook; ``total`` the resident
-        index footprint (graphs + codes); ``compression`` = full_vec /
-        quant.
+        ``full``/``hot`` are graph bytes (paper Table 6; ``hot`` sums every
+        tenant's hot index); ``full_vec`` is the float32 vector table
+        (reported separately — it is data, not index, and moves off-device
+        in a rerank-only deployment); ``quant`` the compressed
+        codes+codebook; ``total`` the resident index footprint (graphs +
+        codes); ``compression`` = full_vec / quant.
         """
         st = self.store
+        hot_bytes = sum(t.hot.nbytes() for t in (self.tenants or [])
+                        if t.hot is not None)
         out = {"full": int(self.full.adj.nbytes) if self.full else 0,
-               "hot": int(self.hot.nbytes()) if self.hot else 0,
+               "hot": int(hot_bytes),
                "full_vec": int(st.x.nbytes) if st is not None else 0,
                "quant": int(st.quant.nbytes()) if st and st.quant else 0}
         out["total"] = out["full"] + out["hot"] + out["quant"]
@@ -431,7 +489,14 @@ class DQF:
         return out
 
     def save(self, path: str) -> None:
-        self._require(hot=False)
+        """Persist store, graph, tree and *every* tenant's preference state.
+
+        The default tenant keeps the pre-tenancy key names (``counts``,
+        ``counter_since``, ``hot_*``); extra tenants are saved under
+        ``tenant{i}_*`` keys listed by ``tenant_names``, so pre-tenancy
+        checkpoints load as a single default tenant unchanged.
+        """
+        self._require()
         arrs = self.store.to_arrays()
         arrs.update(full_adj=self.full.adj,
                     full_entries=self.full.entries,
@@ -442,6 +507,17 @@ class DQF:
                         hot_entries=self.hot.graph.entries,
                         hot_ids=self.hot.ids,
                         hot_version=np.int64(self.hot.version))
+        extra = [t for t in self.tenants if t.name != DEFAULT_TENANT]
+        if extra:
+            arrs["tenant_names"] = np.array([t.name for t in extra])
+            for i, t in enumerate(extra):
+                arrs[f"tenant{i}_counts"] = t.counter.counts
+                arrs[f"tenant{i}_since"] = np.int64(t.counter.since_rebuild)
+                if t.hot is not None:
+                    arrs[f"tenant{i}_hot_adj"] = t.hot.graph.adj
+                    arrs[f"tenant{i}_hot_entries"] = t.hot.graph.entries
+                    arrs[f"tenant{i}_hot_ids"] = t.hot.ids
+                    arrs[f"tenant{i}_hot_version"] = np.int64(t.hot.version)
         if self.tree is not None:
             t = self.tree.arrays
             arrs.update(tree_feature=np.asarray(t.feature),
@@ -461,10 +537,24 @@ class DQF:
         n = self.store.n
         self._set_full_adj(_to_free_slots(z["full_adj"], n),
                            z["full_entries"])
-        self.counter = QueryCounter(n, trigger=self.cfg.n_query_trigger)
+        self.tenants = TenantRegistry(n, trigger=self.cfg.n_query_trigger)
         self.counter.counts = z["counts"]
         if "counter_since" in z:
             self.counter.since_rebuild = int(z["counter_since"])
+        if "tenant_names" in z:
+            for i, name in enumerate(str(s) for s in z["tenant_names"]):
+                t = self.tenants.create(name)
+                t.counter.counts = z[f"tenant{i}_counts"]
+                t.counter.since_rebuild = int(z[f"tenant{i}_since"])
+                if f"tenant{i}_hot_ids" in z:
+                    graph = SSGIndex(
+                        adj=z[f"tenant{i}_hot_adj"],
+                        entries=z[f"tenant{i}_hot_entries"],
+                        n=int(z[f"tenant{i}_hot_ids"].shape[0]))
+                    t.set_hot(HotIndex(
+                        graph=graph, ids=z[f"tenant{i}_hot_ids"],
+                        build_seconds=0.0,
+                        version=int(z[f"tenant{i}_hot_version"])))
         if "tree_feature" in z:
             arrays = TreeArrays(
                 feature=jnp.asarray(z["tree_feature"]),
@@ -504,8 +594,10 @@ class DQF:
         self._sync_device(force=True)
         return self
 
-    def _require(self, hot: bool = False) -> None:
+    def _require(self, tenant: Optional[TenantState] = None) -> None:
         if self.full is None:
             raise RuntimeError("call build() first")
-        if hot and self.hot is None:
-            raise RuntimeError("hot index missing — call warm()/rebuild_hot()")
+        if tenant is not None and tenant.hot is None:
+            raise RuntimeError(
+                f"hot index missing for tenant {tenant.name!r} — call "
+                "warm()/rebuild_hot()")

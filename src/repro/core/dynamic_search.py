@@ -25,7 +25,8 @@ from .features import feature_matrix, hot_features
 from .types import (INF_DIST, DQFConfig, HotFeatures, PoolState, SearchResult,
                     SearchStats)
 
-__all__ = ["dynamic_search", "hot_phase", "DynamicState"]
+__all__ = ["dynamic_search", "hot_phase", "hot_phase_stacked",
+           "DynamicState"]
 
 _INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -81,6 +82,53 @@ def hot_phase(x_hot_pad, adj_hot_pad, hot_entries, queries, *, pool_size,
                          use_kernel=use_kernel)
 
 
+def hot_phase_stacked(xs_hot, adjs_hot, entries_hot, mask_hot, tenant_idx,
+                      queries, *, pool_size, max_hops, mode: str = "graph"):
+    """Phase 1 over *stacked* per-tenant hot tables (:mod:`repro.tenancy`).
+
+    ``xs_hot (T, H+1, d)`` / ``adjs_hot (T, H+1, R)`` / ``entries_hot
+    (T, E)`` / ``mask_hot (T, H+1)`` hold every tenant's hot index in one
+    set of arrays; ``tenant_idx (B,)`` routes each query to its tenant's
+    row by gather, so a mixed-tenant batch runs as one jitted search with
+    no per-tenant recompilation.  Returns local-id pool + stats, same
+    contract as :func:`hot_phase` (local sentinel = H).
+    """
+    x = xs_hot[tenant_idx]                                 # (B, H+1, d)
+    ent = entries_hot[tenant_idx]                          # (B, E)
+    if mode == "graph":
+        adj = adjs_hot[tenant_idx]                         # (B, H+1, R)
+        state = bs.init_state(x, queries, ent, pool_size)
+        state = bs.beam_loop(x, adj, queries, state, max_hops)
+        return state.pool, state.stats
+    # "mxu" mode: brute-force each lane against its tenant's hot rows.
+    # (On TPU the shared-table Pallas scorer doesn't apply per lane; a
+    # batched einsum keeps the same semantics at stacked-hot scale.)
+    B = queries.shape[0]
+    H = x.shape[1] - 1
+    valid = mask_hot[tenant_idx][:, :H]                    # (B, H)
+    d2 = jnp.sum((x[:, :H, :] - queries[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.where(valid, d2, INF_DIST)
+    take = min(pool_size, H)
+    neg, ids = jax.lax.top_k(-d2, take)
+    dists = -neg
+    ids = jnp.where(dists >= INF_DIST, H, ids).astype(jnp.int32)
+    pad = pool_size - take
+    pool = PoolState(
+        ids=jnp.concatenate(
+            [ids, jnp.full((B, pad), H, jnp.int32)], axis=1),
+        dists=jnp.concatenate(
+            [dists, jnp.full((B, pad), INF_DIST, jnp.float32)], axis=1),
+        expanded=jnp.zeros((B, pool_size), bool),
+    )
+    stats = SearchStats(
+        dist_count=jnp.sum(valid.astype(jnp.int32), axis=1),
+        update_count=jnp.zeros((B,), jnp.int32),
+        hops=jnp.zeros((B,), jnp.int32),
+        terminated_early=jnp.zeros((B,), bool),
+    )
+    return pool, stats
+
+
 def _seed_full_state(hot_pool: PoolState, hot_ids_pad: jnp.ndarray,
                      n: int, pool_size: int,
                      live_pad: Optional[jnp.ndarray] = None) -> bs.BeamState:
@@ -89,9 +137,14 @@ def _seed_full_state(hot_pool: PoolState, hot_ids_pad: jnp.ndarray,
     Implements Alg 4 line 11 ("reset visit status of nodes in L"): all
     entries arrive unexpanded.  ``live_pad`` masks hot results whose global
     row was tombstoned after the hot index was last rebuilt.
+    ``hot_ids_pad`` is the shared ``(H+1,)`` local→global map, or per-lane
+    ``(B, H+1)`` rows gathered from a stacked multi-tenant table.
     """
     B, s_l = hot_pool.ids.shape
-    gids = hot_ids_pad[hot_pool.ids]                      # (B, s_l) global
+    if hot_ids_pad.ndim == 2:                             # per-lane map
+        gids = jnp.take_along_axis(hot_ids_pad, hot_pool.ids, axis=1)
+    else:
+        gids = hot_ids_pad[hot_pool.ids]                  # (B, s_l) global
     gids = jnp.where(hot_pool.dists >= INF_DIST, n, gids).astype(jnp.int32)
     dists = hot_pool.dists
     if live_pad is not None:

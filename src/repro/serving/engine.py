@@ -25,6 +25,14 @@ re-captures the padded device tables (adjacency, liveness, codes) whenever
 an insert/delete lands, without disturbing in-flight lanes.  Rows deleted
 mid-flight are filtered at retirement.  Compaction remaps internal ids, so
 it is only legal on a drained engine (the refresh check enforces this).
+
+The engine is *multi-tenant* (:mod:`repro.tenancy`): ``submit`` takes a
+``tenant=``, lanes of different tenants ride the same wave, and the refill
+hot phase gathers each lane's own hot-table slice from the registry's
+stacked device arrays — one jitted tick serves every tenant, no per-tenant
+recompilation.  A retiring lane feeds its tenant's query counter and, when
+that tenant's Alg-2 trigger is due, rebuilds that tenant's hot index (the
+full phase is tenant-agnostic, so in-flight lanes are undisturbed).
 """
 
 from __future__ import annotations
@@ -39,25 +47,33 @@ import jax.numpy as jnp
 
 from repro.core import beam_search as bs
 from repro.core.decision_tree import predict_jax
-from repro.core.dynamic_search import _seed_full_state, hot_phase
+from repro.core.dynamic_search import _seed_full_state, hot_phase_stacked
 from repro.core.features import feature_matrix, hot_features
 from repro.core.types import DQFConfig, HotFeatures
+from repro.tenancy import DEFAULT_TENANT
 
 __all__ = ["WaveEngine", "EngineStats"]
+
+# Retirement latencies kept for p99 (windowed, so a long-running engine's
+# memory stays bounded; ~4k samples give a stable tail estimate).
+LATENCY_WINDOW = 4096
 
 
 @dataclasses.dataclass
 class EngineStats:
     completed: int = 0
     straggled: int = 0
+    dropped: int = 0            # requests whose tenant was evicted queued
     ticks: int = 0
     total_hops: int = 0
-    latencies_ms: list = dataclasses.field(default_factory=list)
+    latencies_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
 
     def qps(self, wall_s: float) -> float:
         return self.completed / wall_s if wall_s > 0 else 0.0
 
     def p99_ms(self) -> float:
+        """p99 over the most recent ``latencies_ms.maxlen`` retirements."""
         if not self.latencies_ms:
             return 0.0
         return float(np.percentile(self.latencies_ms, 99))
@@ -66,22 +82,27 @@ class EngineStats:
 class WaveEngine:
     """Continuous-batching engine over a built DQF instance."""
 
-    def __init__(self, dqf, *, wave_size: int = 64, tick_hops: int = 8):
+    def __init__(self, dqf, *, wave_size: int = 64, tick_hops: int = 8,
+                 latency_window: int = LATENCY_WINDOW):
         self.dqf = dqf
         self.cfg: DQFConfig = dqf.cfg
         self.wave = wave_size
         self.tick_hops = tick_hops
         self.queue: collections.deque = collections.deque()
-        self.stats = EngineStats()
+        self.stats = EngineStats(
+            latencies_ms=collections.deque(maxlen=latency_window))
         dqf._sync_device()
         self._d = dqf.store.d
         self._epoch = dqf.store.epoch
         self._remap_epoch = dqf.store.remap_epoch
         self._cap = dqf.store.capacity
         self._tick_fn = self._build_tick()
-        self._lane_meta = [None] * wave_size   # (request_id, t_enqueue)
+        # per-lane (request_id, t_enqueue, tenant_name, tenant_gen)
+        self._lane_meta = [None] * wave_size
         self._results: dict = {}
         self._state = None
+        self._next_rid = 0          # monotonic: ids never collide, even if
+                                    # callers drain/clear _results mid-run
 
     # ------------------------------------------------------------ jitted ops
     def _build_tick(self):
@@ -124,11 +145,23 @@ class WaveEngine:
         return jax.jit(tick)
 
     # ---------------------------------------------------------------- public
-    def submit(self, queries: np.ndarray) -> list:
+    def submit(self, queries: np.ndarray, *,
+               tenant: str = DEFAULT_TENANT) -> list:
+        """Enqueue queries for one tenant; returns their request ids.
+
+        Mixed-tenant waves are the point: interleave ``submit`` calls for
+        different tenants and one jitted tick serves them all.
+        """
+        t = self.dqf.tenants.get(tenant)       # unknown tenant → KeyError
+        if t.hot is None:
+            raise RuntimeError(
+                f"tenant {tenant!r} has no hot index — warm() it before "
+                "serving")
         ids = []
         for q in np.asarray(queries, np.float32):
-            rid = len(self._results) + len(self.queue)
-            self.queue.append((rid, q, time.perf_counter()))
+            rid = self._next_rid
+            self._next_rid += 1
+            self.queue.append((rid, q, time.perf_counter(), t.name, t.gen))
             ids.append(rid)
         return ids
 
@@ -211,21 +244,38 @@ class WaveEngine:
             self._table = qtable.with_queries(jnp.asarray(self._queries))
 
     def _refill(self):
-        """Seed free lanes from the queue (hot phase runs per refill batch)."""
+        """Seed free lanes from the queue (hot phase runs per refill batch).
+
+        The hot phase runs over the registry's *stacked* tables: each lane
+        gathers its own tenant's hot-table slice by ``tenant_idx``, so one
+        refill batch mixes tenants freely.  Requests whose tenant was
+        evicted while they sat in the queue (or whose name was re-created
+        as a *different* tenant — the ``gen`` check) are retired
+        immediately with an empty result instead of poisoning the wave.
+        """
+        reg = self.dqf.tenants
         free = [i for i, m in enumerate(self._lane_meta) if m is None]
-        take = min(len(free), len(self.queue))
-        if take == 0:
+        reqs = []
+        while self.queue and len(reqs) < len(free):
+            r = self.queue.popleft()
+            name, gen = r[3], r[4]
+            if name in reg and reg.get(name).gen == gen:
+                reqs.append(r)
+            else:                     # dead request: drop, keep popping so
+                self._results[r[0]] = self._dropped_result(name)
+                self.stats.dropped += 1       # live ones behind it still
+        if not reqs:                          # fill this wave's free lanes
             return
-        lanes = free[:take]
-        reqs = [self.queue.popleft() for _ in range(take)]
+        lanes = free[:len(reqs)]
         q = jnp.asarray(np.stack([r[1] for r in reqs]))
-        hot_pool, _ = hot_phase(
-            self.dqf._dev["x_hot_pad"], self.dqf._dev["adj_hot_pad"],
-            self.dqf._dev["hot_entries"], q,
+        stk = reg.stacked(self.dqf.store)
+        tidx = jnp.asarray([reg.slot_of(r[3]) for r in reqs], jnp.int32)
+        hot_pool, _ = hot_phase_stacked(
+            stk.x, stk.adj, stk.entries, stk.mask, tidx, q,
             pool_size=self.cfg.hot_pool, max_hops=self.cfg.max_hops,
             mode=self.cfg.hot_mode)
         hf = hot_features(hot_pool, self.cfg.k)
-        seeded = _seed_full_state(hot_pool, self.dqf._dev["hot_ids_pad"],
+        seeded = _seed_full_state(hot_pool, stk.ids[tidx],
                                   self.dqf.store.capacity,
                                   self.cfg.full_pool,
                                   self.dqf._dev["live_pad"])
@@ -245,9 +295,17 @@ class WaveEngine:
             self._hot_first[lane] = float(hf.first[j])
             self._hot_ratio[lane] = float(hf.first_div_kth[j])
             self._evals[lane] = 0
-            self._lane_meta[lane] = (reqs[j][0], reqs[j][2])
+            self._lane_meta[lane] = (reqs[j][0], reqs[j][2], reqs[j][3],
+                                     reqs[j][4])
         self._state = jax.tree.map(jnp.asarray, st)
         self._update_table()
+
+    def _dropped_result(self, tenant: str) -> dict:
+        """Empty result for a request whose tenant vanished in the queue."""
+        k = self.cfg.k
+        return {"ids": np.full(k, self.dqf.store.capacity, np.int32),
+                "dists": np.full(k, np.inf, np.float32),
+                "hops": 0, "tenant": tenant, "dropped": True}
 
     def _retire_result(self, pool_ids: np.ndarray, pool_dists: np.ndarray,
                        query: np.ndarray):
@@ -295,16 +353,26 @@ class WaveEngine:
         for lane, meta in enumerate(self._lane_meta):
             if meta is None or active[lane]:
                 continue
-            rid, t_in = meta
+            rid, t_in, tenant, gen = meta
             ids, dists = self._retire_result(
                 np.asarray(state.pool.ids[lane]),
                 np.asarray(state.pool.dists[lane]), self._queries[lane])
             hops = int(np.asarray(state.stats.hops[lane]))
-            self._results[rid] = {"ids": ids, "dists": dists, "hops": hops}
+            self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
+                                  "tenant": tenant}
             self.stats.completed += 1
             self.stats.total_hops += hops
             if hops >= self.cfg.max_hops:
                 self.stats.straggled += 1
             self.stats.latencies_ms.append((now - t_in) * 1e3)
             self._lane_meta[lane] = None
+            # Preference feedback: the retiring lane's results feed its
+            # tenant's counter, and a due Alg-2 clock rebuilds that
+            # tenant's hot index (safe mid-wave: hot tables are only read
+            # at refill).  Evicted-mid-flight tenants retire silently; the
+            # ``gen`` check keeps a re-created namesake's counter clean.
+            if tenant in self.dqf.tenants \
+                    and self.dqf.tenants.get(tenant).gen == gen:
+                self.dqf.record(ids[None, :], tenant=tenant)
+                self.dqf.maybe_rebuild_hot(tenant=tenant)
         self._refill()

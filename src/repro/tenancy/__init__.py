@@ -1,0 +1,18 @@
+"""Multi-tenant preference layer: one Full Index, many hot indexes.
+
+The paper models *one* drifting Zipf workload (§4.2.2); in multi-workload
+serving every tenant has its own Zipf head, and a single global Hot Index
+averages them away.  This package owns everything preference-shaped — the
+per-tenant :class:`~repro.core.hot_index.QueryCounter`, Hot Index, Alg-2
+rebuild clock and hot device tables — so the Full Index (and its storage,
+graph and quantizer) stays shared while preference state multiplies.
+
+Hot sets are cheap (``IR·n`` rows each), so dozens of tenants fit in the
+memory one float32 Full Index used to take.
+"""
+
+from .tenant import DEFAULT_TENANT, TenantState  # noqa: F401
+from .registry import StackedHotTables, TenantRegistry  # noqa: F401
+
+__all__ = ["DEFAULT_TENANT", "TenantState", "TenantRegistry",
+           "StackedHotTables"]

@@ -1,0 +1,240 @@
+"""TenantRegistry — tenant lifecycle, store fan-out, stacked hot tables.
+
+The registry owns every :class:`~repro.tenancy.tenant.TenantState`:
+
+* **Lifecycle** — ``create``/``evict`` with stable integer *slots* (evicted
+  slots are reused lowest-first, so the stacked tables stay dense and a
+  tenant's index never changes while it lives).
+* **Store fan-out** — ``grow`` and ``remap`` forward the vector store's
+  mutation hooks to every tenant's counter (and hot id map), keeping all
+  preference state consistent under insert/delete/compact.
+* **Stacking** — ``stacked()`` packs every tenant's hot tables into
+  capacity-padded device arrays ``(T_pad, H_pad+1, d)`` rows,
+  ``(T_pad, H_pad+1, R)`` local-id adjacency, ``(T_pad, H_pad+1)``
+  local→global id maps and ``(T_pad, E)`` entry seeds.  ``T_pad`` and
+  ``H_pad`` grow geometrically, so jitted shapes stay stable as tenants
+  come and go; the wave engine gathers row ``tenant_idx`` per lane and
+  serves a mixed-tenant wave with one compiled tick.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitonic import next_pow2
+
+from .tenant import DEFAULT_TENANT, TenantState
+
+__all__ = ["StackedHotTables", "TenantRegistry"]
+
+# Matches repro.core.types.PAD_VALUE (not imported: repro.core.dqf imports
+# this package, so tenancy keeps module-level imports out of repro.core).
+_PAD_VALUE = 1e9
+
+
+class StackedHotTables(NamedTuple):
+    """All tenants' hot tables in one set of device arrays.
+
+    Per-tenant hot graphs use local ids ``0..H_pad-1`` with sentinel
+    ``H_pad``; ``ids`` maps local→global (padding slots map to the store
+    *capacity*, the global sentinel).  Empty slots (no tenant / no hot
+    index) are all-sentinel, so a stray query routed there retires with an
+    empty pool instead of corrupting anything.
+    """
+
+    x: jnp.ndarray        # (T_pad, H_pad+1, d) float32 hot vectors
+    adj: jnp.ndarray      # (T_pad, H_pad+1, R) int32 local adjacency
+    ids: jnp.ndarray      # (T_pad, H_pad+1) int32 local→global id map
+    entries: jnp.ndarray  # (T_pad, E) int32 local entry seeds
+    mask: jnp.ndarray     # (T_pad, H_pad+1) bool — True on real hot rows
+
+    @property
+    def h_pad(self) -> int:
+        return self.x.shape[1] - 1
+
+    @property
+    def t_pad(self) -> int:
+        return self.x.shape[0]
+
+
+class TenantRegistry:
+    """Create/evict tenants; fan out store hooks; stack device tables."""
+
+    def __init__(self, n_rows: int, trigger: int, *,
+                 default: str = DEFAULT_TENANT):
+        self._n = int(n_rows)
+        self._trigger = int(trigger)
+        self._tenants: dict[str, TenantState] = {}
+        self._slots: list[Optional[str]] = []
+        self._default_name = default
+        self._stack: Optional[StackedHotTables] = None
+        self._stack_key = None
+        self._gen = 0
+        self.create(default)
+
+    # -------------------------------------------------------------- lifecycle
+    def create(self, name: str) -> TenantState:
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already exists")
+        from repro.core.hot_index import QueryCounter   # lazy: import cycle
+        try:                      # reuse the lowest freed slot (stay dense)
+            slot = self._slots.index(None)
+        except ValueError:
+            slot = len(self._slots)
+            self._slots.append(None)
+        self._gen += 1
+        t = TenantState(name=name,
+                        counter=QueryCounter(self._n, trigger=self._trigger),
+                        slot=slot, gen=self._gen)
+        self._slots[slot] = name
+        self._tenants[name] = t
+        return t
+
+    def evict(self, name: str) -> None:
+        """Drop a tenant's preference state (its slot becomes reusable).
+
+        In-flight lanes of an evicted tenant retire harmlessly: the engine
+        skips counter feedback for names no longer registered.
+        """
+        if name == self._default_name:
+            raise ValueError("cannot evict the default tenant")
+        t = self.get(name)
+        del self._tenants[name]
+        self._slots[t.slot] = None
+
+    def get(self, name: str) -> TenantState:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(f"unknown tenant {name!r} "
+                           f"(have {sorted(self._tenants)})") from None
+
+    @property
+    def default(self) -> TenantState:
+        return self._tenants[self._default_name]
+
+    def slot_of(self, name: str) -> int:
+        return self.get(name).slot
+
+    def names(self) -> list[str]:
+        return list(self._tenants)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tenants
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    def __iter__(self) -> Iterator[TenantState]:
+        return iter(self._tenants.values())
+
+    # ---------------------------------------------------------- store fan-out
+    def grow(self, n_new: int) -> None:
+        """Extend every tenant's counter id space after inserts."""
+        self._n = int(n_new)
+        for t in self._tenants.values():
+            t.counter.grow(n_new)
+
+    def remap(self, remap: np.ndarray) -> list[str]:
+        """Fan a compaction remap out to every counter and hot id map.
+
+        Returns the tenants whose hot index lost a row — the caller must
+        rebuild those (unreachable when deletes rebuild eagerly, but kept
+        for explicit ``hot_ids`` overrides).
+        """
+        need_rebuild = []
+        for t in self._tenants.values():
+            t.counter.remap(remap)
+            if not t.remap_hot(remap):
+                need_rebuild.append(t.name)
+        self._n = self.default.counter.n
+        return need_rebuild
+
+    def hot_tenants_containing(self, ids: np.ndarray) -> list[str]:
+        """Tenants whose hot index references any of ``ids`` (deletions)."""
+        ids = np.asarray(ids)
+        return [t.name for t in self._tenants.values()
+                if t.hot is not None and np.isin(t.hot.ids, ids).any()]
+
+    # ------------------------------------------------------------- stacking
+    def stacked(self, store) -> StackedHotTables:
+        """Stacked device tables, maintained incrementally.
+
+        The padded shapes (``T_pad``, ``H_pad``, adjacency width, entry
+        count, store capacity) change rarely — geometric padding absorbs
+        tenant churn and hot-size drift.  While they hold, a tenant's hot
+        rebuild only re-uploads *that tenant's slot* (device scatter via
+        ``.at[slot].set``) instead of restacking every tenant; a shape
+        change falls back to a full rebuild.
+        """
+        live = [t for t in self._tenants.values() if t.hot is not None]
+        shape_key = (store.capacity,
+                     next_pow2(max(len(self._slots), 1)),
+                     next_pow2(max([t.hot.size for t in live] or [1])),
+                     max([t.hot.graph.adj.shape[1] for t in live] or [1]),
+                     max([t.hot.graph.entries.shape[0] for t in live]
+                         or [1]))
+        slot_key = tuple(
+            (self._tenants[name].gen, self._tenants[name].hot_token)
+            if name is not None else None
+            for name in self._slots) + (None,) * (shape_key[1]
+                                                  - len(self._slots))
+        if self._stack is None or self._stack_key is None \
+                or shape_key != self._stack_key[0]:
+            self._stack = self._build_stack(store, *shape_key)
+        elif slot_key != self._stack_key[1]:
+            old = self._stack_key[1]
+            for slot, k in enumerate(slot_key):
+                if k != old[slot]:
+                    self._update_slot(store, slot, *shape_key)
+        self._stack_key = (shape_key, slot_key)
+        return self._stack
+
+    def _slot_arrays(self, store, slot: int, cap, t_pad, h_pad, r, e):
+        """One slot's host-side rows for every stacked table."""
+        x = np.full((h_pad + 1, store.d), _PAD_VALUE, np.float32)
+        adj = np.full((h_pad + 1, r), h_pad, np.int32)
+        ids = np.full((h_pad + 1,), cap, np.int32)
+        ent = np.full((e,), h_pad, np.int32)
+        mask = np.zeros((h_pad + 1,), bool)
+        name = self._slots[slot] if slot < len(self._slots) else None
+        t = self._tenants.get(name) if name is not None else None
+        if t is not None and t.hot is not None:
+            h = t.hot.size
+            x[:h] = store.x[t.hot.ids]
+            a = t.hot.graph.adj
+            # hot graphs use the build-once convention (sentinel = H);
+            # re-aim free slots at the stacked sentinel H_pad
+            adj[:h, :a.shape[1]] = np.where((a < 0) | (a >= h), h_pad, a)
+            ids[:h] = t.hot.ids
+            ent[:t.hot.graph.entries.shape[0]] = t.hot.graph.entries
+            mask[:h] = True
+        return x, adj, ids, ent, mask
+
+    def _build_stack(self, store, cap, t_pad, h_pad, r, e
+                     ) -> StackedHotTables:
+        xs = np.empty((t_pad, h_pad + 1, store.d), np.float32)
+        adjs = np.empty((t_pad, h_pad + 1, r), np.int32)
+        ids = np.empty((t_pad, h_pad + 1), np.int32)
+        ents = np.empty((t_pad, e), np.int32)
+        mask = np.empty((t_pad, h_pad + 1), bool)
+        for slot in range(t_pad):
+            (xs[slot], adjs[slot], ids[slot], ents[slot],
+             mask[slot]) = self._slot_arrays(store, slot, cap, t_pad,
+                                             h_pad, r, e)
+        return StackedHotTables(x=jnp.asarray(xs), adj=jnp.asarray(adjs),
+                                ids=jnp.asarray(ids),
+                                entries=jnp.asarray(ents),
+                                mask=jnp.asarray(mask))
+
+    def _update_slot(self, store, slot, cap, t_pad, h_pad, r, e) -> None:
+        x, adj, ids, ent, mask = self._slot_arrays(store, slot, cap, t_pad,
+                                                   h_pad, r, e)
+        s = self._stack
+        self._stack = StackedHotTables(
+            x=s.x.at[slot].set(x), adj=s.adj.at[slot].set(adj),
+            ids=s.ids.at[slot].set(ids), entries=s.entries.at[slot].set(ent),
+            mask=s.mask.at[slot].set(mask))

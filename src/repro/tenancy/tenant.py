@@ -1,0 +1,93 @@
+"""Per-tenant preference state.
+
+Everything the paper keeps *once* for its single workload — the query
+counter (Alg 2 line 1), the hot index (Alg 2 line 8), the rebuild clock
+(Alg 2 line 5) and the padded hot device tables the jitted search reads —
+lives here once *per tenant*.  The Full Index, the vector store and the
+decision tree stay shared: a tenant is preference state only, so its
+footprint is the counter (n float64) plus an ``IR·n``-row hot index.
+
+Import note: :mod:`repro.core.dqf` imports this package, so imports from
+``repro.core`` happen lazily inside methods (mirrors ``repro.store``'s
+cycle avoidance, in the other direction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:
+    from repro.core.hot_index import HotIndex, QueryCounter
+    from repro.store import VectorStore
+
+__all__ = ["DEFAULT_TENANT", "TenantState"]
+
+# The implicit tenant of every pre-tenancy call site: single-workload code
+# (and checkpoints) keeps working without naming a tenant.
+DEFAULT_TENANT = "default"
+
+
+@dataclasses.dataclass
+class TenantState:
+    """One tenant's preference state (counter + hot index + device cache)."""
+
+    name: str
+    counter: "QueryCounter"
+    hot: Optional["HotIndex"] = None
+    slot: int = 0              # stable registry slot = tenant_idx in stacks
+    gen: int = 0               # registry creation sequence — distinguishes
+                               # a re-created name from its evicted ancestor
+    hot_token: int = 0         # bumps whenever ``hot`` is replaced/remapped
+    _dev: dict = dataclasses.field(default_factory=dict, repr=False)
+    _dev_key: Optional[tuple] = dataclasses.field(default=None, repr=False)
+
+    def set_hot(self, hot: Optional["HotIndex"]) -> None:
+        self.hot = hot
+        self.hot_token += 1
+
+    def remap_hot(self, remap: np.ndarray) -> bool:
+        """Apply a compaction remap (old→new, -1 dropped) to the hot ids.
+
+        Returns False when a hot row was dropped — the caller must rebuild
+        this tenant's hot index (its graph references a vanished row).
+        """
+        if self.hot is None:
+            return True
+        new_ids = remap[self.hot.ids]
+        if (new_ids < 0).any():
+            return False
+        self.hot = dataclasses.replace(self.hot,
+                                       ids=new_ids.astype(np.int32))
+        self.hot_token += 1
+        return True
+
+    def hot_tables(self, store: "VectorStore") -> dict:
+        """This tenant's padded hot device tables (single-tenant form).
+
+        Cached on ``(hot_token, store.capacity)`` — the same key the old
+        ``DQF._sync_hot_device`` used, so rebuilds and capacity growth
+        re-upload and nothing else does.
+        """
+        if self.hot is None:
+            raise RuntimeError(
+                f"tenant {self.name!r} has no hot index — warm() or "
+                "rebuild_hot() it first")
+        key = (self.hot_token, store.capacity)
+        if self._dev_key != key:
+            from repro.core import beam_search as bs   # lazy: import cycle
+            self._dev = {
+                "x_hot_pad": bs.pad_dataset(
+                    jnp.asarray(store.x[self.hot.ids])),
+                "adj_hot_pad": bs.pad_adjacency(
+                    jnp.asarray(self.hot.graph.adj)),
+                "hot_ids_pad": jnp.concatenate(
+                    [jnp.asarray(self.hot.ids, jnp.int32),
+                     jnp.asarray([store.capacity], jnp.int32)]),
+                "hot_entries": jnp.asarray(self.hot.graph.entries),
+            }
+            self._dev_key = key
+        return self._dev

@@ -1,0 +1,330 @@
+"""Multi-tenant preference layer (ISSUE 3): one Full Index, per-tenant
+hot indexes, mixed-tenant serving waves.
+
+The acceptance bar: with T >= 8 tenants of *disjoint* Zipf heads sharing
+one Full Index, every tenant's hot-phase behaviour matches a dedicated
+single-tenant DQF; Alg-2 rebuild clocks run independently; store mutations
+fan out to every tenant's counter; save/load restores every tenant; and
+the wave engine serves lanes of different tenants in the same tick.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DQF, DQFConfig, ZipfWorkload, ground_truth, recall_at_k
+from repro.serving.engine import WaveEngine
+from repro.tenancy import DEFAULT_TENANT
+
+from tests.conftest import make_clustered
+
+T = 8
+CFG = DQFConfig(knn_k=12, out_degree=12, index_ratio=0.03, k=10,
+                hot_pool=16, full_pool=32, eval_gap=40, max_hops=120,
+                n_query_trigger=10 ** 6)
+
+
+def disjoint_workloads(x, n_tenants, seed=0, beta=1.2, sigma=0.05):
+    """One ZipfWorkload per tenant, heads drawn from disjoint id blocks."""
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    block = n // n_tenants
+    wls = []
+    for t in range(n_tenants):
+        head = perm[t * block:(t + 1) * block]
+        rest = np.concatenate([perm[:t * block], perm[(t + 1) * block:]])
+        wl = ZipfWorkload(x, beta=beta, sigma=sigma, seed=seed + 100 + t)
+        wl.rank_to_point = np.concatenate(
+            [rng.permutation(head), rng.permutation(rest)])
+        wls.append(wl)
+    return wls
+
+
+def hot_hit_rate(dqf, queries, tenant=DEFAULT_TENANT):
+    """Fraction of queries whose nearest result sits in the tenant's hot
+    set — the payoff a preference-matched hot index is built for."""
+    res = dqf.search(queries, record=False, tenant=tenant)
+    top1 = np.asarray(res.ids)[:, 0]
+    return float(np.isin(top1, dqf.tenants.get(tenant).hot.ids).mean())
+
+
+@pytest.fixture(scope="module")
+def mt_world(small_data):
+    """One shared Full Index serving T tenants with disjoint Zipf heads."""
+    dqf = DQF(CFG).build(small_data)
+    wls = disjoint_workloads(small_data, T, seed=3)
+    targets = {}
+    for t, wl in enumerate(wls):
+        q, tg = wl.sample(3000, with_targets=True)
+        dqf.warm(q, tg, tenant=f"t{t}")
+        targets[f"t{t}"] = tg
+    dqf.fit_tree(wls[0].sample(300), tenant="t0")
+    return dqf, wls, targets
+
+
+def test_disjoint_heads_give_disjoint_hot_sets(mt_world):
+    dqf, _, _ = mt_world
+    sets = [set(dqf.tenants.get(f"t{t}").hot.ids.tolist()) for t in range(T)]
+    for a in range(T):
+        for b in range(a + 1, T):
+            overlap = len(sets[a] & sets[b]) / len(sets[a])
+            assert overlap < 0.2, (a, b, overlap)
+
+
+def test_tenant_matches_dedicated_single_tenant_dqf(mt_world, small_data):
+    """Sharing the Full Index costs a tenant nothing: hot set, hit-rate
+    and recall match a DQF dedicated to that tenant within 2 points."""
+    dqf, wls, targets = mt_world
+    dedicated = DQF(CFG).build(small_data)
+    dedicated.tree = dqf.tree          # the tree is a shared artifact
+    for t in range(T):
+        name = f"t{t}"
+        q = wls[t].sample(64)
+        dedicated.counter.counts[:] = 0
+        dedicated.counter.record(targets[name])
+        dedicated.rebuild_hot()
+        # identical preference signal -> identical hot set
+        np.testing.assert_array_equal(
+            np.sort(dedicated.hot.ids),
+            np.sort(dqf.tenants.get(name).hot.ids))
+        hr_shared = hot_hit_rate(dqf, q, tenant=name)
+        res_ded = dedicated.search(q, record=False)
+        hr_ded = float(np.isin(np.asarray(res_ded.ids)[:, 0],
+                               dedicated.hot.ids).mean())
+        assert abs(hr_shared - hr_ded) <= 0.02 + 1e-9, (name, hr_shared,
+                                                        hr_ded)
+        gt = ground_truth(small_data, q, CFG.k)
+        rec_shared = recall_at_k(
+            np.asarray(dqf.search(q, record=False, tenant=name).ids), gt)
+        rec_ded = recall_at_k(np.asarray(res_ded.ids), gt)
+        assert abs(rec_shared - rec_ded) <= 0.02 + 1e-9
+
+
+def test_per_tenant_hot_beats_shared_hot(mt_world):
+    """The motivation: a single global hot index averages disjoint heads
+    away, per-tenant hot indexes follow each workload."""
+    dqf, wls, targets = mt_world
+    union = np.concatenate([targets[f"t{t}"] for t in range(T)])
+    dqf.create_tenant("union")
+    dqf.record(union, tenant="union")
+    dqf.rebuild_hot(tenant="union")
+    per_tenant, shared = [], []
+    for t in range(T):
+        q = wls[t].sample(48)
+        per_tenant.append(hot_hit_rate(dqf, q, tenant=f"t{t}"))
+        shared.append(hot_hit_rate(dqf, q, tenant="union"))
+    assert np.mean(per_tenant) > np.mean(shared) + 0.1, (per_tenant, shared)
+
+
+def test_rebuild_clocks_run_independently():
+    x = make_clustered(n=400, d=16, clusters=8, seed=5)
+    cfg = DQFConfig(knn_k=8, out_degree=8, index_ratio=0.05, k=5,
+                    hot_pool=8, full_pool=16, max_hops=60,
+                    n_query_trigger=30)
+    dqf = DQF(cfg).build(x)
+    wls = disjoint_workloads(x, 2, seed=7)
+    for t, wl in enumerate(wls):
+        q, tg = wl.sample(500, with_targets=True)
+        dqf.warm(q, tg, tenant=f"t{t}")
+    v0 = (dqf.tenants.get("t0").hot.version,
+          dqf.tenants.get("t1").hot.version)
+    # 32 queries for t0 only: t0's clock passes the trigger, t1's doesn't
+    dqf.search(wls[0].sample(32), tenant="t0")
+    assert dqf.tenants.get("t0").hot.version == v0[0] + 1
+    assert dqf.tenants.get("t1").hot.version == v0[1]
+    assert dqf.tenants.get("t0").counter.since_rebuild == 0
+    assert dqf.tenants.get("t1").counter.since_rebuild == 0  # never fed
+    assert not dqf.maybe_rebuild_hot(tenant="t1")
+    dqf.record(np.zeros((30, 1), np.int64), tenant="t1")
+    assert not dqf.maybe_rebuild_hot(tenant="t1")   # due needs > trigger
+    dqf.record(np.zeros((1, 1), np.int64), tenant="t1")
+    assert dqf.maybe_rebuild_hot(tenant="t1")
+    assert dqf.tenants.get("t1").hot.version == v0[1] + 1
+
+
+def test_grow_remap_fanout_keeps_counters_consistent():
+    rng = np.random.default_rng(11)
+    x = make_clustered(n=400, d=16, clusters=8, seed=6)
+    cfg = DQFConfig(knn_k=8, out_degree=8, index_ratio=0.05, k=5,
+                    hot_pool=8, full_pool=16, max_hops=60,
+                    n_query_trigger=10 ** 6)
+    dqf = DQF(cfg).build(x)
+    wls = disjoint_workloads(x, 3, seed=8)
+    for t, wl in enumerate(wls):
+        q, tg = wl.sample(800, with_targets=True)
+        dqf.warm(q, tg, tenant=f"t{t}")
+
+    # insert: every tenant's counter grows, new rows start cold
+    ext = dqf.insert(rng.standard_normal((40, 16)).astype(np.float32))
+    for t in range(3):
+        c = dqf.tenants.get(f"t{t}").counter
+        assert c.n == dqf.store.n
+        np.testing.assert_array_equal(c.counts[-40:], 0.0)
+
+    # delete a hot row of t1: only t1's hot index rebuilds
+    victim_int = int(dqf.tenants.get("t1").hot.ids[0])
+    versions = {t: dqf.tenants.get(f"t{t}").hot.version for t in range(3)}
+    in_others = [t for t in (0, 2) if np.isin(
+        victim_int, dqf.tenants.get(f"t{t}").hot.ids)]
+    dqf.delete(dqf.store.to_external(np.asarray([victim_int])))
+    assert dqf.tenants.get("t1").hot.version == versions[1] + 1
+    for t in (0, 2):
+        expect = versions[t] + (1 if t in in_others else 0)
+        assert dqf.tenants.get(f"t{t}").hot.version == expect
+    # plus a few cold rows so compaction actually drops something
+    dqf.delete(ext[:10])
+
+    # compact: every counter remapped with mass preserved exactly
+    before = {t: dqf.tenants.get(f"t{t}").counter.counts.copy()
+              for t in range(3)}
+    alive_before = dqf.store.alive.copy()
+    remap = dqf.compact()["remap"]
+    keep = remap >= 0
+    assert keep.sum() == dqf.store.n
+    for t in range(3):
+        c = dqf.tenants.get(f"t{t}").counter
+        assert c.n == dqf.store.n
+        np.testing.assert_array_equal(c.counts[remap[keep]],
+                                      before[t][keep])
+        # every tenant still searchable after the remap
+        res = dqf.search(wls[t].sample(8), record=False, tenant=f"t{t}")
+        assert (np.asarray(res.ids)[:, 0] < dqf.store.n).all()
+
+
+def test_multitenant_save_load_roundtrip(mt_world, tmp_path):
+    dqf, wls, _ = mt_world
+    path = str(tmp_path / "mt.npz")
+    dqf.save(path)
+    loaded = DQF.load(path, CFG)
+    assert set(loaded.tenants.names()) == set(dqf.tenants.names())
+    for t in dqf.tenants:
+        lt = loaded.tenants.get(t.name)
+        np.testing.assert_array_equal(lt.counter.counts, t.counter.counts)
+        assert lt.counter.since_rebuild == t.counter.since_rebuild
+        if t.hot is None:
+            assert lt.hot is None
+            continue
+        np.testing.assert_array_equal(lt.hot.ids, t.hot.ids)
+        np.testing.assert_array_equal(lt.hot.graph.adj, t.hot.graph.adj)
+        assert lt.hot.version == t.hot.version
+    # the loaded index serves every tenant identically
+    for t in (0, T - 1):
+        q = wls[t].sample(16)
+        a = dqf.search(q, record=False, tenant=f"t{t}")
+        b = loaded.search(q, record=False, tenant=f"t{t}")
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+def test_legacy_checkpoint_loads_as_default_tenant(small_data, tmp_path,
+                                                   built_dqf):
+    dqf, _ = built_dqf
+    path = str(tmp_path / "legacy.npz")
+    dqf.save(path)
+    loaded = DQF.load(path, dqf.cfg)
+    assert loaded.tenants.names() == [DEFAULT_TENANT]
+    np.testing.assert_array_equal(loaded.counter.counts, dqf.counter.counts)
+    np.testing.assert_array_equal(loaded.hot.ids, dqf.hot.ids)
+
+
+def test_evict_and_slot_reuse(mt_world):
+    dqf, _, _ = mt_world
+    t = dqf.create_tenant("victim")
+    slot = t.slot
+    dqf.evict_tenant("victim")
+    assert "victim" not in dqf.tenants
+    with pytest.raises(KeyError):
+        dqf.tenants.get("victim")
+    t2 = dqf.create_tenant("reuser")
+    assert t2.slot == slot                    # stacked tables stay dense
+    dqf.evict_tenant("reuser")
+    with pytest.raises(ValueError):
+        dqf.evict_tenant(DEFAULT_TENANT)
+
+
+def test_engine_serves_mixed_tenant_wave(mt_world, small_data):
+    """Lanes of all T tenants share one wave: one jitted tick, tenant
+    selection by gather, per-tenant counters fed at retirement."""
+    dqf, wls, _ = mt_world
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8)
+    per_tenant_q, rids = {}, {}
+    fed_before = {f"t{t}": dqf.tenants.get(f"t{t}").counter.since_rebuild
+                  for t in range(T)}
+    for t in range(T):                        # interleaved small batches
+        name = f"t{t}"
+        q = wls[t].sample(6)
+        per_tenant_q[name] = q
+        rids[name] = eng.submit(q, tenant=name)
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 6 * T
+    assert eng.stats.ticks >= 1
+    for t in range(T):
+        name = f"t{t}"
+        ids = np.stack([out["results"][r]["ids"] for r in rids[name]])
+        assert all(out["results"][r]["tenant"] == name for r in rids[name])
+        gt = ground_truth(small_data, per_tenant_q[name], CFG.k)
+        r_eng = recall_at_k(ids, gt)
+        r_batch = recall_at_k(np.asarray(
+            dqf.search(per_tenant_q[name], record=False, tenant=name).ids),
+            gt)
+        assert r_eng > r_batch - 0.08, (name, r_eng, r_batch)
+        # retirement fed this tenant's counter once per query
+        assert (dqf.tenants.get(name).counter.since_rebuild
+                == fed_before[name] + 6)
+
+
+def test_engine_survives_eviction_of_queued_tenant(mt_world):
+    """Evicting a tenant with requests still queued must not take down the
+    wave: its requests resolve to explicit empty results, everyone else's
+    work completes, and a re-created namesake's counter stays clean."""
+    dqf, wls, _ = mt_world
+    dqf.create_tenant("doomed")
+    q, tg = wls[0].sample(500, with_targets=True)
+    dqf.warm(q, tg, tenant="doomed")
+    eng = WaveEngine(dqf, wave_size=4, tick_hops=8)
+    live_rids = eng.submit(wls[1].sample(8), tenant="t1")
+    dead_rids = eng.submit(wls[0].sample(8), tenant="doomed")
+    dqf.evict_tenant("doomed")
+    # re-create the name with a different workload: the gen check must
+    # keep the old queued work out of the new tenant's counter
+    dqf.create_tenant("doomed")
+    q2, tg2 = wls[2].sample(500, with_targets=True)
+    dqf.warm(q2, tg2, tenant="doomed")
+    fed_before = dqf.tenants.get("doomed").counter.since_rebuild
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 16
+    for r in dead_rids:
+        assert out["results"][r].get("dropped", False)
+        assert (out["results"][r]["ids"] >= dqf.store.n).all()
+    for r in live_rids:
+        assert not out["results"][r].get("dropped", False)
+    assert eng.stats.dropped == 8
+    assert dqf.tenants.get("doomed").counter.since_rebuild == fed_before
+    dqf.evict_tenant("doomed")
+
+
+def test_stacked_incremental_update_matches_full_rebuild(mt_world):
+    """A single tenant's hot rebuild updates only its slot; the result
+    must equal a from-scratch restack."""
+    dqf, _, _ = mt_world
+    reg, store = dqf.tenants, dqf.store
+    before = reg.stacked(store)
+    dqf.rebuild_hot(tenant="t2")          # bump one tenant's hot_token
+    incr = reg.stacked(store)             # incremental path
+    full = reg._build_stack(store, *reg._stack_key[0])  # from scratch
+    for got, want in zip(incr, full):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # untouched slots kept their contents
+    other = reg.slot_of("t1")
+    np.testing.assert_array_equal(np.asarray(before.ids[other]),
+                                  np.asarray(incr.ids[other]))
+
+
+def test_engine_rejects_unknown_or_cold_tenant(mt_world):
+    dqf, wls, _ = mt_world
+    eng = WaveEngine(dqf, wave_size=8)
+    with pytest.raises(KeyError):
+        eng.submit(wls[0].sample(2), tenant="nobody")
+    dqf.create_tenant("cold")
+    with pytest.raises(RuntimeError):
+        eng.submit(wls[0].sample(2), tenant="cold")
+    dqf.evict_tenant("cold")

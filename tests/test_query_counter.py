@@ -1,0 +1,114 @@
+"""QueryCounter lifecycle edge cases (Alg 2 bookkeeping under mutation).
+
+The counter is the per-tenant preference signal; these tests pin down the
+corners the system-level suites only exercise incidentally: ``top`` when
+the request exceeds the alive population, exact mass preservation through
+compaction remaps, recency decay on the Alg-2 trigger reset, and cold
+starts for grown id space.
+"""
+
+import numpy as np
+
+from repro.core.hot_index import QueryCounter
+
+
+def test_top_clamps_to_alive_count():
+    c = QueryCounter(10, trigger=100)
+    c.record(np.arange(10)[None, :])          # every id touched once
+    c.counts[3] = 9.0
+    c.counts[7] = 5.0
+    alive = np.zeros(10, bool)
+    alive[[3, 7, 9]] = True
+    top = c.top(8, alive=alive)               # asks for more than alive
+    assert top.shape == (3,)
+    assert alive[top].all()
+    assert top[0] == 3 and top[1] == 7        # sorted hottest-first
+
+
+def test_top_without_alive_clamps_to_n():
+    c = QueryCounter(6, trigger=100)
+    c.counts[:] = np.arange(6)
+    top = c.top(20)
+    assert top.shape == (6,)
+    assert top[0] == 5
+
+
+def test_top_never_promotes_tombstoned_rows():
+    c = QueryCounter(8, trigger=100)
+    c.counts[:] = 100.0                       # everything equally hot
+    alive = np.ones(8, bool)
+    alive[[0, 4]] = False
+    top = c.top(8, alive=alive)
+    assert top.shape == (6,)
+    assert not np.isin([0, 4], top).any()
+
+
+def test_remap_preserves_mass_exactly():
+    rng = np.random.default_rng(0)
+    c = QueryCounter(50, trigger=100)
+    c.counts[:] = rng.random(50) * 1000
+    before = c.counts.copy()
+    keep = rng.random(50) > 0.3
+    remap = np.full(50, -1, np.int64)
+    remap[keep] = np.arange(int(keep.sum()))
+    c.remap(remap)
+    assert c.n == int(keep.sum())
+    # exact per-row preservation, not just the total
+    np.testing.assert_array_equal(c.counts[remap[keep]], before[keep])
+    assert c.counts.sum() == before[keep].sum()
+
+
+def test_remap_keeps_trigger_clock_running():
+    c = QueryCounter(10, trigger=5)
+    c.record(np.zeros((4, 1), np.int64))
+    remap = np.arange(10, dtype=np.int64)     # identity compaction
+    c.remap(remap)
+    assert c.since_rebuild == 4               # compaction is not a rebuild
+
+
+def test_decay_applied_on_reset_trigger():
+    c = QueryCounter(4, trigger=10, decay=0.5)
+    c.counts[:] = [2.0, 4.0, 0.0, 8.0]
+    c.since_rebuild = 11
+    c.reset_trigger()
+    assert c.since_rebuild == 0
+    np.testing.assert_allclose(c.counts, [1.0, 2.0, 0.0, 4.0])
+
+
+def test_no_decay_by_default():
+    c = QueryCounter(3, trigger=10)
+    c.counts[:] = [1.0, 2.0, 3.0]
+    c.reset_trigger()
+    np.testing.assert_array_equal(c.counts, [1.0, 2.0, 3.0])
+
+
+def test_grow_starts_new_rows_cold():
+    c = QueryCounter(5, trigger=100)
+    c.record(np.arange(5)[None, :])
+    c.grow(9)
+    assert c.n == 9
+    np.testing.assert_array_equal(c.counts[5:], 0.0)
+    np.testing.assert_array_equal(c.counts[:5], 1.0)
+    c.record(np.asarray([[7, 8]]))            # new id space is recordable
+    assert c.counts[7] == 1.0
+    assert c.since_rebuild == 2               # 2 queries, not 7 ids
+
+
+def test_grow_rejects_shrink():
+    c = QueryCounter(5, trigger=100)
+    try:
+        c.grow(3)
+        raised = False
+    except ValueError:
+        raised = True
+    assert raised
+
+
+def test_trigger_counts_queries_not_result_ids():
+    c = QueryCounter(100, trigger=10)
+    c.record(np.arange(50).reshape(5, 10))    # 5 queries x k=10 results
+    assert c.since_rebuild == 5
+    assert not c.due
+    c.record(np.arange(60).reshape(6, 10))
+    assert c.since_rebuild == 11
+    assert c.due
