@@ -26,6 +26,7 @@ def main() -> None:
     from . import bench_paper as bp
     from . import bench_kernels as bk
     from . import bench_multitenant as bm
+    from . import bench_tiering as bt
 
     benches = [
         ("construction", bp.bench_construction),      # Table 5
@@ -41,6 +42,7 @@ def main() -> None:
         ("drift", bp.bench_drift),                    # claim 3
         ("churn", bp.bench_churn),                    # insert/delete/compact
         ("multitenant", bm.bench_multitenant),        # tenancy layer
+        ("tiering", bt.bench_tiering),                # disk tier + cache
         ("kernels", bk.bench_kernels),                # Pallas layer
         ("quant", bk.bench_quant_scoring),            # compressed scan
         ("engine", bk.bench_engine),                  # serving layer

@@ -1,5 +1,6 @@
 """DQF — the paper's contribution (dual index + dynamic search) in JAX."""
 
+from repro.tiering import TierConfig  # noqa: F401  (re-export: cfg surface)
 from .types import DQFConfig, QuantConfig, SearchResult, SearchStats  # noqa: F401
 from .dqf import DQF  # noqa: F401
 from .ssg import SSGParams, build_ssg  # noqa: F401

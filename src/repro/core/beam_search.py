@@ -19,6 +19,14 @@ compressed codes (int8 dequant or PQ ADC) instead of float32 rows; all
 sentinel handling is by masking, so the table's sentinel row only has to
 exist, not hold huge values.
 
+Tiered tables (:mod:`repro.tiering`): a cache-aware ``TieredTable`` also
+satisfies the score-table protocol — resident blocks gather from its device
+arena, misses fault through a batched host fetch — so the disk tier slots
+into ``score_rows`` without touching any search logic here.
+:func:`next_expansions` exposes the frontier each active lane will expand
+next, which is what the serving engine's beam-frontier prefetch predicts
+block demand from.
+
 Per-lane (stacked) tables: for multi-tenant hot search
 (:mod:`repro.tenancy`), ``x_pad``/``adj_pad``/``entries`` may carry a
 leading lane axis — ``(B, n+1, d)`` vectors, ``(B, n+1, R)`` adjacency,
@@ -40,6 +48,7 @@ from .types import INF_DIST, PoolState, SearchResult, SearchStats
 __all__ = [
     "BeamState", "init_state", "expand_step", "beam_search", "pad_dataset",
     "pad_adjacency", "make_beam_search", "table_n", "score_rows", "as_view",
+    "next_expansions",
 ]
 
 
@@ -224,6 +233,20 @@ def expand_step(x_pad, adj_pad: jnp.ndarray,
     # A lane stays active while it still has unexpanded pool entries.
     still = jnp.any((~pool.expanded) & (pool.ids != n), axis=1)
     return BeamState(pool, seen, stats, state.active & still)
+
+
+def next_expansions(state: BeamState, sentinel: int) -> jnp.ndarray:
+    """(B,) id each active lane expands next (``sentinel`` when none).
+
+    Mirrors :func:`expand_step`'s selection (first unexpanded pool slot),
+    so a host can *predict* the next hop's gather targets — the beam
+    frontier — and prefetch their blocks while the current tick runs.
+    """
+    unexp = (~state.pool.expanded) & (state.pool.ids != sentinel)
+    has = jnp.any(unexp, axis=1) & state.active
+    slot = jnp.argmax(unexp, axis=1)
+    rows = jnp.arange(state.pool.ids.shape[0])
+    return jnp.where(has, state.pool.ids[rows, slot], sentinel)
 
 
 TermFn = Callable[[BeamState], jnp.ndarray]  # -> (B,) bool "terminate now"

@@ -33,6 +33,15 @@ exactly (``dqf.counter``/``dqf.hot`` alias the default tenant's state)::
 All storage (rows, quant codes, liveness, stable external ids) lives in
 ``dqf.store`` (:class:`repro.store.VectorStore`); device tables are padded
 to the store's capacity and refreshed lazily whenever ``store.epoch`` moves.
+
+Tiered storage (beyond paper — :mod:`repro.tiering`): with
+``DQFConfig(tier=TierConfig(mode="host"))`` the quantized codes and the
+float32 rows spill to mmap-backed block files and the cold path scores
+through bounded device block caches instead of fully resident tables —
+same results bit for bit, a fraction of the accelerator memory.  Searches
+snapshot the cache at entry and admit the hottest missed blocks at exit,
+so repeated (Zipf) workloads warm it automatically; ``save``/``load``
+persist the tier files alongside the ``.npz``.
 """
 
 from __future__ import annotations
@@ -41,6 +50,7 @@ import dataclasses
 import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -157,11 +167,17 @@ class DQF:
         self._dev_epoch = self._dev_rows_epoch = -1
         quant = None
         x = np.ascontiguousarray(x, np.float32)
+        if self.cfg.dim is not None and x.shape[1] != self.cfg.dim:
+            raise ValueError(
+                f"build() got d={x.shape[1]} vectors but the config expects "
+                f"dim={self.cfg.dim}")
         if self.cfg.quant.enabled:
             t0 = time.perf_counter()
             quant = build_quantizer(x, self.cfg.quant)
             self.timings.quant_train = time.perf_counter() - t0
-        self.store = VectorStore(x, ext_ids=ext_ids, quant=quant)
+        self.store = VectorStore(
+            x, ext_ids=ext_ids, quant=quant,
+            tier=self.cfg.tier if self.cfg.tier.enabled else None)
         t0 = time.perf_counter()
         built = build_ssg(self.store.x, self._ssg_params,
                           n_entry=self.cfg.n_entry)
@@ -198,16 +214,60 @@ class DQF:
         st = self.store
         if force or self._dev_epoch != st.epoch:
             if force or self._dev_rows_epoch != st.rows_epoch:
-                self._dev["x_pad"] = st.padded_rows()
-                if st.quant is not None and self.cfg.quant.enabled:
-                    self._dev["qtable"] = st.padded_quant_table()
-                else:
+                if st.tiered:
+                    # tiered: rows/codes live behind the block caches — the
+                    # per-call snapshots in _row_table()/_quant_table()
+                    # replace the resident uploads entirely.
+                    self._dev.pop("x_pad", None)
                     self._dev.pop("qtable", None)
+                else:
+                    self._dev["x_pad"] = st.padded_rows()
+                    if st.quant is not None and self.cfg.quant.enabled:
+                        self._dev["qtable"] = st.padded_quant_table()
+                    else:
+                        self._dev.pop("qtable", None)
                 self._dev_rows_epoch = st.rows_epoch
             self._dev["adj_pad"] = st.pad_adjacency(self.full.adj)
             self._dev["entries"] = jnp.asarray(self.full.entries)
             self._dev["live_pad"] = st.padded_live()
             self._dev_epoch = st.epoch
+
+    def _row_table(self):
+        """Exact float32 score table: resident ``x_pad`` or tier snapshot."""
+        st = self.store
+        return st.tiered_rows_table() if st.tiered else self._dev["x_pad"]
+
+    def _quant_table(self):
+        """Compressed score table (or None when searches run float32)."""
+        st = self.store
+        if st.quant is None or not self.cfg.quant.enabled:
+            return None
+        return st.tiered_codes_table() if st.tiered else self._dev["qtable"]
+
+    def _search_begin(self, queries) -> np.ndarray:
+        """Per-search-entry checks + tier housekeeping (one seam for all
+        search paths): validates query shape *before* anything hits jit,
+        refreshes device tables, and lets the block caches apply prefetches
+        and admit the blocks the previous searches missed hardest."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2 or q.shape[1] != self.store.d:
+            raise ValueError(
+                f"queries must be (B, {self.store.d}) for this index, got "
+                f"{q.shape} — a dim mismatch would otherwise surface as an "
+                "opaque shape error inside jit")
+        self._sync_device()
+        if self.store.tiered:
+            self.store.tier_begin()
+        return q
+
+    def _search_end(self, res: SearchResult) -> SearchResult:
+        """Tiered searches block before returning: their host fetches read
+        the live mmap, so the caller must be able to mutate the store (or
+        read cache counters) the moment the call returns — async dispatch
+        would otherwise race the tier.  Resident searches stay async."""
+        if self.store.tiered:
+            jax.block_until_ready((res.ids, res.dists))
+        return res
 
     # ------------------------------------------------------------- hot index
     @property
@@ -268,8 +328,7 @@ class DQF:
         """
         t = self._tenant(tenant)
         self._require(t)
-        self._sync_device()
-        q = np.asarray(history_queries, np.float32)
+        q = self._search_begin(history_queries)
         if dedup:
             q = np.unique(q, axis=0)
         t0 = time.perf_counter()
@@ -277,9 +336,9 @@ class DQF:
         hd = t.hot_tables(self.store)
         # Train on what the deployed search will scan: the quantized table
         # when quant is enabled, else the float32 vectors.
-        table = self._dev.get("qtable")
+        table = self._quant_table()
         feats, labels = collect_training_data(
-            table if table is not None else self._dev["x_pad"],
+            table if table is not None else self._row_table(),
             self._dev["adj_pad"],
             hd["x_hot_pad"], hd["adj_hot_pad"],
             hd["hot_ids_pad"], hd["hot_entries"], q,
@@ -300,21 +359,22 @@ class DQF:
         hot index; results feed that tenant's counter and rebuild clock."""
         t = self._tenant(tenant)
         self._require(t)
-        self._sync_device()
+        q = self._search_begin(queries)
         c = self.cfg
         hd = t.hot_tables(self.store)
         res, hot_stats, _ = dynamic_search(
-            self._dev["x_pad"], self._dev["adj_pad"],
+            self._row_table(), self._dev["adj_pad"],
             hd["x_hot_pad"], hd["adj_hot_pad"],
             hd["hot_ids_pad"], hd["hot_entries"],
             self.tree.arrays if self.tree is not None else None,
-            jnp.asarray(queries, jnp.float32),
+            jnp.asarray(q),
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
             eval_gap=c.eval_gap, add_step=c.add_step,
             tree_depth=c.tree_depth, max_hops=c.max_hops,
             hot_mode=c.hot_mode, use_kernel=use_kernel,
-            qtable=self._dev.get("qtable"), rerank_k=self._rerank_k,
+            qtable=self._quant_table(), rerank_k=self._rerank_k,
             live_pad=self._dev["live_pad"])
+        res = self._search_end(res)
         if record:
             t.counter.record(np.asarray(res.ids))
             if auto_rebuild and t.counter.due:          # Alg 2 line 5
@@ -326,32 +386,32 @@ class DQF:
         """Fig 3 ablation: dual index + traditional beam search (no tree)."""
         t = self._tenant(tenant)
         self._require(t)
-        self._sync_device()
+        q = self._search_begin(queries)
         c = self.cfg
         hd = t.hot_tables(self.store)
         res, _, _ = dynamic_search(
-            self._dev["x_pad"], self._dev["adj_pad"],
+            self._row_table(), self._dev["adj_pad"],
             hd["x_hot_pad"], hd["adj_hot_pad"],
             hd["hot_ids_pad"], hd["hot_entries"], None,
-            jnp.asarray(queries, jnp.float32),
+            jnp.asarray(q),
             k=c.k, hot_pool_size=c.hot_pool, full_pool_size=c.full_pool,
             eval_gap=c.eval_gap, add_step=c.add_step,
             tree_depth=c.tree_depth, max_hops=c.max_hops,
             hot_mode=c.hot_mode,
-            qtable=self._dev.get("qtable"), rerank_k=self._rerank_k,
+            qtable=self._quant_table(), rerank_k=self._rerank_k,
             live_pad=self._dev["live_pad"])
-        return res
+        return self._search_end(res)
 
     def search_baseline(self, queries: np.ndarray,
                         pool_size: Optional[int] = None) -> SearchResult:
         """Plain NSSG beam search over the full index (Algorithm 3)."""
         self._require()
-        self._sync_device()
-        return bs.beam_search(
-            self._dev["x_pad"], self._dev["adj_pad"], self._dev["entries"],
-            jnp.asarray(queries, jnp.float32),
+        q = self._search_begin(queries)
+        return self._search_end(bs.beam_search(
+            self._row_table(), self._dev["adj_pad"], self._dev["entries"],
+            jnp.asarray(q),
             pool_size=pool_size or self.cfg.full_pool, k=self.cfg.k,
-            max_hops=self.cfg.max_hops, live_pad=self._dev["live_pad"])
+            max_hops=self.cfg.max_hops, live_pad=self._dev["live_pad"]))
 
     # ------------------------------------------------------ mutable lifecycle
     def insert(self, rows: np.ndarray,
@@ -460,21 +520,43 @@ class DQF:
         out[valid] = self.store.to_external(ids[valid])
         return out
 
+    def relayout_tier(self) -> bool:
+        """Re-cluster the disk tier's cache blocks around observed traffic.
+
+        Call after a warmup stretch (or periodically): the full-phase
+        cache re-groups rows into blocks by touch frequency, which turns
+        the workload's row-level skew into block-level skew the bounded
+        device cache can exploit.  No-op (False) on a resident store or
+        before any traffic.
+        """
+        self._require()
+        return self.store.tier_relayout() if self.store.tiered else False
+
     # ------------------------------------------------------------------ misc
     @property
+    def _quant_active(self) -> bool:
+        return (self.store is not None and self.store.quant is not None
+                and self.cfg.quant.enabled)
+
+    @property
     def _rerank_k(self) -> int:
-        return self.cfg.quant.rerank_k if self._dev.get("qtable") is not None \
-            else 0
+        return self.cfg.quant.rerank_k if self._quant_active else 0
 
-    def index_nbytes(self) -> dict:
-        """Byte accounting per component.
+    def memory_report(self) -> dict:
+        """Byte accounting split by residency tier.
 
-        ``full``/``hot`` are graph bytes (paper Table 6; ``hot`` sums every
-        tenant's hot index); ``full_vec`` is the float32 vector table
-        (reported separately — it is data, not index, and moves off-device
-        in a rerank-only deployment); ``quant`` the compressed
-        codes+codebook; ``total`` the resident index footprint (graphs +
-        codes); ``compression`` = full_vec / quant.
+        Legacy keys (paper Table 6 shape, what :meth:`index_nbytes`
+        always reported): ``full``/``hot`` graph bytes, ``full_vec`` the
+        float32 vector table, ``quant`` codes+codebook, ``total`` the
+        resident index footprint (graphs + codes), ``compression`` =
+        full_vec / quant.
+
+        New keys: ``device`` (accelerator-resident bytes — padded graph +
+        liveness, hot indexes, codebooks, and either the fully resident
+        row/code tables or the tier's bounded cache arenas), ``host``
+        (host-RAM arrays: the non-tiered row/code buffers plus id/liveness
+        metadata) and ``disk`` (the tier's block files).  Each sub-dict
+        carries its own ``total``.
         """
         st = self.store
         hot_bytes = sum(t.hot.nbytes() for t in (self.tenants or [])
@@ -486,7 +568,42 @@ class DQF:
         out["total"] = out["full"] + out["hot"] + out["quant"]
         out["compression"] = (out["full_vec"] / out["quant"]
                               if out["quant"] else 1.0)
+        if st is None:
+            out.update(device={"total": 0}, host={"total": 0},
+                       disk={"total": 0})
+            return out
+        cap1 = st.capacity + 1
+        R = self.full.adj.shape[1] if self.full is not None else 0
+        codebook = (out["quant"] - int(st.quant.codes.nbytes)
+                    if st.quant is not None else 0)
+        code_row = (int(st.quant.codes.shape[1]
+                        * st.quant.codes.dtype.itemsize)
+                    if st.quant is not None else 0)
+        dev = {"graph": cap1 * R * 4 + cap1,     # adj_pad int32 + live_pad
+               "hot": int(hot_bytes),
+               "codebooks": int(codebook)}
+        if st.tiered:
+            caches = {c.name: c for c in st.tier_caches()}
+            dev["rows"] = caches["rows"].arena_nbytes()
+            dev["codes"] = (caches["codes"].arena_nbytes()
+                            if "codes" in caches else 0)
+        else:
+            dev["rows"] = cap1 * st.d * 4                     # x_pad
+            dev["codes"] = cap1 * code_row if self._quant_active else 0
+        dev["total"] = sum(dev.values())
+        host = {"rows": 0 if st.tiered else int(st.x.nbytes),
+                "codes": (0 if st.tiered or st.quant is None
+                          else int(st.quant.codes.nbytes)),
+                "meta": int(st.alive.nbytes + st.ext_ids.nbytes)}
+        host["total"] = sum(host.values())
+        disk = {"tier_files": st.tier_disk_nbytes() if st.tiered else 0}
+        disk["total"] = disk["tier_files"]
+        out.update(device=dev, host=host, disk=disk)
         return out
+
+    def index_nbytes(self) -> dict:
+        """Compat alias for :meth:`memory_report` (same dict)."""
+        return self.memory_report()
 
     def save(self, path: str) -> None:
         """Persist store, graph, tree and *every* tenant's preference state.
@@ -495,13 +612,19 @@ class DQF:
         ``counter_since``, ``hot_*``); extra tenants are saved under
         ``tenant{i}_*`` keys listed by ``tenant_names``, so pre-tenancy
         checkpoints load as a single default tenant unchanged.
+
+        A tiered store also flushes and copies its block files to
+        ``<path>.npz.tier/`` so the tier persists alongside the npz (the
+        npz arrays stay the canonical copy; ``load`` rematerializes the
+        tier from them when the files are absent).
         """
         self._require()
         arrs = self.store.to_arrays()
         arrs.update(full_adj=self.full.adj,
                     full_entries=self.full.entries,
                     counts=self.counter.counts,
-                    counter_since=np.int64(self.counter.since_rebuild))
+                    counter_since=np.int64(self.counter.since_rebuild),
+                    metric=np.array(self.cfg.metric))
         if self.hot is not None:
             arrs.update(hot_adj=self.hot.graph.adj,
                         hot_entries=self.hot.graph.entries,
@@ -528,12 +651,42 @@ class DQF:
                         tree_depth=np.int64(self.tree.depth),
                         tree_importance=self.tree.feature_importance)
         np.savez_compressed(path, **arrs)
+        if self.store.tiered:
+            self.store.export_tier(self._tier_sidecar(path))
+
+    @staticmethod
+    def _tier_sidecar(path) -> str:
+        """Directory for tier files next to a checkpoint (np.savez appends
+        ``.npz`` when missing, so mirror that)."""
+        p = str(path)
+        if not p.endswith(".npz"):
+            p += ".npz"
+        return p + ".tier"
 
     @classmethod
     def load(cls, path: str, cfg: DQFConfig | None = None) -> "DQF":
         z = np.load(path)
         self = cls(cfg)
-        self.store = VectorStore.from_arrays(z)
+        # Fail fast on a checkpoint/config contract mismatch — these used
+        # to surface much later as opaque shape errors inside jit.
+        d_saved = int(z["x"].shape[1])
+        if self.cfg.dim is not None and d_saved != self.cfg.dim:
+            raise ValueError(
+                f"checkpoint {path} holds d={d_saved} vectors but the "
+                f"config expects dim={self.cfg.dim} — fix DQFConfig.dim "
+                "(or drop it) or rebuild the index")
+        metric_saved = str(z["metric"]) if "metric" in z else "l2"
+        if metric_saved != self.cfg.metric:
+            raise ValueError(
+                f"checkpoint {path} was built for metric "
+                f"{metric_saved!r} but the config expects "
+                f"{self.cfg.metric!r} — distances would be meaningless")
+        tier = None
+        if self.cfg.tier.enabled:
+            tier = self.cfg.tier if self.cfg.tier.dir else \
+                dataclasses.replace(self.cfg.tier,
+                                    dir=self._tier_sidecar(path))
+        self.store = VectorStore.from_arrays(z, tier=tier)
         n = self.store.n
         self._set_full_adj(_to_free_slots(z["full_adj"], n),
                            z["full_entries"])
@@ -568,7 +721,7 @@ class DQF:
         if not self.cfg.quant.enabled:
             # cfg decides the search behaviour; the checkpoint provides the
             # artifacts.  A float32 cfg drops stored codes (x is exact).
-            self.store.quant = None
+            self.store.drop_quant()
         else:
             if self.store.quant is None:
                 raise ValueError(

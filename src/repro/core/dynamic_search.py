@@ -184,8 +184,11 @@ def _exact_rerank(x_pad, queries, pool: PoolState, *, k: int,
     domain) distances; this recovers the exact ordering among the head of
     the pool so quantization error only costs recall when the true
     neighbor fell *out* of the rerank window entirely.
+
+    ``x_pad`` may itself be a tiered float32 table (:mod:`repro.tiering`):
+    the rerank rows then ride the host tier through the same gather.
     """
-    n = x_pad.shape[0] - 1
+    n = bs.table_n(x_pad)
     rr = min(max(rerank_k, k), pool.ids.shape[1])
     ids = pool.ids[:, :rr]
     d2 = bs.score_rows(x_pad, queries, ids)
@@ -274,8 +277,13 @@ def dynamic_search(
     When ``qtable`` is given, phase 2 scores against the compressed codes
     (the hot phase stays float32) and, with ``rerank_k > 0``, the pool's
     head is re-scored exactly from ``x_pad`` before the final top-k.
+
+    With a tiered store (:mod:`repro.tiering`) both ``x_pad`` and
+    ``qtable`` are cache-aware :class:`~repro.tiering.TieredTable`
+    snapshots; the search semantics (and, bit-for-bit, its results) are
+    unchanged — only where the bytes come from moves.
     """
-    n = x_pad.shape[0] - 1
+    n = bs.table_n(x_pad)
     hot_pool, hot_stats = hot_phase(
         x_hot_pad, adj_hot_pad, hot_entries, queries,
         pool_size=hot_pool_size, max_hops=max_hops, mode=hot_mode,

@@ -13,9 +13,11 @@ Conventions used across :mod:`repro.core`:
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
+
+from repro.tiering import TierConfig
 
 # Value used for the padded sentinel row of a vector table. Large enough that
 # squared distances against it are effectively +inf, small enough to square
@@ -64,6 +66,10 @@ class DQFConfig:
     Defaults follow the paper's bold defaults where given.
     """
 
+    # --- data contract (validated against checkpoints and queries) ---
+    dim: Optional[int] = None   # expected vector dim (None = accept any)
+    metric: str = "l2"          # distance metric (squared L2 only, for now)
+
     # --- graph construction (shared by hot and full index; §4.2) ---
     knn_k: int = 32             # pre-built KNNG degree (EFANNA stage)
     out_degree: int = 32        # max out-degree R after SSG pruning
@@ -90,11 +96,20 @@ class DQFConfig:
     # --- compressed Full Index (beyond paper; repro.quant) ---
     quant: QuantConfig = QuantConfig()
 
+    # --- tiered storage (beyond paper; repro.tiering) ---
+    tier: TierConfig = TierConfig()
+
     def __post_init__(self):
         if self.hot_mode not in ("graph", "mxu"):
             raise ValueError(f"hot_mode must be graph|mxu, got {self.hot_mode}")
         if not (0.0 < self.index_ratio <= 1.0):
             raise ValueError("index_ratio must be in (0, 1]")
+        if self.metric != "l2":
+            raise ValueError(
+                f"metric must be 'l2' (squared L2 is the only implemented "
+                f"metric), got {self.metric!r}")
+        if self.dim is not None and self.dim <= 0:
+            raise ValueError(f"dim must be positive, got {self.dim}")
 
 
 class PoolState(NamedTuple):

@@ -24,7 +24,20 @@ The engine serves *under churn*: it watches ``dqf.store.epoch`` and
 re-captures the padded device tables (adjacency, liveness, codes) whenever
 an insert/delete lands, without disturbing in-flight lanes.  Rows deleted
 mid-flight are filtered at retirement.  Compaction remaps internal ids, so
-it is only legal on a drained engine (the refresh check enforces this).
+it is only legal on a drained engine (the refresh check enforces this) —
+and the engine runs it *itself*: when the store's tombstone ratio crosses
+``compact_ratio`` (``VectorStore.should_compact``), refills pause, live
+lanes drain out, and the compaction executes at the next safe tick
+boundary before serving resumes (``stats.compactions`` counts these).
+
+With a *tiered* store (:mod:`repro.tiering`) the wave scores against the
+bounded device block cache instead of resident tables.  Each tick pins the
+blocks in-flight lanes still read (eviction skips them), applies finished
+prefetches, admits the hottest missed blocks, re-snapshots the score
+table, and then — while the jitted tick runs — a background worker
+prefetches the blocks of the *predicted* beam frontier: each active lane's
+next expansion target and its next-hop adjacency
+(:func:`repro.core.beam_search.next_expansions`).
 
 The engine is *multi-tenant* (:mod:`repro.tenancy`): ``submit`` takes a
 ``tenant=``, lanes of different tenants ride the same wave, and the refill
@@ -66,6 +79,7 @@ class EngineStats:
     dropped: int = 0            # requests whose tenant was evicted queued
     ticks: int = 0
     total_hops: int = 0
+    compactions: int = 0        # background drain-and-compact cycles
     latencies_ms: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
 
@@ -83,11 +97,16 @@ class WaveEngine:
     """Continuous-batching engine over a built DQF instance."""
 
     def __init__(self, dqf, *, wave_size: int = 64, tick_hops: int = 8,
-                 latency_window: int = LATENCY_WINDOW):
+                 latency_window: int = LATENCY_WINDOW,
+                 auto_compact: bool = True, compact_ratio: float = 0.3,
+                 prefetch: bool = True):
         self.dqf = dqf
         self.cfg: DQFConfig = dqf.cfg
         self.wave = wave_size
         self.tick_hops = tick_hops
+        self.auto_compact = auto_compact
+        self.compact_ratio = compact_ratio
+        self.prefetch = prefetch
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats(
             latencies_ms=collections.deque(maxlen=latency_window))
@@ -101,6 +120,7 @@ class WaveEngine:
         self._lane_meta = [None] * wave_size
         self._results: dict = {}
         self._state = None
+        self._draining = False      # refills paused: compaction pending
         self._next_rid = 0          # monotonic: ids never collide, even if
                                     # callers drain/clear _results mid-run
 
@@ -157,8 +177,13 @@ class WaveEngine:
             raise RuntimeError(
                 f"tenant {tenant!r} has no hot index — warm() it before "
                 "serving")
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim != 2 or queries.shape[1] != self._d:
+            raise ValueError(
+                f"queries must be (B, {self._d}) for this index, got "
+                f"{queries.shape}")
         ids = []
-        for q in np.asarray(queries, np.float32):
+        for q in queries:
             rid = self._next_rid
             self._next_rid += 1
             self.queue.append((rid, q, time.perf_counter(), t.name, t.gen))
@@ -171,10 +196,13 @@ class WaveEngine:
         while (self.queue or self._any_live()) \
                 and self.stats.ticks < max_ticks:
             self._tick()
+        if self._draining and not self._any_live():
+            self._do_compact()      # trigger fired on the final retirements
         wall = time.perf_counter() - t0
         return {"results": self._results, "wall_s": wall,
                 "qps": self.stats.qps(wall), "p99_ms": self.stats.p99_ms(),
-                "straggled": self.stats.straggled}
+                "straggled": self.stats.straggled,
+                "compactions": self.stats.compactions}
 
     # -------------------------------------------------------------- internals
     def _any_live(self) -> bool:
@@ -220,26 +248,44 @@ class WaveEngine:
         return state._replace(pool=state.pool._replace(ids=jnp.asarray(ids)),
                               seen=jnp.asarray(grown))
 
+    def _zero_state(self) -> bs.BeamState:
+        """All-lanes-idle wave state (no scoring — lanes splice in later).
+
+        Built from constants instead of ``bs.init_state`` so a tiered
+        store's cache counters aren't polluted by dummy-query gathers.
+        """
+        W, L = self.wave, self.cfg.full_pool
+        n = self.dqf.store.capacity
+        from repro.core.types import INF_DIST, PoolState, SearchStats
+        pool = PoolState(
+            ids=jnp.full((W, L), n, jnp.int32),
+            dists=jnp.full((W, L), INF_DIST, jnp.float32),
+            expanded=jnp.zeros((W, L), bool))
+        seen = jnp.zeros((W, n + 1), bool).at[:, n].set(True)
+        stats = SearchStats(
+            dist_count=jnp.zeros((W,), jnp.int32),
+            update_count=jnp.zeros((W,), jnp.int32),
+            hops=jnp.zeros((W,), jnp.int32),
+            terminated_early=jnp.zeros((W,), bool))
+        return bs.BeamState(pool, seen, stats, jnp.zeros((W,), bool))
+
     def _init_wave(self):
         self._maybe_refresh()
         W, d = self.wave, self._d
-        dummy_q = jnp.zeros((W, d), jnp.float32)
-        state = bs.init_state(self.dqf._dev["x_pad"], dummy_q,
-                              self.dqf._dev["entries"], self.cfg.full_pool)
-        state = state._replace(active=jnp.zeros((W,), bool))
         self._queries = np.zeros((W, d), np.float32)
         self._hot_first = np.zeros((W,), np.float32)
         self._hot_ratio = np.zeros((W,), np.float32)
         self._evals = np.zeros((W,), np.int32)
-        self._state = state
+        self._state = self._zero_state()
         self._update_table()
         self._refill()
 
     def _update_table(self):
-        """Refresh the wave's score table (PQ LUTs follow the queries)."""
-        qtable = self.dqf._dev.get("qtable")
+        """Re-snapshot the wave's score table (PQ LUTs follow the queries;
+        a tiered table follows the cache's current arena + block map)."""
+        qtable = self.dqf._quant_table()
         if qtable is None:
-            self._table = self.dqf._dev["x_pad"]
+            self._table = self.dqf._row_table()
         else:
             self._table = qtable.with_queries(jnp.asarray(self._queries))
 
@@ -338,8 +384,54 @@ class WaveEngine:
             dists = np.concatenate([dists, np.full(pad, np.inf, np.float32)])
         return ids, dists
 
+    def _tier_begin_tick(self):
+        """Tier housekeeping at the tick boundary, then frontier prefetch.
+
+        Synchronous part (arena/map may change, so it happens before the
+        snapshot): pin the blocks in-flight lanes still read, apply
+        finished prefetches, admit the hottest missed blocks.  Async part
+        (overlaps the jitted tick): request the predicted next-hop blocks
+        — each active lane's next expansion target plus its adjacency row.
+        """
+        st = self.dqf.store
+        if not st.tiered:
+            return
+        cache = st.full_phase_cache()
+        live = [i for i, m in enumerate(self._lane_meta) if m is not None]
+        if live:
+            ids = np.asarray(self._state.pool.ids)[live]
+            ids = ids[ids < st.n]
+            cache.pin_blocks(cache.blocks_of_rows(ids))
+        else:
+            cache.pin_blocks(())
+        cache.apply_prefetch()
+        cache.maintain()
+        if self.prefetch and live:
+            nxt = np.asarray(bs.next_expansions(self._state, st.capacity))
+            nxt = nxt[nxt < st.n]
+            if nxt.size:
+                nbrs = self.dqf.full.adj[nxt]
+                cache.prefetch_async(cache.blocks_of_rows(
+                    np.concatenate([nxt, nbrs[nbrs >= 0]])))
+        self._update_table()
+
+    def _do_compact(self):
+        """Drained compaction at a safe tick boundary; serving resumes."""
+        self.dqf.compact()
+        self.stats.compactions += 1
+        self._draining = False
+        st = self.dqf.store
+        self._epoch = st.epoch
+        self._remap_epoch = st.remap_epoch
+        self._cap = st.capacity
+        # internal ids were remapped; every lane is idle, so the wave
+        # state is rebuilt rather than patched
+        self._state = self._zero_state()
+        self._update_table()
+
     def _tick(self):
         self._maybe_refresh()
+        self._tier_begin_tick()
         state, evals = self._tick_fn(
             self._state, self._table, self.dqf._dev["adj_pad"],
             self.dqf._dev["live_pad"], jnp.asarray(self._queries),
@@ -375,4 +467,17 @@ class WaveEngine:
                     and self.dqf.tenants.get(tenant).gen == gen:
                 self.dqf.record(ids[None, :], tenant=tenant)
                 self.dqf.maybe_rebuild_hot(tenant=tenant)
+        # Background compaction (satellite of the tiering ISSUE): once the
+        # tombstone ratio trips the trigger, stop refilling, let live lanes
+        # drain, compact at the safe boundary, then resume.  (The COW
+        # double-buffer that would overlap compaction with serving is
+        # future work — see ROADMAP.)
+        if self.auto_compact and not self._draining \
+                and self.dqf.store.should_compact(self.compact_ratio):
+            self._draining = True
+        if self._draining:
+            if not self._any_live():
+                self._do_compact()
+                self._refill()
+            return
         self._refill()

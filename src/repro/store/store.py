@@ -21,6 +21,16 @@ conventions of :mod:`repro.core`):
   tables when it moves); ``remap_epoch`` bumps only on compaction (internal
   ids changed — in-flight search state is stale).
 
+* **Tier** (optional, :mod:`repro.tiering`): with ``tier=TierConfig(
+  mode="host")`` the row and code capacity buffers are mmap-backed block
+  files instead of RAM arrays — every slice write above is write-through —
+  and device residency shrinks to per-file block caches whose snapshots
+  (:meth:`tiered_rows_table` / :meth:`tiered_codes_table`) replace the
+  fully resident padded tables.  The epoch machinery doubles as the
+  cache-invalidation seam: mutations ``note_write`` their blocks before
+  bumping ``epoch``, so consumers that re-snapshot on epoch moves (all of
+  them) can never score stale bytes.
+
 The store intentionally knows nothing about graphs or searches; it is the
 storage layer the rest of the system routes through.
 """
@@ -28,12 +38,16 @@ storage layer the rest of the system routes through.
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
+import tempfile
 from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.quant import QuantState, pq_encode, sq_encode
+from repro.tiering import BlockCache, BlockFile, TierConfig, TieredTable
 
 __all__ = ["VectorStore", "CompactionResult"]
 
@@ -75,7 +89,8 @@ class VectorStore:
                  alive: Optional[np.ndarray] = None,
                  quant: Optional[QuantState] = None,
                  next_ext: Optional[int] = None,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None,
+                 tier: Optional[TierConfig] = None):
         x = np.ascontiguousarray(x, np.float32)
         n = self._n = x.shape[0]
         self._d = x.shape[1]
@@ -111,6 +126,157 @@ class VectorStore:
         # rows_epoch moves only when row/code *contents* change (append,
         # compact) — consumers skip re-uploading the big tables on deletes.
         self.rows_epoch = 0
+        # ----- tiered storage (repro.tiering): rows/codes move to mmap-backed
+        # block files, device residency becomes a bounded block cache.
+        self.tier = tier if (tier is not None and tier.enabled) else None
+        self.tier_dir: Optional[str] = None
+        self._rows_bf: Optional[BlockFile] = None
+        self._codes_bf: Optional[BlockFile] = None
+        self._row_cache: Optional[BlockCache] = None
+        self._code_cache: Optional[BlockCache] = None
+        self._tier_params: dict = {}
+        if self.tier is not None:
+            self._init_tier()
+
+    # ------------------------------------------------------------------ tier
+    def _init_tier(self) -> None:
+        """Move the capacity buffers onto mmap-backed block files.
+
+        The host arrays become views of the files, so every existing slice
+        write (``add``, ``compact``) is write-through; the caches get told
+        which blocks changed via :meth:`_tier_note_write`.
+        """
+        t = self.tier
+        d = t.dir or tempfile.mkdtemp(prefix="repro-tier-")
+        os.makedirs(d, exist_ok=True)
+        self.tier_dir = d
+        bf = BlockFile(os.path.join(d, "rows.f32"), self.capacity,
+                       self._d, np.float32, t.block_rows)
+        bf.rows[: self._n] = self._x[: self._n]
+        self._x = bf.rows
+        self._rows_bf = bf
+        self._row_cache = BlockCache(bf, self._cache_slots(bf),
+                                     name="rows", prefetch=t.prefetch,
+                                     track_rows=self.quant is None)
+        if self.quant is not None:
+            cbf = BlockFile(os.path.join(d, "codes.bin"), self.capacity,
+                            self._codes.shape[1], self._codes.dtype,
+                            t.block_rows)
+            cbf.rows[: self._n] = self._codes[: self._n]
+            self._codes = cbf.rows
+            self.quant.codes = self._codes[: self._n]
+            self._codes_bf = cbf
+            self._code_cache = BlockCache(cbf, self._cache_slots(cbf),
+                                          name="codes", prefetch=t.prefetch,
+                                          track_rows=True)
+
+    def _cache_slots(self, bf: BlockFile) -> int:
+        t = self.tier
+        if t.cache_blocks:
+            return min(t.cache_blocks, bf.n_blocks)
+        return max(1, int(round(t.cache_frac * bf.n_blocks)))
+
+    @property
+    def tiered(self) -> bool:
+        return self.tier is not None
+
+    def tier_caches(self) -> list:
+        """The live block caches (rows always, codes when quantized)."""
+        return [c for c in (self._row_cache, self._code_cache)
+                if c is not None]
+
+    def full_phase_cache(self) -> Optional[BlockCache]:
+        """The cache the full-graph scan reads (codes, else float32 rows)."""
+        if not self.tiered:
+            return None
+        return self._code_cache if self._code_cache is not None \
+            else self._row_cache
+
+    def _tier_note_write(self, lo: int, hi: int) -> None:
+        """Invalidate cached blocks covering written rows ``[lo, hi)``."""
+        if not self.tiered or hi <= lo:
+            return
+        for c in self.tier_caches():
+            c.note_write_rows(lo, hi)
+
+    def tier_relayout(self) -> bool:
+        """Re-cluster the full-phase cache's blocks around the workload.
+
+        Internal ids are assigned by arrival, so an id-range block mixes a
+        few hot rows with many cold ones and the cache saturates early;
+        clustering by the accumulated touch tallies puts the workload's
+        head into few blocks (Quake-style adaptive residency).  Returns
+        False when no touches were recorded yet.
+        """
+        c = self.full_phase_cache()
+        return c.relayout(self._n) if c is not None else False
+
+    def _tier_p(self, key, make):
+        if key not in self._tier_params:
+            self._tier_params[key] = make()
+        return self._tier_params[key]
+
+    def tiered_rows_table(self) -> TieredTable:
+        """Snapshot float32 score table over the row tier (exact scores)."""
+        return TieredTable.from_cache(self._row_cache, mode="f32",
+                                      n=self.capacity)
+
+    def tiered_codes_table(self) -> Optional[TieredTable]:
+        """Snapshot quantized score table over the code tier."""
+        if self._code_cache is None:
+            return None
+        q = self.quant
+        if q.mode == "sq8":
+            return TieredTable.from_cache(
+                self._code_cache, mode="sq8", n=self.capacity,
+                p0=self._tier_p("scale", lambda: jnp.asarray(q.sq.scale)),
+                p1=self._tier_p("zero", lambda: jnp.asarray(q.sq.zero)))
+        return TieredTable.from_cache(
+            self._code_cache, mode="pq", n=self.capacity,
+            p0=self._tier_p("centroids", lambda: jnp.asarray(q.pq.centroids)))
+
+    def tier_begin(self) -> None:
+        """Cache housekeeping at a jitted-call boundary: apply completed
+        prefetches and admit the hottest blocks missed since last time."""
+        for c in self.tier_caches():
+            c.apply_prefetch()
+            c.maintain()
+
+    def flush_tier(self) -> None:
+        for bf in (self._rows_bf, self._codes_bf):
+            if bf is not None:
+                bf.flush()
+
+    def export_tier(self, dest_dir: str) -> None:
+        """Copy the tier files next to a checkpoint (no-op if same dir)."""
+        if not self.tiered:
+            return
+        self.flush_tier()
+        os.makedirs(dest_dir, exist_ok=True)
+        for bf in (self._rows_bf, self._codes_bf):
+            if bf is None:
+                continue
+            dst = os.path.join(dest_dir, os.path.basename(bf.path))
+            if os.path.abspath(dst) != os.path.abspath(bf.path):
+                shutil.copyfile(bf.path, dst)
+
+    def tier_disk_nbytes(self) -> int:
+        return sum(bf.disk_nbytes() for bf in (self._rows_bf, self._codes_bf)
+                   if bf is not None)
+
+    def drop_quant(self) -> None:
+        """Forget the quantizer (float32 search); drops the code tier too."""
+        self.quant = None
+        if self._code_cache is not None:
+            self._code_cache.close()
+        self._code_cache = None
+        self._codes_bf = None
+
+    # ---------------------------------------------------- compaction trigger
+    def should_compact(self, tombstone_ratio: float = 0.3) -> bool:
+        """True when tombstones are worth reclaiming (background trigger)."""
+        dead = self._n - self.live_count
+        return dead > 0 and dead / self._n >= tombstone_ratio
 
     # ------------------------------------------------------------- accessors
     @property
@@ -188,6 +354,7 @@ class VectorStore:
         if self.quant is not None:
             self._codes[start:start + m] = self._encode(rows)
             self.quant.codes = self._codes[: self._n]
+        self._tier_note_write(start, start + m)
         self.epoch += 1
         self.rows_epoch += 1
         return new_ext
@@ -195,22 +362,44 @@ class VectorStore:
     def _grow(self, new_cap: int) -> None:
         """Reallocate the capacity buffers (geometric, so O(1) amortized)."""
         n = self._n
-        x = np.empty((new_cap, self._d), np.float32)
-        x[:n] = self._x[:n]
-        self._x = x
+        if self.tiered:
+            # block files grow in place; the caches are re-keyed (block
+            # count changed) with their lifetime counters carried over.
+            self._rows_bf.resize(new_cap)
+            self._x = self._rows_bf.rows
+            self._row_cache = self._rekey_cache(self._row_cache,
+                                                self._rows_bf)
+            if self._codes_bf is not None:
+                self._codes_bf.resize(new_cap)
+                self._codes = self._codes_bf.rows
+                self.quant.codes = self._codes[:n]
+                self._code_cache = self._rekey_cache(self._code_cache,
+                                                     self._codes_bf)
+        else:
+            x = np.empty((new_cap, self._d), np.float32)
+            x[:n] = self._x[:n]
+            self._x = x
+            if self.quant is not None:
+                c = np.zeros((new_cap,) + self._codes.shape[1:],
+                             self._codes.dtype)
+                c[:n] = self._codes[:n]
+                self._codes = c
+                self.quant.codes = self._codes[:n]
         a = np.zeros(new_cap, bool)
         a[:n] = self._alive[:n]
         self._alive = a
         e = np.full(new_cap, -1, np.int64)
         e[:n] = self._ext[:n]
         self._ext = e
-        if self.quant is not None:
-            c = np.zeros((new_cap,) + self._codes.shape[1:],
-                         self._codes.dtype)
-            c[:n] = self._codes[:n]
-            self._codes = c
-            self.quant.codes = self._codes[:n]
         self.capacity = new_cap
+
+    def _rekey_cache(self, old: BlockCache, bf: BlockFile) -> BlockCache:
+        old.close()
+        new = BlockCache(bf, self._cache_slots(bf), name=old.name,
+                         prefetch=self.tier.prefetch,
+                         track_rows=old._track_rows)
+        new.counters = old.counters
+        return new
 
     def _encode(self, rows: np.ndarray) -> np.ndarray:
         """Encode rows with the already-trained codebooks (no retraining)."""
@@ -247,6 +436,7 @@ class VectorStore:
         if self.quant is not None:
             self._codes[:n_after] = self._codes[:n_before][keep]
             self.quant.codes = self._codes[:n_after]
+        self._tier_note_write(0, n_before)
         # capacity is sticky: shapes stay stable across compaction too.
         self.epoch += 1
         self.rows_epoch += 1
@@ -304,9 +494,15 @@ class VectorStore:
         return out
 
     @classmethod
-    def from_arrays(cls, arrays, prefix: str = "store_") -> "VectorStore":
+    def from_arrays(cls, arrays, prefix: str = "store_",
+                    tier: Optional[TierConfig] = None) -> "VectorStore":
         """Rebuild from :meth:`to_arrays` output (or a pre-store checkpoint
-        holding only ``x``, for which everything defaults to live)."""
+        holding only ``x``, for which everything defaults to live).
+
+        With ``tier`` the rebuilt store spills to fresh block files under
+        ``tier.dir`` — the checkpoint arrays stay the canonical copy, the
+        tier is (re)materialized from them.
+        """
         x = arrays["x"]
         get = (arrays.get if hasattr(arrays, "get")
                else lambda k, d=None: arrays[k] if k in arrays else d)
@@ -317,4 +513,4 @@ class VectorStore:
         return cls(x, alive=alive, ext_ids=ext,
                    next_ext=int(nxt) if nxt is not None else None,
                    capacity=int(cap) if cap is not None else None,
-                   quant=QuantState.from_arrays(arrays))
+                   quant=QuantState.from_arrays(arrays), tier=tier)

@@ -1,0 +1,22 @@
+"""Tiered storage: a disk-resident Full Index behind a device block cache.
+
+The DGAI-style decoupling the ROADMAP asked for: quantized codes (and the
+float32 rows the exact rerank reads) spill to mmap-backed block files
+(:mod:`~repro.tiering.blockfile`); a bounded device arena with clock
+eviction, pins and hit/miss/evict counters (:mod:`~repro.tiering.cache`)
+keeps the workload's skewed head resident; and a cache-aware score table
+(:mod:`~repro.tiering.table`) plugs into the beam search's existing
+``score_rows`` seam, faulting misses through one batched host fetch per
+gather and staying bit-identical to the all-resident configuration.
+
+:class:`repro.store.VectorStore` owns the tier (``tier=TierConfig(...)``);
+the serving engine overlaps async prefetch of the predicted beam frontier
+with the jitted tick.
+"""
+
+from .blockfile import BlockFile  # noqa: F401
+from .cache import BlockCache  # noqa: F401
+from .table import TieredTable  # noqa: F401
+from .types import TierConfig  # noqa: F401
+
+__all__ = ["BlockFile", "BlockCache", "TieredTable", "TierConfig"]

@@ -1,0 +1,395 @@
+"""Device-resident block cache over one :class:`BlockFile` (clock eviction).
+
+The cache owns two device arrays the jitted search reads:
+
+* an **arena** ``(slots + 1, block_rows, width)`` holding the resident
+  blocks — slot ``slots`` is a permanent all-zero block that the sentinel
+  block id maps to, so sentinel gathers are always "hits" whose garbage
+  scores the search masks anyway;
+* a **block map** ``(n_blocks + 1,)`` from block id to arena slot, with
+  ``MISS = slots + 1`` for non-resident blocks.
+
+Everything that *mutates* the arena or map (admission, eviction,
+invalidation, prefetch application) runs on the host thread **between**
+jitted calls; the jitted gather only reads a snapshot.  Misses are served
+by :meth:`host_fetch` (a ``jax.pure_callback`` target) straight from the
+mmap, with per-block tallies that :meth:`maintain` turns into admissions —
+clock (second-chance) eviction with pin support, so blocks an in-flight
+serving lane still reads are never evicted under it.
+
+Consistency contract: the hit/miss decision is made *inside* the jitted
+graph from the snapshot map and passed to :meth:`host_fetch`, so the device
+and the host can never disagree on which rows were fetched.  Staleness is
+prevented at the write seam: :meth:`note_write` immediately unmaps written
+blocks (and drops concurrent prefetches), so any snapshot taken *after* a
+mutation — which is what the store's epoch machinery guarantees consumers
+do — can only see current bytes.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .blockfile import BlockFile
+
+__all__ = ["BlockCache"]
+
+
+class BlockCache:
+    """Bounded device arena + clock eviction + miss-driven admission."""
+
+    def __init__(self, bf: BlockFile, slots: int, *, name: str = "",
+                 prefetch: bool = False, track_rows: bool = False):
+        self.bf = bf
+        self.slots = max(1, min(int(slots), bf.n_blocks))
+        self.name = name
+        self.MISS = self.slots + 1
+        self._arena = jnp.zeros(
+            (self.slots + 1, bf.block_rows, bf.width), jnp.dtype(bf.dtype))
+        self._map = np.full(bf.n_blocks + 1, self.MISS, np.int32)
+        self._map[bf.n_blocks] = self.slots       # sentinel block: zero slot
+        self._map_dev = jnp.asarray(self._map)
+        self._map_dirty = False
+        self._slot_bid = np.full(self.slots, -1, np.int64)
+        self._ref = np.zeros(self.slots, bool)    # clock reference bits
+        self._hand = 0
+        self._pinned: set[int] = set()
+        # Workload-clustered layout (Quake-style adaptive residency): a
+        # block is a *cluster* of ``block_rows`` logical rows, not an id
+        # range.  ``_perm[logical] = position`` (block = position >> lb),
+        # ``_order[position] = logical`` is the arena-fill gather source.
+        # The backing file itself never moves — layout only decides which
+        # rows are cached together, so write-through aliases stay valid.
+        self._perm = np.arange(bf.capacity + 1, dtype=np.int32)
+        self._perm_dev = jnp.asarray(self._perm)
+        self._perm_dirty = False
+        self._order: Optional[np.ndarray] = None  # None = identity layout
+        self._track_rows = bool(track_rows)
+        self._row_tally = (np.zeros(bf.capacity + 1, np.int64)
+                           if track_rows else None)
+        # per-block touch tallies since the last maintain()
+        self._miss_tally = np.zeros(bf.n_blocks, np.int64)
+        self._hit_tally = np.zeros(bf.n_blocks, np.int64)
+        self.counters = dict(hits=0, misses=0, evictions=0, admissions=0,
+                             invalidations=0, prefetch_issued=0,
+                             prefetch_applied=0, relayouts=0)
+        # prefetch worker state (started lazily)
+        self._prefetch_enabled = bool(prefetch)
+        self._lock = threading.Lock()
+        self._want: set[int] = set()
+        self._staged: dict[int, np.ndarray] = {}
+        self._write_gen = 0
+        self._wake = threading.Event()
+        self._stop = False
+        self._worker: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ device view
+    def arena_dev(self) -> jnp.ndarray:
+        return self._arena
+
+    def map_dev(self) -> jnp.ndarray:
+        if self._map_dirty:
+            self._map_dev = jnp.asarray(self._map)
+            self._map_dirty = False
+        return self._map_dev
+
+    def perm_dev(self) -> jnp.ndarray:
+        if self._perm_dirty:
+            self._perm_dev = jnp.asarray(self._perm)
+            self._perm_dirty = False
+        return self._perm_dev
+
+    def arena_nbytes(self) -> int:
+        return int(self._arena.size * self._arena.dtype.itemsize)
+
+    # --------------------------------------------------------------- fetching
+    def host_fetch(self, cols, hit) -> np.ndarray:
+        """``pure_callback`` target: serve the rows the snapshot missed.
+
+        ``hit`` is the resident mask the jitted gather computed from its
+        snapshot map; rows where it is False are read from the mmap (the
+        "disk" access).  Hit rows return zeros — the caller selects the
+        arena gather for them.  Sentinel-block touches count as neither.
+        """
+        cols = np.asarray(cols)
+        hit = np.asarray(hit)
+        out = np.zeros(cols.shape + (self.bf.width,), self.bf.dtype)
+        bid = np.minimum(self._perm[cols] >> self.bf.log2_block,
+                         self.bf.n_blocks)
+        # real rows only: sentinel-padded gathers (col == capacity) must not
+        # pollute the counters or the admission tallies, whether or not the
+        # sentinel's position happens to land inside the last real block
+        valid = cols < self.bf.capacity
+        miss = valid & ~hit
+        if miss.any():
+            out[miss] = self.bf.rows[cols[miss]]     # file stays logical
+            np.add.at(self._miss_tally, bid[miss], 1)
+        got = valid & hit
+        if got.any():
+            np.add.at(self._hit_tally, bid[got], 1)
+        if self._row_tally is not None:
+            np.add.at(self._row_tally, cols[valid], 1)
+        self.counters["hits"] += int(got.sum())
+        self.counters["misses"] += int(miss.sum())
+        return out
+
+    def _load_block(self, bid: int) -> np.ndarray:
+        """Gather one block's rows from the file via the current layout."""
+        if self._order is None:
+            return self.bf.read_block(bid)
+        br = self.bf.block_rows
+        return np.array(self.bf.rows[self._order[bid * br: bid * br + br]])
+
+    # -------------------------------------------------------------- residency
+    def blocks_of_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Block ids covering the given logical rows (layout-aware) —
+        callers must never compute ``rows >> log2_block`` themselves, the
+        clustered layout makes that wrong after a relayout."""
+        rows = np.asarray(rows).reshape(-1)
+        bids = np.unique(self._perm[rows] >> self.bf.log2_block)
+        return bids[bids < self.bf.n_blocks]
+
+    def resident(self, bid: int) -> bool:
+        return self._map[int(bid)] < self.slots
+
+    def resident_blocks(self) -> np.ndarray:
+        return self._slot_bid[self._slot_bid >= 0].copy()
+
+    def _find_victim(self) -> Optional[int]:
+        free = np.flatnonzero(self._slot_bid < 0)
+        if free.size:
+            return int(free[0])
+        for _ in range(2 * self.slots + 1):
+            s = self._hand
+            self._hand = (self._hand + 1) % self.slots
+            if int(self._slot_bid[s]) in self._pinned:
+                continue
+            if self._ref[s]:
+                self._ref[s] = False
+                continue
+            return s
+        return None                 # everything pinned
+
+    def _install(self, bid: int, data: np.ndarray, slot: int) -> None:
+        old = int(self._slot_bid[slot])
+        if old >= 0:
+            self._map[old] = self.MISS
+            self.counters["evictions"] += 1
+        self._arena = self._arena.at[slot].set(jnp.asarray(data))
+        self._slot_bid[slot] = bid
+        self._map[bid] = slot
+        self._ref[slot] = True      # second-chance grace for new blocks
+        self._map_dirty = True
+        self.counters["admissions"] += 1
+
+    def _admit(self, bid: int, data: np.ndarray) -> bool:
+        """Clock-eviction admission (the prefetch-apply path)."""
+        slot = self._find_victim()
+        if slot is None:
+            return False
+        self._install(bid, data, slot)
+        return True
+
+    def maintain(self, max_admit: Optional[int] = None) -> int:
+        """Turn the tallies since the last call into admissions.
+
+        Hit blocks get their clock reference bit set (they survive a
+        prefetch-side sweep); missed blocks are considered hottest-first,
+        and each is admitted only when it out-scores the coldest evictable
+        resident block (this pass's miss tally vs. hit tally — TinyLFU-ish
+        windowed admission), so a proven-hot working set is never flushed
+        by its own cold tail.
+        """
+        for b in np.flatnonzero(self._hit_tally):
+            s = self._map[b]
+            if s < self.slots:
+                self._ref[s] = True
+        hot = np.flatnonzero(self._miss_tally)
+        admitted = 0
+        fresh: set[int] = set()
+        for b in hot[np.argsort(-self._miss_tally[hot], kind="stable")]:
+            b = int(b)
+            if self._map[b] < self.slots:       # raced with prefetch: done
+                continue
+            slot = self._admission_victim(int(self._miss_tally[b]), fresh)
+            if slot is None:
+                break
+            self._install(b, self._load_block(b), slot)
+            fresh.add(b)
+            admitted += 1
+            if max_admit is not None and admitted >= max_admit:
+                break
+        self._miss_tally[:] = 0
+        self._hit_tally[:] = 0
+        return admitted
+
+    def _admission_victim(self, cand_score: int,
+                          fresh: set[int]) -> Optional[int]:
+        """Free slot, or the coldest unpinned resident strictly colder
+        than the candidate; None when nothing qualifies."""
+        free = np.flatnonzero(self._slot_bid < 0)
+        if free.size:
+            return int(free[0])
+        best, best_score = None, cand_score
+        for s in range(self.slots):
+            b = int(self._slot_bid[s])
+            if b in self._pinned or b in fresh:
+                continue
+            sc = int(self._hit_tally[b])
+            if sc < best_score:
+                best, best_score = s, sc
+        return best
+
+    # --------------------------------------------------------------- layout
+    def set_layout(self, order: np.ndarray) -> None:
+        """Re-cluster blocks: ``order[p] = logical id`` at position ``p``.
+
+        ``order`` ranks the first ``len(order)`` logical rows (hottest
+        first); rows beyond it keep their identity positions.  Every
+        resident block is dropped (its contents are keyed to the old
+        clustering) and concurrent prefetches are abandoned.
+        """
+        cap = self.bf.capacity
+        order = np.asarray(order, np.int64)
+        if order.size and not np.array_equal(np.sort(order),
+                                             np.arange(order.size)):
+            # anything else would place two logical ids at one position
+            raise ValueError(
+                "order must be a permutation of the first len(order) "
+                "logical ids")
+        perm = np.arange(cap + 1, dtype=np.int32)
+        perm[order] = np.arange(order.size, dtype=np.int32)
+        full = np.empty(self.bf.n_blocks * self.bf.block_rows, np.int64)
+        full[: cap] = perm[:cap].argsort(kind="stable")  # position → logical
+        full[cap:] = 0        # file padding positions: never addressed
+        with self._lock:
+            self._write_gen += 1
+            self._want.clear()
+            self._staged.clear()
+            self._perm = perm
+            self._perm_dirty = True
+            self._order = full
+            self._map[: self.bf.n_blocks] = self.MISS
+            self._slot_bid[:] = -1
+            self._ref[:] = False
+            self._map_dirty = True
+            self._miss_tally[:] = 0
+            self._hit_tally[:] = 0
+        self.counters["relayouts"] += 1
+
+    def relayout(self, n: int) -> bool:
+        """Cluster blocks around the accumulated row-touch frequencies.
+
+        Random internal ids spread the workload's hot rows across every
+        id-range block, so an id-range cache caps out near uniform; after
+        re-clustering, the hottest ``block_rows`` rows share a block and
+        the cache's hit-rate approaches the row-level skew of the
+        workload.  Returns False when nothing was tracked yet.
+        """
+        if self._row_tally is None or not self._row_tally[:n].any():
+            return False
+        self.set_layout(np.argsort(-self._row_tally[:n], kind="stable"))
+        return True
+
+    # ----------------------------------------------------------- invalidation
+    def note_write_rows(self, lo: int, hi: int) -> None:
+        """Invalidate the blocks covering logical rows ``[lo, hi)``."""
+        if hi <= lo:
+            return
+        bids = np.unique(self._perm[lo:hi] >> self.bf.log2_block)
+        self.note_write(int(b) for b in bids if b < self.bf.n_blocks)
+
+    def note_write(self, bids: Iterable[int]) -> None:
+        """Written blocks leave the cache *now* (the stale-epoch guard)."""
+        with self._lock:
+            self._write_gen += 1
+            for b in bids:
+                b = int(b)
+                self._want.discard(b)
+                self._staged.pop(b, None)
+                s = self._map[b]
+                if s < self.slots:
+                    self._map[b] = self.MISS
+                    self._slot_bid[s] = -1
+                    self._ref[s] = False
+                    self._map_dirty = True
+                    self.counters["invalidations"] += 1
+
+    # ------------------------------------------------------------------- pins
+    def pin_blocks(self, bids: Iterable[int]) -> None:
+        """Replace the pin set (blocks in-flight lanes still read)."""
+        self._pinned = {int(b) for b in bids}
+
+    # --------------------------------------------------------------- prefetch
+    def prefetch_async(self, bids: Iterable[int]) -> int:
+        """Schedule background loads of ``bids`` (non-resident ones)."""
+        if not self._prefetch_enabled:
+            return 0
+        issued = 0
+        with self._lock:
+            for b in bids:
+                b = int(b)
+                if (0 <= b < self.bf.n_blocks
+                        and self._map[b] >= self.slots
+                        and b not in self._want and b not in self._staged):
+                    self._want.add(b)
+                    issued += 1
+        if issued:
+            self.counters["prefetch_issued"] += issued
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._prefetch_loop, daemon=True,
+                    name=f"tier-prefetch-{self.name}")
+                self._worker.start()
+            self._wake.set()
+        return issued
+
+    def _prefetch_loop(self) -> None:
+        while True:
+            self._wake.wait()
+            if self._stop:
+                return
+            with self._lock:
+                if not self._want:
+                    self._wake.clear()
+                    continue
+                bid = self._want.pop()
+                gen = self._write_gen
+            data = self._load_block(bid)        # the off-thread disk read
+            with self._lock:
+                # a write raced the read → the staged copy may be torn
+                if self._write_gen == gen:
+                    self._staged[bid] = data
+
+    def apply_prefetch(self) -> int:
+        """Admit completed prefetches (host thread, between jitted calls)."""
+        with self._lock:
+            staged, self._staged = self._staged, {}
+        applied = 0
+        for bid, data in staged.items():
+            if self._map[bid] < self.slots:
+                continue
+            if self._admit(bid, data):
+                applied += 1
+        self.counters["prefetch_applied"] += applied
+        return applied
+
+    def close(self) -> None:
+        self._stop = True
+        self._wake.set()
+        if self._worker is not None:
+            self._worker.join(timeout=2.0)
+            self._worker = None
+
+    # ------------------------------------------------------------------ stats
+    def hit_rate(self) -> float:
+        h, m = self.counters["hits"], self.counters["misses"]
+        return h / (h + m) if (h + m) else 0.0
+
+    def reset_counters(self) -> None:
+        for k in self.counters:
+            self.counters[k] = 0

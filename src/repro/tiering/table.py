@@ -1,0 +1,121 @@
+"""Cache-aware score table: the tier's face toward the beam search.
+
+:class:`TieredTable` implements the score-table protocol of
+:mod:`repro.quant.types` (``.n`` / ``.with_queries`` / ``.gather_score``)
+over a :class:`~repro.tiering.cache.BlockCache` instead of a fully resident
+device array.  A gather splits each requested row by the snapshot block
+map: resident rows come out of the device arena, the rest fault through a
+``jax.pure_callback`` into :meth:`BlockCache.host_fetch` (one batched host
+read per gather, which also tallies hits/misses for the admission policy).
+
+Bit-identity contract: the decode + distance expressions below are copied
+verbatim from their resident counterparts (``SQTable.gather_score``,
+``PQView.gather_score`` and the float32 branch of
+:func:`repro.core.beam_search.score_rows`), and the hit/miss split scores
+the arena gather and the host fetch through two *separate* copies of that
+arithmetic, selecting between the finished **scores** — so a tiered search
+returns bit-identical results to the all-resident configuration at any
+cache size.  (Selecting between the code *arrays* instead would let XLA
+fuse the combine into the decode+reduce and shift the result by an ulp;
+the select-after-score form keeps each arithmetic subgraph identical to
+the resident one, verified empirically in ``tests/test_tiering.py``.)
+
+The table is a snapshot: it pins the arena + map at construction time.
+Consumers rebuild it after any cache mutation (admission, prefetch apply,
+invalidation) — :meth:`repro.core.dqf.DQF` does so per search call, the
+wave engine per tick.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cache import BlockCache
+
+__all__ = ["TieredTable"]
+
+
+@jax.tree_util.register_pytree_node_class
+class TieredTable:
+    """Score-table protocol over a block cache ("f32" | "sq8" | "pq")."""
+
+    def __init__(self, cache: BlockCache, arena, block_map, perm, *,
+                 mode: str, n: int, p0=None, p1=None, luts=None):
+        self.cache = cache
+        self.arena = arena            # (slots+1, block_rows, width)
+        self.block_map = block_map    # (n_blocks+1,) int32, MISS = slots+1
+        self.perm = perm              # (capacity+1,) logical id → position
+        self.mode = mode
+        self._n = int(n)              # sentinel row id (= store capacity)
+        self.p0 = p0                  # sq8: scale | pq: centroids
+        self.p1 = p1                  # sq8: zero
+        self.luts = luts              # pq: per-query LUTs (set by with_queries)
+
+    @classmethod
+    def from_cache(cls, cache: BlockCache, *, mode: str, n: int,
+                   p0=None, p1=None) -> "TieredTable":
+        return cls(cache, cache.arena_dev(), cache.map_dev(),
+                   cache.perm_dev(), mode=mode, n=n, p0=p0, p1=p1)
+
+    # ------------------------------------------------------ score-table proto
+    @property
+    def n(self) -> int:
+        return self._n
+
+    def with_queries(self, queries: jnp.ndarray) -> "TieredTable":
+        if self.mode != "pq":
+            return self
+        from repro.quant import pq_luts     # lazy: tiering ↛ quant.pq cycle
+        return TieredTable(self.cache, self.arena, self.block_map,
+                           self.perm, mode=self.mode, n=self._n, p0=self.p0,
+                           p1=self.p1, luts=pq_luts(queries, self.p0))
+
+    def _gather_split(self, cols: jnp.ndarray):
+        """((B, C, w) arena rows, (B, C, w) fetched rows, (B, C) hit mask)."""
+        bf, slots = self.cache.bf, self.cache.slots
+        pos = self.perm[cols]         # layout: block = row-cluster position
+        bid = jnp.minimum(pos >> bf.log2_block, bf.n_blocks)
+        slot = self.block_map[bid]                           # (B, C)
+        hit = slot <= slots                # zero block (sentinel) is a "hit"
+        g = self.arena[jnp.minimum(slot, slots),
+                       pos & (bf.block_rows - 1)]            # (B, C, w)
+        fetched = jax.pure_callback(
+            self.cache.host_fetch,
+            jax.ShapeDtypeStruct(cols.shape + (bf.width,), self.arena.dtype),
+            cols, hit)
+        return g, fetched, hit
+
+    def _score(self, codes: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+        if self.mode == "sq8":              # == SQTable.gather_score
+            g = codes.astype(jnp.float32) * self.p0 + self.p1
+            diff = g - queries.astype(jnp.float32)[:, None, :]
+            return jnp.sum(diff * diff, axis=-1)
+        if self.mode == "pq":               # == PQView.gather_score
+            c = codes.astype(jnp.int32)
+            vals = jnp.take_along_axis(self.luts[:, None], c[..., None],
+                                       axis=3)
+            return jnp.sum(vals[..., 0], axis=-1)
+        # == the float32 array branch of beam_search.score_rows
+        diff = codes - queries[:, None, :]
+        return jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+
+    def gather_score(self, queries: jnp.ndarray,
+                     cols: jnp.ndarray) -> jnp.ndarray:
+        g, fetched, hit = self._gather_split(cols)
+        return jnp.where(hit, self._score(g, queries),
+                         self._score(fetched, queries))
+
+    # ----------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        children = (self.arena, self.block_map, self.perm, self.p0,
+                    self.p1, self.luts)
+        aux = (self.cache, self.mode, self._n)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        cache, mode, n = aux
+        arena, block_map, perm, p0, p1, luts = children
+        return cls(cache, arena, block_map, perm, mode=mode, n=n, p0=p0,
+                   p1=p1, luts=luts)

@@ -1,0 +1,395 @@
+"""Tiered-storage invariants (repro.tiering + VectorStore tier mode).
+
+The contracts under test:
+
+* **bit-identity**: at any cache size (10% included), tiered searches —
+  dynamic, dual-beam, baseline — return exactly the ids *and distances* of
+  the all-resident configuration, cold and warm, and across the whole
+  mutation lifecycle (insert → delete → compact) and a relayout;
+* **no stale epoch**: a cache can never serve bytes from before a write —
+  mutations invalidate their blocks before the epoch moves;
+* **eviction respects pins**: blocks pinned (in-flight lanes) survive any
+  admission pressure;
+* **hit-rate is monotone in cache size** on a replayed trace, and a Zipf
+  workload warms the cache;
+* tier files persist alongside the checkpoint and stay consistent with
+  external ids across save → load.
+"""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DQF, DQFConfig, QuantConfig, TierConfig, ZipfWorkload
+from repro.core.workload import zipf_probs
+from repro.serving.engine import WaveEngine
+from repro.store import VectorStore
+from repro.tiering import BlockCache, BlockFile, TieredTable
+from tests._hypothesis_compat import given, settings, st
+from tests.conftest import make_clustered
+
+N, D = 900, 16
+
+
+def _cfg(**over):
+    base = dict(knn_k=10, out_degree=10, index_ratio=0.03, k=10,
+                hot_pool=16, full_pool=32, max_hops=100,
+                n_query_trigger=10 ** 6,
+                quant=QuantConfig(mode="sq8", rerank_k=24))
+    base.update(over)
+    return DQFConfig(**base)
+
+
+def _tier(tmp, frac, **over):
+    kw = dict(mode="host", dir=str(tmp), block_rows=16, cache_frac=frac)
+    kw.update(over)
+    return TierConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    """One resident build + checkpoint; tiered twins load from it."""
+    x = make_clustered(n=N, d=D, clusters=12, seed=11)
+    dqf = DQF(_cfg()).build(x)
+    wl = ZipfWorkload(x, beta=2.0, sigma=0.05, seed=12)
+    _, t = wl.sample(3000, with_targets=True)
+    dqf.counter.record(t)
+    dqf.rebuild_hot()
+    path = str(tmp_path_factory.mktemp("ckpt") / "dqf.npz")
+    dqf.save(path)
+    return {"x": x, "resident": dqf, "wl": wl, "path": path,
+            "targets": t, "tmp": tmp_path_factory}
+
+
+def _load_tiered(world, frac, name, **over):
+    """A tiered twin of the resident instance: same store, graph, hot
+    index and counter state (all restored from the checkpoint)."""
+    tmp = world["tmp"].mktemp(name)
+    cfg = _cfg(tier=_tier(tmp, frac, **over))
+    return DQF.load(world["path"], cfg)
+
+
+# ------------------------------------------------------------- bit identity
+@pytest.mark.parametrize("frac", [1.0, 0.1])
+def test_tiered_search_bit_identical_to_resident(world, frac):
+    dqf_t = _load_tiered(world, frac, f"parity{int(frac * 100)}")
+    dqf_r = world["resident"]
+    for rep in range(3):                    # cold, then warm(er) cache
+        q = world["wl"].sample(48)
+        rr = dqf_r.search(q, record=False)
+        rt = dqf_t.search(q, record=False)
+        assert np.array_equal(np.asarray(rr.ids), np.asarray(rt.ids))
+        assert np.array_equal(np.asarray(rr.dists), np.asarray(rt.dists))
+        br = dqf_r.search_baseline(q)
+        bt = dqf_t.search_baseline(q)
+        assert np.array_equal(np.asarray(br.ids), np.asarray(bt.ids))
+        assert np.array_equal(np.asarray(br.dists), np.asarray(bt.dists))
+
+
+def test_relayout_preserves_results(world):
+    dqf_t = _load_tiered(world, 0.1, "relayout")
+    q = world["wl"].sample(64)
+    before = dqf_t.search(q, record=False)
+    assert dqf_t.relayout_tier()            # traffic seen → True
+    after = dqf_t.search(q, record=False)
+    assert np.array_equal(np.asarray(before.ids), np.asarray(after.ids))
+    assert np.array_equal(np.asarray(before.dists), np.asarray(after.dists))
+    rr = world["resident"].search(q, record=False)
+    assert np.array_equal(np.asarray(rr.ids), np.asarray(after.ids))
+
+
+def test_cache_warms_on_zipf(world):
+    dqf_t = _load_tiered(world, 0.25, "warm")
+    cache = dqf_t.store.full_phase_cache()
+    wl = world["wl"]
+    q0 = wl.sample(128)
+    cache.reset_counters()
+    dqf_t.search(q0, record=False)
+    cold = cache.hit_rate()
+    for _ in range(2):
+        dqf_t.search(wl.sample(128), record=False)
+    dqf_t.relayout_tier()
+    for _ in range(3):
+        dqf_t.search(wl.sample(128), record=False)
+    cache.reset_counters()
+    dqf_t.search(wl.sample(128), record=False)
+    warm = cache.hit_rate()
+    assert warm > 0.5                       # Zipf head resides after warmup
+    assert warm > cold + 0.3
+
+
+# ---------------------------------------------------------- stale epochs
+def test_mutations_never_serve_stale_epoch(world):
+    """Tiered twin tracks a resident twin bit-for-bit through churn."""
+    x = world["x"]
+    tmp = world["tmp"].mktemp("stale")
+    dqf_t = DQF(_cfg(tier=_tier(tmp, 0.1))).build(x)
+    dqf_r = DQF(_cfg()).build(x)
+    for dqf in (dqf_t, dqf_r):
+        dqf.counter.record(world["targets"])
+        dqf.rebuild_hot()
+    rng = np.random.default_rng(4)
+    wl = world["wl"]
+    for step in range(3):
+        q = wl.sample(32)
+        # warm the cache so stale blocks would be resident if not dropped
+        dqf_t.search(q, record=False)
+        new = rng.standard_normal((20, D)).astype(np.float32)
+        et = dqf_t.insert(new)
+        er = dqf_r.insert(new)
+        assert np.array_equal(et, er)
+        live = dqf_t.store.live_ids()
+        victims = dqf_t.store.to_external(
+            rng.choice(live, size=8, replace=False))
+        dqf_t.delete(victims)
+        dqf_r.delete(victims)
+        rt = dqf_t.search(q, record=False)
+        rr = dqf_r.search(q, record=False)
+        assert np.array_equal(np.asarray(rt.ids), np.asarray(rr.ids))
+        assert np.array_equal(np.asarray(rt.dists), np.asarray(rr.dists))
+    ct, cr = dqf_t.compact(), dqf_r.compact()
+    assert np.array_equal(ct["remap"], cr["remap"])
+    q = wl.sample(32)
+    rt = dqf_t.search(q, record=False)
+    rr = dqf_r.search(q, record=False)
+    assert np.array_equal(np.asarray(rt.ids), np.asarray(rr.ids))
+
+
+def test_note_write_drops_resident_block(tmp_path):
+    cap, w, br = 64, 4, 8
+    bf = BlockFile(str(tmp_path / "t.f32"), cap, w, np.float32, br)
+    rng = np.random.default_rng(0)
+    bf.rows[:cap] = rng.standard_normal((cap, w)).astype(np.float32)
+    cache = BlockCache(bf, slots=2)
+    cache._miss_tally[0] = 5
+    assert cache.maintain() == 1 and cache.resident(0)
+    bf.rows[3] = 7.0                        # write-through lands in file
+    cache.note_write_rows(3, 4)
+    assert not cache.resident(0)
+    assert cache.counters["invalidations"] == 1
+    # a fresh snapshot faults the block back in with the new bytes
+    t = TieredTable.from_cache(cache, mode="f32", n=cap)
+    q = jnp.zeros((1, w), jnp.float32)
+    d2 = np.asarray(t.gather_score(q, jnp.asarray([[3]], jnp.int32)))
+    assert np.isclose(d2[0, 0], float(np.sum(bf.rows[3] ** 2)))
+
+
+# ------------------------------------------------------------------ pins
+def test_eviction_respects_pins(tmp_path):
+    cap, w, br = 64, 4, 8                   # 8 blocks
+    bf = BlockFile(str(tmp_path / "t.f32"), cap, w, np.float32, br)
+    bf.rows[:cap] = np.arange(cap * w, dtype=np.float32).reshape(cap, w)
+    cache = BlockCache(bf, slots=2)
+    cache._miss_tally[[0, 1]] = [10, 9]
+    assert cache.maintain() == 2
+    assert cache.resident(0) and cache.resident(1)
+    cache.pin_blocks([0, 1])                # as if in-flight lanes read them
+    cache._miss_tally[2] = 100
+    assert cache.maintain() == 0            # nothing evictable
+    assert cache.resident(0) and cache.resident(1) and not cache.resident(2)
+    cache.pin_blocks([0])
+    cache._miss_tally[2] = 100
+    assert cache.maintain() == 1
+    assert cache.resident(0) and cache.resident(2) and not cache.resident(1)
+
+
+# ------------------------------------------------- hit-rate vs cache size
+def _replay(bf, slots, batches):
+    """Steady-state hit rate of one cache size over a fixed trace."""
+    cache = BlockCache(bf, slots)
+    table_score = jax.jit(lambda t, q, c: t.gather_score(q, c))
+    q = jnp.zeros((4, bf.width), jnp.float32)
+    for i, cols in enumerate(batches):
+        cache.maintain()
+        if i == len(batches) // 2:          # measure steady state only
+            cache.reset_counters()
+        t = TieredTable.from_cache(cache, mode="f32", n=bf.capacity)
+        np.asarray(table_score(t, q, jnp.asarray(cols, jnp.int32)))
+    return cache.hit_rate()
+
+
+def test_hit_rate_monotone_in_cache_size(tmp_path):
+    cap, w, br = 256, 4, 8                  # 32 blocks
+    bf = BlockFile(str(tmp_path / "t.f32"), cap, w, np.float32, br)
+    rng = np.random.default_rng(1)
+    bf.rows[:cap] = rng.standard_normal((cap, w)).astype(np.float32)
+    probs = zipf_probs(cap, 1.5)
+    perm = rng.permutation(cap)
+    batches = [perm[rng.choice(cap, size=(4, 16), p=probs)]
+               for _ in range(12)]
+    rates = [_replay(bf, s, batches) for s in (2, 8, 32)]
+    assert rates[-1] > 0.95                 # full-size cache: all resident
+    for small, big in zip(rates, rates[1:]):
+        assert big >= small - 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_cache_random_trace_consistency(tmp_path_factory, seed):
+    """Property: any interleaving of gathers / writes / maintains serves
+    exactly the file's current bytes."""
+    tmp = tmp_path_factory.mktemp(f"prop{seed}")
+    cap, w, br = 64, 4, 8
+    bf = BlockFile(str(tmp / "t.f32"), cap, w, np.float32, br)
+    rng = np.random.default_rng(seed)
+    bf.rows[:cap] = rng.standard_normal((cap, w)).astype(np.float32)
+    cache = BlockCache(bf, slots=3)
+    score = jax.jit(lambda t, q, c: t.gather_score(q, c))
+    q = jnp.zeros((2, w), jnp.float32)
+    for _ in range(6):
+        op = rng.integers(0, 3)
+        if op == 0:
+            lo = int(rng.integers(0, cap - 4))
+            bf.rows[lo: lo + 4] = rng.standard_normal((4, w)).astype(
+                np.float32)
+            cache.note_write_rows(lo, lo + 4)
+        elif op == 1:
+            cache.maintain()
+        cols = rng.integers(0, cap, size=(2, 6))
+        t = TieredTable.from_cache(cache, mode="f32", n=cap)
+        got = np.asarray(score(t, q, jnp.asarray(cols, jnp.int32)))
+        want = np.sum(np.asarray(bf.rows[cols]) ** 2, axis=-1)
+        assert np.allclose(got, want, rtol=1e-5)
+
+
+# ------------------------------------------- mutation lifecycle + persistence
+def test_tiered_mutation_roundtrip_and_sidecar(world):
+    dqf = _load_tiered(world, 0.25, "roundtrip")
+    rng = np.random.default_rng(8)
+    # enough inserts to outgrow capacity → block files resize, caches rekey
+    new = rng.standard_normal((200, D)).astype(np.float32)
+    ext_new = dqf.insert(new)
+    assert dqf.store.capacity > N
+    # growth re-keys the caches; row tracking (and so relayout) must survive
+    dqf.search(world["wl"].sample(16), record=False)
+    assert dqf.relayout_tier()
+    dqf.delete(ext_new[:30])
+    dqf.compact()
+    assert dqf.store.n == dqf.store.live_count
+    # external ids of the surviving inserts still resolve to their vectors
+    keep = ext_new[30:]
+    internal = dqf.store.to_internal(keep)
+    assert np.allclose(dqf.store.x[internal], new[30:], atol=0)
+    q = world["wl"].sample(32)
+    before = dqf.search(q, record=False)
+    tmp = world["tmp"].mktemp("rt_ckpt")
+    path = str(tmp / "t.npz")
+    dqf.save(path)
+    sidecar = path + ".tier"
+    assert os.path.isdir(sidecar)
+    rows = np.memmap(os.path.join(sidecar, "rows.f32"), dtype=np.float32,
+                     mode="r").reshape(-1, D)
+    assert np.array_equal(rows[: dqf.store.n], dqf.store.x)
+    loaded = DQF.load(path, _cfg(
+        tier=_tier(world["tmp"].mktemp("rt_dir2"), 0.25)))
+    after = loaded.search(q, record=False)
+    assert np.array_equal(np.asarray(before.ids), np.asarray(after.ids))
+    assert np.array_equal(np.asarray(before.dists), np.asarray(after.dists))
+    assert np.array_equal(loaded.store.ext_ids, dqf.store.ext_ids)
+
+
+# ------------------------------------------------------------ memory report
+def test_memory_report_and_compat_alias(world):
+    dqf_t = _load_tiered(world, 0.1, "membytes")
+    dqf_r = world["resident"]
+    mt, mr = dqf_t.memory_report(), dqf_r.memory_report()
+    for legacy in ("full", "hot", "full_vec", "quant", "total",
+                   "compression"):
+        assert legacy in mt and legacy in mr
+    # acceptance: device-resident code bytes drop >= 4x at a 10% cache
+    assert mt["device"]["codes"] * 4 <= mr["device"]["codes"]
+    assert mt["device"]["rows"] * 4 <= mr["device"]["rows"]
+    assert mt["disk"]["total"] > 0 and mr["disk"]["total"] == 0
+    assert mr["host"]["rows"] > 0 and mt["host"]["rows"] == 0
+    assert dqf_t.index_nbytes() == dqf_t.memory_report()   # compat alias
+
+
+# --------------------------------------------- background compaction trigger
+def test_should_compact_trigger():
+    x = np.arange(40, dtype=np.float32).reshape(20, 2)
+    s = VectorStore(x)
+    assert not s.should_compact()
+    s.mark_dead(np.arange(5))               # 25% < default 30%
+    assert not s.should_compact()
+    assert s.should_compact(tombstone_ratio=0.2)
+    s.mark_dead(np.arange(5, 7))            # 35%
+    assert s.should_compact()
+
+
+def test_engine_drains_and_compacts_on_trigger(world):
+    x = world["x"]
+    dqf = DQF(_cfg()).build(x)
+    dqf.counter.record(world["targets"])
+    dqf.rebuild_hot()
+    rng = np.random.default_rng(5)
+    live = dqf.store.live_ids()
+    dqf.delete(dqf.store.to_external(
+        rng.choice(live, size=int(0.4 * live.size), replace=False)))
+    assert dqf.store.should_compact()
+    n_before = dqf.store.n
+    eng = WaveEngine(dqf, wave_size=8, tick_hops=4)
+    rids = eng.submit(world["wl"].sample(24))
+    eng.run_until_drained()
+    assert eng.stats.compactions == 1
+    assert dqf.store.n == dqf.store.live_count < n_before
+    for rid in rids:                        # every request still answered
+        ids = eng._results[rid]["ids"]
+        assert (ids >= 0).all()
+
+
+def test_engine_tiered_serving_with_prefetch(world):
+    dqf = _load_tiered(world, 0.25, "engine")
+    eng = WaveEngine(dqf, wave_size=8, tick_hops=4)
+    q = world["wl"].sample(24)
+    rids = eng.submit(q)
+    eng.run_until_drained()
+    cache = dqf.store.full_phase_cache()
+    assert eng.stats.completed == 24
+    assert cache.counters["prefetch_issued"] > 0
+    st = dqf.store
+    for rid in rids:
+        ids = eng._results[rid]["ids"]
+        ids = ids[ids < st.n]
+        assert st.alive[ids].all()
+
+
+# ----------------------------------------------------- contract validation
+def test_load_dim_mismatch_raises(world):
+    with pytest.raises(ValueError, match="dim"):
+        DQF.load(world["path"], _cfg(dim=D + 1))
+    DQF.load(world["path"], _cfg(dim=D))    # matching dim loads fine
+
+
+def test_load_metric_mismatch_raises(world, tmp_path):
+    z = dict(np.load(world["path"]))
+    z["metric"] = np.array("ip")
+    bad = str(tmp_path / "bad.npz")
+    np.savez_compressed(bad, **z)
+    with pytest.raises(ValueError, match="metric"):
+        DQF.load(bad, _cfg())
+
+
+def test_metric_validated_at_config():
+    with pytest.raises(ValueError, match="metric"):
+        DQFConfig(metric="cosine")
+
+
+def test_query_dim_mismatch_raises(world):
+    dqf = world["resident"]
+    bad = np.zeros((4, D + 3), np.float32)
+    with pytest.raises(ValueError, match="queries must be"):
+        dqf.search(bad)
+    with pytest.raises(ValueError, match="queries must be"):
+        dqf.search_baseline(bad)
+    eng = WaveEngine(dqf, wave_size=4)
+    with pytest.raises(ValueError, match="queries must be"):
+        eng.submit(bad)
+
+
+def test_build_dim_mismatch_raises():
+    x = np.zeros((20, 4), np.float32)
+    with pytest.raises(ValueError, match="dim"):
+        DQF(_cfg(dim=8, knn_k=4, out_degree=4)).build(x)
