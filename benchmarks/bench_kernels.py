@@ -29,6 +29,7 @@ def _time(fn, *args, repeats=5):
 
 
 def bench_kernels():
+    from .common import record_metric
     rng = np.random.default_rng(0)
     rows = []
     for B, n, d in ((256, 4096, 64), (512, 8192, 128)):
@@ -36,9 +37,14 @@ def bench_kernels():
         x = rng.standard_normal((n, d)).astype(np.float32)
         t = _time(lambda a, b: ref.pairwise_l2(a, b), q, x)
         gflops = 2 * B * n * d / t / 1e9
+        record_metric("kernels", f"pairwise_l2_B{B}_n{n}_d{d}",
+                      us=round(t * 1e6, 1), gflops=round(gflops, 1))
         rows.append(f"kernels/pairwise_l2_B{B}_n{n}_d{d},{t * 1e6:.0f},"
                     f"gflops={gflops:.1f}")
         t = _time(lambda a, b: ref.fused_topk_l2(a, b, k=32), q, x)
+        record_metric("kernels", f"fused_topk_B{B}_n{n}_d{d}",
+                      us=round(t * 1e6, 1),
+                      gflops=round(2 * B * n * d / t / 1e9, 1))
         rows.append(f"kernels/fused_topk_B{B}_n{n}_d{d},{t * 1e6:.0f},"
                     f"gflops={2 * B * n * d / t / 1e9:.1f}")
     # interpret-mode parity spot check rides along as a correctness canary
@@ -47,9 +53,71 @@ def bench_kernels():
     dd, ii = fused_topk_l2_pallas(q, x, k=8, bq=16, bn=32, interpret=True)
     dr, ir = ref.fused_topk_l2(q, x, k=8)
     ok = bool(np.array_equal(np.asarray(ii), np.asarray(ir)))
+    record_metric("kernels", "interpret_parity", ids_match=ok)
     rows.append(f"kernels/interpret_parity,{0.0:.1f},ids_match={ok}")
+    rows += bench_fused_hop()
     for r in rows:
         print(r)
+    return rows
+
+
+def bench_fused_hop():
+    """Fused wave-hop megakernel vs the composed per-hop kernel chain.
+
+    ``composed`` launches the pre-existing hop — expand → gather → score →
+    merge as one dispatch *per hop*, state round-tripping through HBM
+    between launches; ``fused`` advances the same wave the same number of
+    hops in a single launch with the state resident (the CPU path measures
+    the jnp oracle either way, so the delta is pure dispatch + round-trip
+    overhead — the exact cost the megakernel deletes).  Both paths are
+    bit-identical, which the benchmark asserts before timing.
+    """
+    from .common import record_metric
+    import jax
+    import jax.numpy as jnp
+    from repro.core import beam_search as bs
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(2)
+    rows = []
+    HOPS = 16
+    for B, n, d, R, L in ((16, 4096, 64, 16, 32), (64, 8192, 128, 32, 64)):
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        x_pad = jnp.asarray(np.concatenate(
+            [x, np.full((1, d), 1e9, np.float32)]))
+        adj = rng.integers(0, n, (n, R)).astype(np.int32)
+        adj_pad = jnp.asarray(np.concatenate(
+            [adj, np.full((1, R), n, np.int32)]))
+        q = jnp.asarray(rng.standard_normal((B, d)).astype(np.float32))
+        entries = jnp.asarray(
+            rng.choice(n, size=8, replace=False).astype(np.int32))
+        state = bs.init_state(x_pad, q, entries, L, None)
+        hs0 = bs.to_hop_state(state)
+
+        one_hop = jax.jit(lambda s: bs.expand_step(x_pad, adj_pad, q, s))
+
+        def composed(s=state):
+            for _ in range(HOPS):
+                s = one_hop(s)
+            return s
+
+        def fused():
+            return ops.fused_hop(hs0, adj_pad, q, None, x_pad,
+                                 hops=HOPS, max_hops=1 << 30)
+
+        got_c, got_f = composed(), fused()
+        assert np.array_equal(np.asarray(got_c.pool.ids),
+                              np.asarray(got_f.ids)), "fused != composed"
+        t_c = _time(lambda: composed().pool.dists) / HOPS
+        t_f = _time(lambda: fused().dists) / HOPS
+        name = f"hop_B{B}_n{n}_d{d}_R{R}"
+        record_metric("kernels", name,
+                      composed_us_per_hop=round(t_c * 1e6, 1),
+                      fused_us_per_hop=round(t_f * 1e6, 1),
+                      speedup=round(t_c / t_f, 2))
+        rows.append(f"kernels/{name},{t_f * 1e6:.0f},"
+                    f"composed_us_per_hop={t_c * 1e6:.0f};"
+                    f"speedup={t_c / t_f:.2f}")
     return rows
 
 

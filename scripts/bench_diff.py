@@ -1,0 +1,97 @@
+"""Diff freshly-produced BENCH_<section>.json files against committed
+baselines — the perf-trajectory guardrail of CI's bench-smoke job.
+
+Warn-only by design: CI runners are noisy shared VMs, so a regression
+prints a ``::warning`` annotation (rendered by GitHub Actions) instead of
+failing the build.  The committed baselines at repo root are refreshed
+whenever a PR intentionally moves the numbers.
+
+Usage: ``python scripts/bench_diff.py <fresh_dir> [<baseline_dir>]``
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+# metric-name heuristics: which direction is "worse"
+HIGHER_BETTER = ("qps", "recall", "gflops", "speedup", "hit_rate")
+LOWER_BETTER = ("p99", "us", "ms", "bytes", "dist_comps")
+REL_TOL = 0.25          # relative slack before a warning
+ABS_RECALL_TOL = 0.02
+
+
+def _direction(name: str):
+    for key in HIGHER_BETTER:
+        if key in name:
+            return "higher"
+    for key in LOWER_BETTER:
+        if key in name:
+            return "lower"
+    return None
+
+
+def _compare(section: str, fresh: dict, base: dict) -> list:
+    warnings = []
+    for entry, metrics in sorted(base.items()):
+        got = fresh.get(entry)
+        if got is None:
+            warnings.append(f"{section}/{entry}: missing from fresh run")
+            continue
+        for name, bval in sorted(metrics.items()):
+            fval = got.get(name)
+            if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+                continue
+            if fval is None:
+                warnings.append(f"{section}/{entry}.{name}: metric gone")
+                continue
+            d = _direction(name)
+            if d is None or bval == 0:
+                continue
+            if name == "recall":
+                if fval < bval - ABS_RECALL_TOL:
+                    warnings.append(
+                        f"{section}/{entry}.recall: {fval:.4f} < baseline "
+                        f"{bval:.4f} - {ABS_RECALL_TOL}")
+                continue
+            rel = (fval - bval) / abs(bval)
+            if d == "higher" and rel < -REL_TOL:
+                warnings.append(
+                    f"{section}/{entry}.{name}: {fval} is "
+                    f"{-rel:.0%} below baseline {bval}")
+            elif d == "lower" and rel > REL_TOL:
+                warnings.append(
+                    f"{section}/{entry}.{name}: {fval} is "
+                    f"{rel:.0%} above baseline {bval}")
+    return warnings
+
+
+def main() -> None:
+    fresh_dir = sys.argv[1] if len(sys.argv) > 1 else "bench-out"
+    base_dir = sys.argv[2] if len(sys.argv) > 2 else "."
+    compared = 0
+    warnings = []
+    for path in sorted(glob.glob(os.path.join(base_dir, "BENCH_*.json"))):
+        fname = os.path.basename(path)
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fresh_path):
+            continue                      # section not exercised this run
+        with open(path) as f:
+            base = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        section = fname[len("BENCH_"):-len(".json")]
+        warnings += _compare(section, fresh, base)
+        compared += 1
+    print(f"bench_diff: compared {compared} section(s) against {base_dir}")
+    for w in warnings:
+        print(f"::warning title=bench regression::{w}")
+    if not warnings:
+        print("bench_diff: no regressions beyond tolerance")
+    # warn-only: never fail the build on benchmark noise
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,7 @@ from .types import INF_DIST, PoolState, SearchResult, SearchStats
 __all__ = [
     "BeamState", "init_state", "expand_step", "beam_search", "pad_dataset",
     "pad_adjacency", "make_beam_search", "table_n", "score_rows", "as_view",
-    "next_expansions",
+    "next_expansions", "to_hop_state", "from_hop_state", "fused_beam_loop",
 ]
 
 
@@ -249,6 +249,75 @@ def next_expansions(state: BeamState, sentinel: int) -> jnp.ndarray:
     return jnp.where(has, state.pool.ids[rows, slot], sentinel)
 
 
+def to_hop_state(state: BeamState, evals_done: Optional[jnp.ndarray] = None,
+                 stop_at: Optional[jnp.ndarray] = None):
+    """Flatten a :class:`BeamState` into the fused kernel's ``HopState``.
+
+    ``evals_done``/``stop_at`` carry the termination bookkeeping of the
+    composed loop bodies; fresh defaults (0 / INT_MAX) match a loop entry.
+    """
+    from repro.kernels.ref import HopState
+    B = state.active.shape[0]
+    if evals_done is None:
+        evals_done = jnp.zeros((B,), jnp.int32)
+    if stop_at is None:
+        stop_at = jnp.full((B,), jnp.iinfo(jnp.int32).max, jnp.int32)
+    return HopState(
+        ids=state.pool.ids, dists=state.pool.dists,
+        expanded=state.pool.expanded, seen=state.seen, active=state.active,
+        dist_count=state.stats.dist_count,
+        update_count=state.stats.update_count, hops=state.stats.hops,
+        terminated=state.stats.terminated_early, evals_done=evals_done,
+        stop_at=stop_at)
+
+
+def from_hop_state(hs) -> BeamState:
+    """Rebundle a fused-kernel ``HopState`` into a :class:`BeamState`."""
+    return BeamState(
+        pool=PoolState(ids=hs.ids, dists=hs.dists, expanded=hs.expanded),
+        seen=hs.seen,
+        stats=SearchStats(dist_count=hs.dist_count,
+                          update_count=hs.update_count, hops=hs.hops,
+                          terminated_early=hs.terminated),
+        active=hs.active)
+
+
+def fused_beam_loop(x_pad, adj_pad, queries, state: BeamState,
+                    max_hops: int,
+                    live_pad: Optional[jnp.ndarray] = None, *,
+                    fused_hops: int = 8, tree=None, hot=None, k: int = 1,
+                    eval_gap: int = 1, add_step: int = 0,
+                    tree_depth: int = 1) -> BeamState:
+    """:func:`beam_loop` through the fused wave-hop megakernel.
+
+    Each :func:`repro.kernels.ops.fused_hop` launch advances every lane
+    ``fused_hops`` expansions with the beam state resident in VMEM;
+    inactive lanes are exact no-ops inside the kernel, so the result is
+    bit-identical to the composed per-hop loop (the overshoot past a
+    lane's exit hop changes nothing).  With ``tree`` (decision-tree
+    arrays) and ``hot`` (the frozen hot-phase features), the kernel also
+    runs the per-hop termination check of the dynamic full phase — this
+    one loop serves both Algorithm 3 and Algorithm 4's phase 2.
+    Device-resident tables only — a tiered table's host faults can't run
+    inside the kernel, so tiered callers stay on :func:`beam_loop`.
+    """
+    from repro.kernels import ops as kops
+    hf, hr = (hot.first, hot.first_div_kth) if hot is not None \
+        else (None, None)
+
+    def cond(hs):
+        return jnp.any(hs.active)
+
+    def body(hs):
+        return kops.fused_hop(hs, adj_pad, queries, live_pad, x_pad,
+                              tree, hf, hr, hops=fused_hops,
+                              max_hops=max_hops, k=k, eval_gap=eval_gap,
+                              add_step=add_step, tree_depth=tree_depth)
+
+    hs = jax.lax.while_loop(cond, body, to_hop_state(state))
+    return from_hop_state(hs)
+
+
 TermFn = Callable[[BeamState], jnp.ndarray]  # -> (B,) bool "terminate now"
 
 
@@ -281,15 +350,25 @@ def topk_from_pool(pool: PoolState, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("pool_size", "k", "max_hops"))
+    jax.jit, static_argnames=("pool_size", "k", "max_hops", "fused",
+                              "fused_hops"))
 def beam_search(x_pad: jnp.ndarray, adj_pad: jnp.ndarray,
                 entries: jnp.ndarray, queries: jnp.ndarray, *,
                 pool_size: int, k: int, max_hops: int = 512,
-                live_pad: Optional[jnp.ndarray] = None) -> SearchResult:
-    """Traditional beam search (Algorithm 3), batched over queries."""
+                live_pad: Optional[jnp.ndarray] = None,
+                fused: bool = False, fused_hops: int = 8) -> SearchResult:
+    """Traditional beam search (Algorithm 3), batched over queries.
+
+    ``fused=True`` routes the expansion loop through the fused wave-hop
+    megakernel (bit-identical results; device-resident tables only).
+    """
     state = init_state(x_pad, queries, entries, pool_size, live_pad)
-    state = beam_loop(x_pad, adj_pad, queries, state, max_hops,
-                      live_pad=live_pad)
+    if fused:
+        state = fused_beam_loop(x_pad, adj_pad, queries, state, max_hops,
+                                live_pad, fused_hops=fused_hops)
+    else:
+        state = beam_loop(x_pad, adj_pad, queries, state, max_hops,
+                          live_pad=live_pad)
     ids, dists = topk_from_pool(state.pool, k)
     return SearchResult(ids=ids, dists=dists, stats=state.stats)
 

@@ -351,6 +351,14 @@ class DQF:
         self.timings.tree_fit = time.perf_counter() - t0
         return self.tree
 
+    @property
+    def _fused(self) -> bool:
+        """Fused wave-hop megakernel, gated off for tiered stores (their
+        host faults can't run inside the kernel — the composed path keeps
+        the select-after-score seam intact)."""
+        return self.cfg.fused and not (self.store is not None
+                                       and self.store.tiered)
+
     # ----------------------------------------------------------------- search
     def search(self, queries: np.ndarray, *, record: bool = True,
                auto_rebuild: bool = True, use_kernel: bool = False,
@@ -373,7 +381,8 @@ class DQF:
             tree_depth=c.tree_depth, max_hops=c.max_hops,
             hot_mode=c.hot_mode, use_kernel=use_kernel,
             qtable=self._quant_table(), rerank_k=self._rerank_k,
-            live_pad=self._dev["live_pad"])
+            live_pad=self._dev["live_pad"],
+            fused=self._fused, fused_hops=c.fused_hops)
         res = self._search_end(res)
         if record:
             t.counter.record(np.asarray(res.ids))
@@ -399,7 +408,8 @@ class DQF:
             tree_depth=c.tree_depth, max_hops=c.max_hops,
             hot_mode=c.hot_mode,
             qtable=self._quant_table(), rerank_k=self._rerank_k,
-            live_pad=self._dev["live_pad"])
+            live_pad=self._dev["live_pad"],
+            fused=self._fused, fused_hops=c.fused_hops)
         return self._search_end(res)
 
     def search_baseline(self, queries: np.ndarray,
@@ -411,7 +421,8 @@ class DQF:
             self._row_table(), self._dev["adj_pad"], self._dev["entries"],
             jnp.asarray(q),
             pool_size=pool_size or self.cfg.full_pool, k=self.cfg.k,
-            max_hops=self.cfg.max_hops, live_pad=self._dev["live_pad"]))
+            max_hops=self.cfg.max_hops, live_pad=self._dev["live_pad"],
+            fused=self._fused, fused_hops=self.cfg.fused_hops))
 
     # ------------------------------------------------------ mutable lifecycle
     def insert(self, rows: np.ndarray,

@@ -245,7 +245,8 @@ def _full_phase(x_pad, adj_pad, queries, state: bs.BeamState,
 
 @functools.partial(jax.jit, static_argnames=(
     "k", "hot_pool_size", "full_pool_size", "eval_gap", "add_step",
-    "tree_depth", "max_hops", "hot_mode", "use_kernel", "rerank_k"))
+    "tree_depth", "max_hops", "hot_mode", "use_kernel", "rerank_k",
+    "fused", "fused_hops"))
 def dynamic_search(
     x_pad: jnp.ndarray,            # (n+1, d) padded dataset
     adj_pad: jnp.ndarray,          # (n+1, R) padded full adjacency
@@ -268,6 +269,8 @@ def dynamic_search(
     qtable=None,                   # quantized score table (repro.quant)
     rerank_k: int = 0,
     live_pad: Optional[jnp.ndarray] = None,   # (n+1,) liveness bitmap
+    fused: bool = False,           # fused wave-hop megakernel full phase
+    fused_hops: int = 8,
 ) -> tuple[SearchResult, SearchStats, HotFeatures]:
     """Algorithm 4 end to end. Returns (result, hot_phase_stats, hot_feats).
 
@@ -277,6 +280,11 @@ def dynamic_search(
     When ``qtable`` is given, phase 2 scores against the compressed codes
     (the hot phase stays float32) and, with ``rerank_k > 0``, the pool's
     head is re-scored exactly from ``x_pad`` before the final top-k.
+
+    ``fused=True`` routes the full phase through the fused wave-hop
+    megakernel (:mod:`repro.kernels.fused_hop`) — bit-identical results
+    from one kernel launch per ``fused_hops`` hops.  Device-resident
+    tables only; tiered callers must keep ``fused=False``.
 
     With a tiered store (:mod:`repro.tiering`) both ``x_pad`` and
     ``qtable`` are cache-aware :class:`~repro.tiering.TieredTable`
@@ -292,10 +300,19 @@ def dynamic_search(
     state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size,
                              live_pad)
     table = x_pad if qtable is None else qtable.with_queries(queries)
-    state = _full_phase(
-        table, adj_pad, queries, state, hfeats, tree,
-        k=k, eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
-        max_hops=max_hops, live_pad=live_pad)
+    if fused:
+        # phase 2 through the megakernel: the kernel's per-hop body is
+        # _full_phase's body verbatim (inactive lanes are exact no-ops,
+        # so the chunked launches stay bit-identical)
+        state = bs.fused_beam_loop(
+            table, adj_pad, queries, state, max_hops, live_pad,
+            fused_hops=fused_hops, tree=tree, hot=hfeats, k=k,
+            eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth)
+    else:
+        state = _full_phase(
+            table, adj_pad, queries, state, hfeats, tree,
+            k=k, eval_gap=eval_gap, add_step=add_step,
+            tree_depth=tree_depth, max_hops=max_hops, live_pad=live_pad)
     if qtable is not None and rerank_k > 0:
         ids, dists = _exact_rerank(x_pad, queries, state.pool,
                                    k=k, rerank_k=rerank_k, live_pad=live_pad)

@@ -90,6 +90,14 @@ class DQFConfig:
     max_hops: int = 512         # hard cap on beam-search expansions
     hot_mode: str = "graph"     # "graph" (paper-faithful) | "mxu" (Pallas)
 
+    # --- fused wave-hop megakernel (beyond paper; repro.kernels.fused_hop)
+    # One Pallas launch per ``fused_hops`` expansions with the beam state
+    # resident in VMEM; bit-identical to the composed kernel chain.
+    # Applies to device-resident tables — tiered stores fall back to the
+    # composed path automatically (host faults can't run in-kernel).
+    fused: bool = False
+    fused_hops: int = 8
+
     # --- workload (§5.1.2) ---
     zipf_beta: float = 1.2
 
@@ -110,6 +118,9 @@ class DQFConfig:
                 f"metric), got {self.metric!r}")
         if self.dim is not None and self.dim <= 0:
             raise ValueError(f"dim must be positive, got {self.dim}")
+        if self.fused_hops < 1:
+            raise ValueError(
+                f"fused_hops must be >= 1, got {self.fused_hops}")
 
 
 class PoolState(NamedTuple):

@@ -1,5 +1,8 @@
 """Pallas TPU kernels for the DQF hot paths + jnp oracles.
 
+* :mod:`~repro.kernels.fused_hop` — the wave-hop megakernel: whole beam
+  ticks (expand → gather → score → merge → terminate) in one launch with
+  the wave state resident in VMEM; bit-identical to the composed chain.
 * :mod:`~repro.kernels.distance` — tiled pairwise squared-L2 (MXU matmul).
 * :mod:`~repro.kernels.fused_scorer` — fused distances + running top-k
   (the beyond-paper MXU hot layer).
@@ -8,6 +11,8 @@
 * :mod:`~repro.kernels.pq_adc` — PQ asymmetric distances as a one-hot MXU
   matmul over per-query LUTs.
 * :mod:`~repro.kernels.topk_merge` — bitonic candidate-pool merge.
+* :mod:`~repro.kernels.bitonic` — in-kernel sort networks, including the
+  tie-broken *stable* variant the megakernel's merge relies on.
 * :mod:`~repro.kernels.ops` — dispatching public wrappers.
 * :mod:`~repro.kernels.ref` — pure-jnp oracles (contract + CPU path).
 """

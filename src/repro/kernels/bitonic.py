@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bitonic_sort_kv", "is_pow2", "next_pow2"]
+__all__ = ["bitonic_sort_kv", "bitonic_sort_stable", "is_pow2",
+           "next_pow2"]
 
 
 def is_pow2(n: int) -> bool:
@@ -70,3 +71,50 @@ def bitonic_sort_kv(keys: jnp.ndarray, vals: jnp.ndarray):
             j //= 2
         k *= 2
     return keys, vals
+
+
+def _stage_stable(keys, pos, payloads, j: int, k: int):
+    """Compare-exchange on the total order (key, pos); payloads follow."""
+    n = keys.shape[-1]
+    a = n // (2 * j)
+    shape = keys.shape[:-1]
+    split = lambda arr: arr.reshape(*shape, a, 2, j)
+    ks, ps = split(keys), split(pos)
+    lo_k, hi_k = ks[..., 0, :], ks[..., 1, :]
+    lo_p, hi_p = ps[..., 0, :], ps[..., 1, :]
+    g = jax.lax.broadcasted_iota(jnp.int32, (a, 1), 0)
+    desc = ((g * (2 * j)) & k) != 0
+    swap = ((lo_k > hi_k) | ((lo_k == hi_k) & (lo_p > hi_p))) ^ desc
+    pick = lambda lo, hi: (jnp.where(swap, hi, lo), jnp.where(swap, lo, hi))
+    join = lambda lo, hi: jnp.stack([lo, hi], axis=-2).reshape(*shape, n)
+    keys = join(*pick(lo_k, hi_k))
+    pos = join(*pick(lo_p, hi_p))
+    out = []
+    for v in payloads:
+        vs = split(v)
+        out.append(join(*pick(vs[..., 0, :], vs[..., 1, :])))
+    return keys, pos, tuple(out)
+
+
+def bitonic_sort_stable(keys: jnp.ndarray, *payloads: jnp.ndarray):
+    """Stable ascending sort by ``keys``; any number of payloads ride along.
+
+    An implicit position array breaks key ties, making the network a total
+    order — the resulting permutation is exactly the one a stable argsort
+    produces, which is what the fused-hop kernel needs to stay bit-identical
+    to the composed pool merge (``jnp.argsort`` is stable by default).
+    Last-axis length must be a power of two.
+    """
+    n = keys.shape[-1]
+    if not is_pow2(n):
+        raise ValueError(f"bitonic length must be a power of 2, got {n}")
+    pos = jnp.broadcast_to(
+        jax.lax.broadcasted_iota(jnp.int32, (1, n), 1), keys.shape)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            keys, pos, payloads = _stage_stable(keys, pos, payloads, j, k)
+            j //= 2
+        k *= 2
+    return (keys, *payloads)

@@ -16,13 +16,14 @@ import jax.numpy as jnp
 
 from . import ref
 from .distance import pairwise_l2_pallas
+from .fused_hop import fused_hop_pallas
 from .fused_scorer import fused_topk_l2_pallas
 from .pq_adc import pq_adc_pallas
 from .sq_distance import sq8_pairwise_l2_pallas
 from .topk_merge import pool_merge_pallas
 
 __all__ = ["pairwise_l2", "fused_topk_l2", "pool_merge", "sq8_pairwise_l2",
-           "pq_adc", "kernels_native"]
+           "pq_adc", "fused_hop", "table_spec", "kernels_native"]
 
 
 def kernels_native() -> bool:
@@ -81,3 +82,50 @@ def pool_merge(pool_dists, pool_ids, cand_dists, cand_ids, *,
         return ref.pool_merge(pool_dists, pool_ids, cand_dists, cand_ids)
     return pool_merge_pallas(pool_dists, pool_ids, cand_dists, cand_ids,
                              bb=bb, interpret=m)
+
+
+def table_spec(table):
+    """Unpack a score table into the fused-hop kernel's (mode, t0, t1, t2).
+
+    Accepts the device-resident tables only: a float32 ``x_pad`` array, an
+    ``SQTable``, or a per-search ``PQView`` (``PQTable.with_queries``
+    output).  A :class:`~repro.tiering.TieredTable` raises — its host
+    faults cannot run inside the kernel, so callers keep tiered lanes on
+    the composed path (the select-after-score seam).
+    """
+    if isinstance(table, jnp.ndarray):
+        return "f32", table, None, None
+    from repro.quant.types import PQView, SQTable  # deferred: no cycle
+    if isinstance(table, SQTable):
+        return "sq8", table.codes, table.scale, table.zero
+    if isinstance(table, PQView):
+        return "pq", table.codes, table.luts, None
+    raise TypeError(
+        f"fused hop needs a device-resident score table, got "
+        f"{type(table).__name__} — tiered lanes must use the composed path")
+
+
+def fused_hop(hs: "ref.HopState", adj_pad, queries, live_pad, table,
+              tree=None, hot_first=None, hot_ratio=None, *, hops: int,
+              max_hops: int, k: int = 1, eval_gap: int = 1,
+              add_step: int = 0, tree_depth: int = 1,
+              interpret: Optional[bool] = None, bl: int = 8
+              ) -> "ref.HopState":
+    """Advance a wave ``hops`` fused beam expansions (one kernel launch).
+
+    ``table`` is a device-resident score table (see :func:`table_spec`);
+    ``tree`` the unpacked decision-tree arrays or None.  Bit-identical to
+    running the composed expand→gather→score→merge chain ``hops`` times.
+    """
+    mode, t0, t1, t2 = table_spec(table)
+    m = _mode(interpret)
+    if m is None:
+        return ref.fused_hop(
+            hs, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
+            hot_first, hot_ratio, hops=hops, max_hops=max_hops, k=k,
+            eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth)
+    return fused_hop_pallas(
+        hs, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
+        hot_first, hot_ratio, hops=hops, max_hops=max_hops, k=k,
+        eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
+        bl=bl, interpret=m)

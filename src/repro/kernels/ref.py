@@ -8,12 +8,42 @@ the CPU execution path of the library (tests, laptop-scale benchmarks).
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["pairwise_l2", "fused_topk_l2", "pool_merge",
-           "gather_distances", "sq8_pairwise_l2", "pq_adc"]
+           "gather_distances", "sq8_pairwise_l2", "pq_adc",
+           "HopState", "fused_hop"]
+
+# Mirrors of repro.core.types constants (kernels sit below core, so the
+# values are duplicated rather than imported; bitwise identical).
+INF_DIST = jnp.float32(3.0e38)
+_INT_MAX = jnp.iinfo(jnp.int32).max
+_EPS = 1e-12          # == repro.core.features._EPS
+
+
+class HopState(NamedTuple):
+    """Flat per-lane search state the fused wave-hop kernel advances.
+
+    This is :class:`repro.core.beam_search.BeamState` unbundled (pool,
+    seen bitmap, counters) plus the termination bookkeeping the composed
+    loop bodies keep alongside it (``evals_done``, ``stop_at``).  Keeping
+    the contract here lets the kernel layer stay below :mod:`repro.core`.
+    """
+
+    ids: jnp.ndarray           # (B, L) int32 pool ids, sentinel = n
+    dists: jnp.ndarray         # (B, L) float32, INF_DIST for empty slots
+    expanded: jnp.ndarray      # (B, L) bool
+    seen: jnp.ndarray          # (B, n+1) bool, sentinel column always True
+    active: jnp.ndarray        # (B,) bool
+    dist_count: jnp.ndarray    # (B,) int32
+    update_count: jnp.ndarray  # (B,) int32
+    hops: jnp.ndarray          # (B,) int32
+    terminated: jnp.ndarray    # (B,) bool — stopped by the decision tree
+    evals_done: jnp.ndarray    # (B,) int32 — tree evaluations performed
+    stop_at: jnp.ndarray       # (B,) int32 — dist_count deadline (add_step)
 
 
 @jax.jit
@@ -94,3 +124,150 @@ def gather_distances(queries: jnp.ndarray, x_pad: jnp.ndarray,
     g = x_pad[nbrs]                                        # (B, R, d)
     diff = g.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
     return jnp.sum(diff * diff, axis=-1)
+
+
+# ------------------------------------------------------------ fused wave-hop
+def _gather_score(mode: str, t0, t1, t2, queries, cols):
+    """(B, C) distances of query b vs table row ``cols[b, c]``.
+
+    Each branch is copied verbatim from its composed counterpart so the
+    fused path stays bit-identical: ``f32`` is the array branch of
+    :func:`repro.core.beam_search.score_rows`, ``sq8`` is
+    ``SQTable.gather_score``, ``pq`` is ``PQView.gather_score`` (the
+    LUT-gather form, *not* the one-hot matmul of :mod:`.pq_adc` — ADC sum
+    order must match the composed scan).
+    """
+    if mode == "f32":
+        g = t0[cols]                                       # (B, C, d)
+        diff = g - queries[:, None, :]
+        return jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+    if mode == "sq8":
+        g = t0[cols].astype(jnp.float32) * t1 + t2
+        diff = g - queries.astype(jnp.float32)[:, None, :]
+        return jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+    if mode == "pq":
+        c = t0[cols].astype(jnp.int32)                     # (B, C, M)
+        vals = jnp.take_along_axis(t1[:, None], c[..., None], axis=3)
+        return jnp.sum(vals[..., 0], axis=-1).astype(jnp.float32)
+    raise ValueError(f"unknown score mode {mode!r}")
+
+
+def _tree_predict(tree, feats, depth: int):
+    """== repro.core.decision_tree.predict_jax over unpacked arrays."""
+    feature, threshold, left, right, value = tree
+    B = feats.shape[0]
+
+    def step(_, node):
+        f = jnp.maximum(feature[node], 0)
+        val = jnp.take_along_axis(feats, f[:, None], axis=1)[:, 0]
+        go_left = val <= threshold[node]
+        return jnp.where(go_left, left[node], right[node])
+
+    node = jax.lax.fori_loop(0, depth, step, jnp.zeros((B,), jnp.int32))
+    return value[node]
+
+
+def fused_hop_body(hs: HopState, adj_pad, queries, live_pad, mode: str,
+                   t0, t1, t2, tree, hot_first, hot_ratio, *, max_hops: int,
+                   k: int, eval_gap: int, add_step: int,
+                   tree_depth: int) -> HopState:
+    """One fused hop: expand → gather → score → merge → terminate.
+
+    Semantics contract for the Pallas megakernel — a verbatim mirror of
+    :func:`repro.core.beam_search.expand_step` followed by the composed
+    loop-body bookkeeping (hop cap, then the decision-tree check of
+    ``dynamic_search._full_phase``; the serving tick is the ``add_step=0``
+    special case).  Inactive lanes are exact no-ops, so running a fixed
+    hop count over a wave is bit-identical to the composed per-hop loop.
+    """
+    n = adj_pad.shape[0] - 1
+    B, L = hs.ids.shape
+    rows = jnp.arange(B)
+
+    # --- expansion target (expand_step lines 1-6) ---
+    unexp = (~hs.expanded) & (hs.ids != n)
+    lane = hs.active & jnp.any(unexp, axis=1)
+    slot = jnp.argmax(unexp, axis=1)
+    p = jnp.where(lane, hs.ids[rows, slot], n)
+    expanded = hs.expanded.at[rows, slot].set(hs.expanded[rows, slot] | lane)
+
+    # --- adjacency gather + dedup ---
+    nbrs = adj_pad[p]                                      # (B, R)
+    already = jnp.take_along_axis(hs.seen, nbrs, axis=1)
+    valid = (nbrs != n) & (~already) & lane[:, None]
+    if live_pad is not None:
+        valid &= live_pad[nbrs]
+    cols = jnp.where(valid, nbrs, n)
+    seen = hs.seen.at[rows[:, None], cols].set(True)
+
+    # --- score ---
+    d2 = _gather_score(mode, t0, t1, t2, queries, cols)
+    d2 = jnp.where(valid, d2, INF_DIST)
+
+    # --- merge (== beam_search._merge_pool) ---
+    worst = hs.dists[:, -1]
+    inserted = jnp.sum((d2 < worst[:, None]).astype(jnp.int32), axis=1)
+    cat_i = jnp.concatenate([hs.ids, cols.astype(jnp.int32)], axis=1)
+    cat_d = jnp.concatenate([hs.dists, d2], axis=1)
+    cat_e = jnp.concatenate([expanded, jnp.zeros_like(valid)], axis=1)
+    order = jnp.argsort(cat_d, axis=1)[:, :L]
+    keep = lambda a, b: jnp.where(lane[:, None], a, b)
+    ids = keep(jnp.take_along_axis(cat_i, order, 1),
+               hs.ids).astype(hs.ids.dtype)
+    dists = keep(jnp.take_along_axis(cat_d, order, 1), hs.dists)
+    expanded = keep(jnp.take_along_axis(cat_e, order, 1), expanded)
+
+    # --- counters + liveness ---
+    dist_count = hs.dist_count + jnp.where(
+        lane, jnp.sum(valid.astype(jnp.int32), 1), 0)
+    update_count = hs.update_count + jnp.where(lane, inserted, 0)
+    hops_ct = hs.hops + lane.astype(jnp.int32)
+    still = jnp.any((~expanded) & (ids != n), axis=1)
+    active = hs.active & still
+    active = active & (hops_ct < max_hops)
+
+    # --- decision-tree termination (loop-body semantics) ---
+    terminated = hs.terminated
+    evals_done, stop_at = hs.evals_done, hs.stop_at
+    if tree is not None:
+        due = ((dist_count // eval_gap) > evals_done) & active
+        first = dists[:, 0]
+        kth = dists[:, min(k, L) - 1]
+        feats = jnp.stack(
+            [hot_first, hot_ratio, first, first / (kth + _EPS),
+             dist_count.astype(jnp.float32),
+             update_count.astype(jnp.float32)], axis=1)
+        verdict_stop = _tree_predict(tree, feats, tree_depth) < 0.5
+        newly = due & verdict_stop & (stop_at == _INT_MAX)
+        stop_at = jnp.where(newly, dist_count + add_step, stop_at)
+        evals_done = jnp.where(due, dist_count // eval_gap, evals_done)
+        stop_now = dist_count >= stop_at
+        terminated = terminated | (stop_now & active)
+        active = active & ~stop_now
+
+    return HopState(ids, dists, expanded, seen, active, dist_count,
+                    update_count, hops_ct, terminated, evals_done, stop_at)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "hops", "max_hops", "k", "eval_gap", "add_step", "tree_depth"))
+def fused_hop(hs: HopState, adj_pad, queries, live_pad, mode: str, t0,
+              t1=None, t2=None, tree=None, hot_first=None, hot_ratio=None,
+              *, hops: int, max_hops: int, k: int = 1, eval_gap: int = 1,
+              add_step: int = 0, tree_depth: int = 1) -> HopState:
+    """Advance a wave ``hops`` fused expansions (oracle + CPU path).
+
+    ``mode`` selects the scorer: ``"f32"`` (t0 = padded rows), ``"sq8"``
+    (t0/t1/t2 = int8 codes, scale, zero) or ``"pq"`` (t0/t1 = uint8
+    codes, per-query LUTs).  ``tree`` is the unpacked decision-tree
+    arrays ``(feature, threshold, left, right, value)`` or None; when
+    given, ``hot_first``/``hot_ratio`` carry the frozen hot-phase
+    features.  Inactive lanes are exact no-ops.
+    """
+    return jax.lax.fori_loop(
+        0, hops,
+        lambda _, s: fused_hop_body(
+            s, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
+            hot_first, hot_ratio, max_hops=max_hops, k=k,
+            eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth),
+        hs)

@@ -110,6 +110,11 @@ class WaveEngine:
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats(
             latencies_ms=collections.deque(maxlen=latency_window))
+        # Fused wave-hop megakernel tick: one kernel launch per tick with
+        # the wave state resident in VMEM (bit-identical to the composed
+        # scan).  Tiered stores stay composed — their host faults can't
+        # run inside the kernel.
+        self._fused = bool(self.cfg.fused) and not dqf.store.tiered
         dqf._sync_device()
         self._d = dqf.store.d
         self._epoch = dqf.store.epoch
@@ -128,6 +133,25 @@ class WaveEngine:
     def _build_tick(self):
         cfg = self.cfg
         tree = self.dqf.tree.arrays if self.dqf.tree is not None else None
+
+        if self._fused:
+            from repro.kernels import ops as kops
+
+            def fused_tick(state: bs.BeamState, table, adj_pad, live_pad,
+                           queries, hot_first, hot_ratio, evals_done):
+                # One megakernel launch advances the whole wave
+                # ``tick_hops`` hops; the serving tick's immediate-stop
+                # tree check is the ``add_step=0`` case of the kernel's
+                # deadline logic, with a fresh stop_at each tick.
+                hs = kops.fused_hop(
+                    bs.to_hop_state(state, evals_done=evals_done),
+                    adj_pad, queries, live_pad, table, tree,
+                    hot_first, hot_ratio, hops=self.tick_hops,
+                    max_hops=cfg.max_hops, k=cfg.k, eval_gap=cfg.eval_gap,
+                    add_step=0, tree_depth=cfg.tree_depth)
+                return bs.from_hop_state(hs), hs.evals_done
+
+            return jax.jit(fused_tick)
 
         # adj_pad/live_pad are *arguments*, not closure captures: a store
         # mutation swaps table contents but (within capacity) not shapes,
@@ -353,35 +377,48 @@ class WaveEngine:
                 "dists": np.full(k, np.inf, np.float32),
                 "hops": 0, "tenant": tenant, "dropped": True}
 
-    def _retire_result(self, pool_ids: np.ndarray, pool_dists: np.ndarray,
-                       query: np.ndarray):
-        """Final result of a retiring lane (host side).
+    def _retire_batch(self, pool_ids: np.ndarray, pool_dists: np.ndarray,
+                      queries: np.ndarray):
+        """Final results for all lanes retiring this tick (host side).
 
-        Drops sentinel/padding ids and rows tombstoned while the lane was
-        in flight; with a quantized table the pool head is re-scored
-        exactly in float32 (retirements are rare relative to ticks, so the
-        per-lane numpy pass keeps the rerank off the jitted wave).
+        Drops sentinel/padding ids and rows tombstoned while the lanes
+        were in flight; with a quantized table the pool heads are
+        re-scored exactly in float32.  One vectorized pass covers every
+        retiring lane — ``(m, L)`` pools in, ``(m, k)`` results out —
+        instead of the per-lane loop retirements used to cost.
         """
         st = self.dqf.store
         k = self.cfg.k
-        # filter the whole pool first (mid-flight deletes can hit its head),
-        # then truncate to the rerank window / top-k among live candidates
-        keep = pool_ids < st.n
-        keep[keep] = st.alive[pool_ids[keep]]
-        rr = min(max(self.dqf._rerank_k, k), pool_ids.shape[0])
-        cand = pool_ids[keep][:rr]
-        cd = pool_dists[keep][:rr]
+        m, L = pool_ids.shape
+        # filter whole pools first (mid-flight deletes can hit the head),
+        # then compact surviving candidates left, pool order preserved
+        keep = (pool_ids < st.n)
+        keep &= st.alive[np.minimum(pool_ids, st.n - 1)]
+        order = np.argsort(~keep, axis=1, kind="stable")
+        rr = min(max(self.dqf._rerank_k, k), L)
+        cand = np.take_along_axis(pool_ids, order, 1)[:, :rr]
+        cd = np.take_along_axis(pool_dists, order, 1)[:, :rr]
+        valid = np.take_along_axis(keep, order, 1)[:, :rr]
         if self.dqf._rerank_k:
-            cd = np.sum((st.x[cand] - query) ** 2, axis=1)
-            order = np.argsort(cd, kind="stable")[:k]
-        else:
-            order = np.arange(min(k, cand.shape[0]))   # pool is sorted
-        ids = cand[order].astype(np.int32)
-        dists = cd[order].astype(np.float32)
-        if ids.shape[0] < k:
-            pad = k - ids.shape[0]
-            ids = np.concatenate([ids, np.full(pad, st.capacity, np.int32)])
-            dists = np.concatenate([dists, np.full(pad, np.inf, np.float32)])
+            safe = np.where(valid, cand, 0)
+            cd = np.sum((st.x[safe] - queries[:, None, :]) ** 2, axis=-1)
+            cd[~valid] = np.inf
+            top = np.argsort(cd, axis=1, kind="stable")[:, :k]
+            ids = np.take_along_axis(cand, top, 1)
+            dists = np.take_along_axis(cd, top, 1)
+            valid = np.take_along_axis(valid, top, 1)
+        else:                                   # pools are sorted already
+            ids, dists, valid = cand[:, :k], cd[:, :k], valid[:, :k]
+        if ids.shape[1] < k:                    # rr < k: pad the tail
+            pad = k - ids.shape[1]
+            ids = np.concatenate(
+                [ids, np.zeros((m, pad), ids.dtype)], axis=1)
+            dists = np.concatenate(
+                [dists, np.zeros((m, pad), dists.dtype)], axis=1)
+            valid = np.concatenate(
+                [valid, np.zeros((m, pad), bool)], axis=1)
+        ids = np.where(valid, ids, st.capacity).astype(np.int32)
+        dists = np.where(valid, dists, np.inf).astype(np.float32)
         return ids, dists
 
     def _tier_begin_tick(self):
@@ -442,13 +479,18 @@ class WaveEngine:
         self.stats.ticks += 1
         active = np.asarray(state.active)
         now = time.perf_counter()
-        for lane, meta in enumerate(self._lane_meta):
-            if meta is None or active[lane]:
-                continue
-            rid, t_in, tenant, gen = meta
-            ids, dists = self._retire_result(
-                np.asarray(state.pool.ids[lane]),
-                np.asarray(state.pool.dists[lane]), self._queries[lane])
+        retiring = [lane for lane, meta in enumerate(self._lane_meta)
+                    if meta is not None and not active[lane]]
+        if retiring:
+            # one vectorized rerank pass for every lane retiring this tick
+            pool_ids = np.asarray(state.pool.ids)
+            pool_dists = np.asarray(state.pool.dists)
+            batch_ids, batch_dists = self._retire_batch(
+                pool_ids[retiring], pool_dists[retiring],
+                self._queries[retiring])
+        for j, lane in enumerate(retiring):
+            rid, t_in, tenant, gen = self._lane_meta[lane]
+            ids, dists = batch_ids[j], batch_dists[j]
             hops = int(np.asarray(state.stats.hops[lane]))
             self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
                                   "tenant": tenant}

@@ -157,7 +157,8 @@ class VectorStore:
         self._rows_bf = bf
         self._row_cache = BlockCache(bf, self._cache_slots(bf),
                                      name="rows", prefetch=t.prefetch,
-                                     track_rows=self.quant is None)
+                                     track_rows=self.quant is None,
+                                     tally_decay_every=t.tally_decay_every)
         if self.quant is not None:
             cbf = BlockFile(os.path.join(d, "codes.bin"), self.capacity,
                             self._codes.shape[1], self._codes.dtype,
@@ -166,9 +167,10 @@ class VectorStore:
             self._codes = cbf.rows
             self.quant.codes = self._codes[: self._n]
             self._codes_bf = cbf
-            self._code_cache = BlockCache(cbf, self._cache_slots(cbf),
-                                          name="codes", prefetch=t.prefetch,
-                                          track_rows=True)
+            self._code_cache = BlockCache(
+                cbf, self._cache_slots(cbf), name="codes",
+                prefetch=t.prefetch, track_rows=True,
+                tally_decay_every=t.tally_decay_every)
 
     def _cache_slots(self, bf: BlockFile) -> int:
         t = self.tier
@@ -397,7 +399,8 @@ class VectorStore:
         old.close()
         new = BlockCache(bf, self._cache_slots(bf), name=old.name,
                          prefetch=self.tier.prefetch,
-                         track_rows=old._track_rows)
+                         track_rows=old._track_rows,
+                         tally_decay_every=self.tier.tally_decay_every)
         new.counters = old.counters
         return new
 

@@ -43,7 +43,8 @@ class BlockCache:
     """Bounded device arena + clock eviction + miss-driven admission."""
 
     def __init__(self, bf: BlockFile, slots: int, *, name: str = "",
-                 prefetch: bool = False, track_rows: bool = False):
+                 prefetch: bool = False, track_rows: bool = False,
+                 tally_decay_every: int = 0):
         self.bf = bf
         self.slots = max(1, min(int(slots), bf.n_blocks))
         self.name = name
@@ -71,6 +72,12 @@ class BlockCache:
         self._track_rows = bool(track_rows)
         self._row_tally = (np.zeros(bf.capacity + 1, np.int64)
                            if track_rows else None)
+        # Exponential decay window for the relayout signal: every
+        # ``tally_decay_every`` maintain() passes the row tallies halve,
+        # so relayout() clusters around *recent* traffic instead of
+        # all-time counts (0 disables — all-time behaviour).
+        self._tally_decay_every = int(tally_decay_every)
+        self._maintain_count = 0
         # per-block touch tallies since the last maintain()
         self._miss_tally = np.zeros(bf.n_blocks, np.int64)
         self._hit_tally = np.zeros(bf.n_blocks, np.int64)
@@ -225,6 +232,10 @@ class BlockCache:
                 break
         self._miss_tally[:] = 0
         self._hit_tally[:] = 0
+        self._maintain_count += 1
+        if self._tally_decay_every and \
+                self._maintain_count % self._tally_decay_every == 0:
+            self.decay_tallies()
         return admitted
 
     def _admission_victim(self, cand_score: int,
@@ -245,6 +256,19 @@ class BlockCache:
         return best
 
     # --------------------------------------------------------------- layout
+    def decay_tallies(self) -> None:
+        """Halve the accumulated row-touch tallies (the relayout signal).
+
+        Without decay :meth:`relayout` clusters blocks around *all-time*
+        counts, so rows a long-gone workload hammered stay "hot" forever;
+        halving turns the tallies into an exponential moving window over
+        recent traffic.  Only the layout signal is touched — residency,
+        pins and the admission tallies are unaffected, so a pinned block
+        can never be evicted (or moved) by a decay pass.
+        """
+        if self._row_tally is not None:
+            self._row_tally >>= 1
+
     def set_layout(self, order: np.ndarray) -> None:
         """Re-cluster blocks: ``order[p] = logical id`` at position ``p``.
 

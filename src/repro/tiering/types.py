@@ -36,6 +36,10 @@ class TierConfig:
     cache_blocks: int = 0       # device arena slots; 0 → derive from frac
     cache_frac: float = 0.25    # arena size as a fraction of total blocks
     prefetch: bool = True       # async beam-frontier prefetch worker
+    # Halve the caches' row-touch tallies every N maintain() passes so
+    # ``relayout_tier`` clusters around recent traffic, not all-time
+    # counts (0 = never decay, the pre-decay behaviour).
+    tally_decay_every: int = 64
 
     def __post_init__(self):
         if self.mode not in ("none", "host"):
@@ -47,6 +51,8 @@ class TierConfig:
             raise ValueError("cache_blocks must be >= 0")
         if not (0.0 < self.cache_frac <= 1.0):
             raise ValueError("cache_frac must be in (0, 1]")
+        if self.tally_decay_every < 0:
+            raise ValueError("tally_decay_every must be >= 0")
 
     @property
     def enabled(self) -> bool:

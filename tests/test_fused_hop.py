@@ -1,0 +1,313 @@
+"""Fused wave-hop megakernel: bit-parity + integration contracts.
+
+Three layers of identity, all *exact* (``np.array_equal`` on float arrays,
+no tolerances):
+
+* the jnp oracle (:func:`repro.kernels.ref.fused_hop`) vs the composed
+  per-hop loop built from :func:`repro.core.beam_search.expand_step`;
+* the Pallas kernel under ``interpret=True`` vs the oracle, across score
+  variants (f32 / int8 / PQ), ragged shapes, all-sentinel adjacency rows,
+  dead-row masking, wave sizes 1 and 64, with and without the tree;
+* the fused end-to-end paths (``beam_search``, ``dynamic_search``, the
+  serving tick) vs their composed twins, plus the tiered fallback.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DQF, DQFConfig, QuantConfig, ZipfWorkload
+from repro.core import beam_search as bs
+from repro.kernels import ops, ref
+from repro.kernels.fused_hop import fused_hop_pallas
+from tests.conftest import make_clustered
+
+RNG = np.random.default_rng(77)
+INT_MAX = np.iinfo(np.int32).max
+
+
+# ------------------------------------------------------------ kernel fixtures
+def make_world(n=220, d=18, R=10, seed=0, dead_every=13,
+               sentinel_rows=(3, 50)):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    x_pad = jnp.asarray(np.concatenate([x, np.full((1, d), 1e9,
+                                                   np.float32)]))
+    adj = rng.integers(0, n, (n, R)).astype(np.int32)
+    for r in sentinel_rows:
+        adj[r] = n                              # all-sentinel adjacency row
+    adj[adj % 11 == 0] = n                      # scattered sentinel slots
+    adj_pad = jnp.asarray(np.concatenate(
+        [adj, np.full((1, R), n, np.int32)]))
+    live = np.ones(n + 1, bool)
+    if dead_every:
+        live[::dead_every] = False
+    live[n] = False
+    return x, x_pad, adj_pad, jnp.asarray(live)
+
+
+def make_hop_state(table, queries, entries, pool_size, live_pad):
+    st = bs.init_state(table, queries, entries, pool_size, live_pad)
+    return bs.to_hop_state(st)
+
+
+def make_tree(seed=1, T=15):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.integers(-1, 6, T), jnp.int32),
+            jnp.asarray(rng.standard_normal(T).astype(np.float32) * 40
+                        + 80),
+            jnp.asarray(np.minimum(np.arange(T) * 2 + 1, T - 1), jnp.int32),
+            jnp.asarray(np.minimum(np.arange(T) * 2 + 2, T - 1), jnp.int32),
+            jnp.asarray(rng.uniform(0, 1, T).astype(np.float32)))
+
+
+def assert_state_equal(a: ref.HopState, b: ref.HopState):
+    for f in ref.HopState._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"HopState field {f!r} diverged")
+
+
+def quant_tables(x, queries, mode):
+    from repro import quant
+    from repro.quant.types import PQTable, SQTable
+    d = x.shape[1]
+    if mode == "sq8":
+        cb = quant.train_sq(x)
+        codes = quant.sq_encode(x, cb)
+        t = SQTable(
+            codes=jnp.asarray(np.concatenate(
+                [codes, np.zeros((1, d), np.int8)])),
+            scale=jnp.asarray(cb.scale), zero=jnp.asarray(cb.zero))
+        return t, ("sq8", t.codes, t.scale, t.zero)
+    cb = quant.train_pq(x, m=2, k=16, iters=3, seed=0)
+    codes = quant.pq_encode(x, cb)
+    view = PQTable(
+        codes=jnp.asarray(np.concatenate(
+            [codes, np.zeros((1, 2), np.uint8)])),
+        centroids=jnp.asarray(cb.centroids)).with_queries(queries)
+    return view, ("pq", view.codes, view.luts, None)
+
+
+# ----------------------------------------------- oracle vs composed expand
+@pytest.mark.parametrize("use_live", [False, True])
+def test_oracle_matches_composed_loop(use_live):
+    x, x_pad, adj_pad, live_pad = make_world()
+    live = live_pad if use_live else None
+    B, L, H = 6, 16, 14
+    q = jnp.asarray(RNG.standard_normal((B, 18)).astype(np.float32))
+    entries = jnp.asarray(np.arange(0, 220, 31).astype(np.int32))
+    state = bs.init_state(x_pad, q, entries, L, live)
+
+    @jax.jit
+    def composed(state):
+        def body(_, s):
+            s = bs.expand_step(x_pad, adj_pad, q, s, live)
+            return s._replace(active=s.active & (s.stats.hops < 48))
+        return jax.lax.fori_loop(0, H, body, state)
+
+    want = composed(state)
+    got = ref.fused_hop(bs.to_hop_state(state), adj_pad, q, live, "f32",
+                        x_pad, hops=H, max_hops=48)
+    assert_state_equal(bs.to_hop_state(
+        want, got.evals_done, got.stop_at), got)
+
+
+# -------------------------------------------- pallas interpret vs oracle
+@pytest.mark.parametrize("mode", ["f32", "sq8", "pq"])
+@pytest.mark.parametrize("use_tree", [False, True])
+def test_interpret_parity(mode, use_tree):
+    """Interpret-mode kernel ≡ oracle, bit for bit, every variant.
+
+    The world bakes in the nasty shapes: ragged sort tail (L + R = 26,
+    not a power of two), all-sentinel adjacency rows, dead rows under
+    ``live_pad``, and a wave size that doesn't divide the lane block.
+    """
+    x, x_pad, adj_pad, live_pad = make_world()
+    B, L, H = 7, 16, 15
+    q = jnp.asarray(RNG.standard_normal((B, 18)).astype(np.float32))
+    entries = jnp.asarray(np.arange(0, 220, 37).astype(np.int32))
+    if mode == "f32":
+        table, spec = x_pad, ("f32", x_pad, None, None)
+    else:
+        table, spec = quant_tables(x, q, mode)
+    m, t0, t1, t2 = spec
+    tree = make_tree() if use_tree else None
+    hf = jnp.asarray(RNG.uniform(1, 6, B).astype(np.float32)) \
+        if use_tree else None
+    hr = jnp.asarray(RNG.uniform(0.5, 1.5, B).astype(np.float32)) \
+        if use_tree else None
+    hs = make_hop_state(table, q, entries, L, live_pad)
+    kw = dict(hops=H, max_hops=40, k=5, eval_gap=25, add_step=6,
+              tree_depth=4)
+    want = ref.fused_hop(hs, adj_pad, q, live_pad, m, t0, t1, t2, tree,
+                         hf, hr, **kw)
+    got = fused_hop_pallas(hs, adj_pad, q, live_pad, m, t0, t1, t2, tree,
+                           hf, hr, bl=4, interpret=True, **kw)
+    assert_state_equal(want, got)
+
+
+@pytest.mark.parametrize("B,bl", [(1, 8), (64, 8), (5, 4)])
+def test_interpret_parity_wave_sizes(B, bl):
+    """Wave sizes 1 and 64, plus a wave the lane block doesn't divide."""
+    x, x_pad, adj_pad, live_pad = make_world()
+    L, H = 12, 10
+    q = jnp.asarray(RNG.standard_normal((B, 18)).astype(np.float32))
+    entries = jnp.asarray(np.arange(0, 220, 41).astype(np.int32))
+    hs = make_hop_state(x_pad, q, entries, L, live_pad)
+    want = ref.fused_hop(hs, adj_pad, q, live_pad, "f32", x_pad,
+                         hops=H, max_hops=64)
+    got = fused_hop_pallas(hs, adj_pad, q, live_pad, "f32", x_pad,
+                           hops=H, max_hops=64, bl=bl, interpret=True)
+    assert_state_equal(want, got)
+
+
+def test_interpret_parity_exhausted_wave():
+    """A wave that dies mid-kernel (tiny graph): trailing hops are no-ops."""
+    x, x_pad, adj_pad, live_pad = make_world(n=40, R=4, dead_every=0,
+                                             sentinel_rows=(1,))
+    q = jnp.asarray(RNG.standard_normal((3, 18)).astype(np.float32))
+    entries = jnp.asarray(np.arange(0, 40, 9).astype(np.int32))
+    hs = make_hop_state(x_pad, q, entries, 8, None)
+    want = ref.fused_hop(hs, adj_pad, q, None, "f32", x_pad,
+                         hops=64, max_hops=512)
+    got = fused_hop_pallas(hs, adj_pad, q, None, "f32", x_pad,
+                           hops=64, max_hops=512, bl=2, interpret=True)
+    assert_state_equal(want, got)
+    assert not np.asarray(got.active).any()
+
+
+def test_ops_dispatch_and_table_spec():
+    x, x_pad, adj_pad, live_pad = make_world()
+    q = jnp.asarray(RNG.standard_normal((4, 18)).astype(np.float32))
+    entries = jnp.asarray(np.arange(0, 220, 53).astype(np.int32))
+    hs = make_hop_state(x_pad, q, entries, 8, live_pad)
+    # CPU default dispatch = oracle
+    got = ops.fused_hop(hs, adj_pad, q, live_pad, x_pad, hops=3,
+                        max_hops=64)
+    want = ref.fused_hop(hs, adj_pad, q, live_pad, "f32", x_pad, hops=3,
+                         max_hops=64)
+    assert_state_equal(want, got)
+    assert ops.table_spec(x_pad)[0] == "f32"
+    with pytest.raises(TypeError, match="composed"):
+        ops.table_spec(object())
+
+
+# -------------------------------------------------------- integration layer
+def _fused_cfg(fused, **over):
+    base = dict(knn_k=10, out_degree=10, index_ratio=0.03, k=8,
+                hot_pool=16, full_pool=32, max_hops=100, eval_gap=30,
+                n_query_trigger=10 ** 6, fused=fused, fused_hops=4)
+    base.update(over)
+    return DQFConfig(**base)
+
+
+def _built(cfg, x, seed=21):
+    wl = ZipfWorkload(x, seed=seed)
+    dqf = DQF(cfg).build(x)
+    dqf.warm(wl.sample(600))
+    dqf.fit_tree(wl.sample(256))
+    return dqf
+
+
+@pytest.fixture(scope="module")
+def world_x():
+    return make_clustered(n=900, d=16, clusters=12, seed=31)
+
+
+@pytest.mark.parametrize("quant_mode", ["none", "sq8", "pq"])
+def test_search_fused_bit_identical(world_x, quant_mode):
+    """DQF.search: fused ≡ composed, bit for bit, all table variants."""
+    x = world_x
+    qc = QuantConfig() if quant_mode == "none" else \
+        QuantConfig(mode=quant_mode, pq_m=4, rerank_k=16)
+    da = _built(_fused_cfg(False, quant=qc), x)
+    db = _built(_fused_cfg(True, quant=qc), x)
+    q = ZipfWorkload(x, seed=5).sample(24)
+    ra = da.search(q, record=False)
+    rb = db.search(q, record=False)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists),
+                                  np.asarray(rb.dists))
+    for f in ("dist_count", "update_count", "hops", "terminated_early"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ra.stats, f)),
+            np.asarray(getattr(rb.stats, f)), err_msg=f)
+    # baseline (no-tree) beam search rides the same kernel
+    ba = da.search_baseline(q)
+    bb = db.search_baseline(q)
+    np.testing.assert_array_equal(np.asarray(ba.ids), np.asarray(bb.ids))
+    np.testing.assert_array_equal(np.asarray(ba.dists),
+                                  np.asarray(bb.dists))
+
+
+def test_engine_fused_tick_bit_identical(world_x):
+    """WaveEngine: the fused tick retires the same results as composed."""
+    from repro.serving.engine import WaveEngine
+
+    x = world_x
+    outs = []
+    for fused in (False, True):
+        dqf = _built(_fused_cfg(fused), x)
+        eng = WaveEngine(dqf, wave_size=16, tick_hops=6, prefetch=False)
+        assert eng._fused is fused
+        rids = eng.submit(ZipfWorkload(x, seed=6).sample(40))
+        out = eng.run_until_drained()
+        outs.append({r: out["results"][r] for r in rids})
+    a, b = outs
+    assert a.keys() == b.keys()
+    for r in a:
+        np.testing.assert_array_equal(a[r]["ids"], b[r]["ids"])
+        np.testing.assert_array_equal(a[r]["dists"], b[r]["dists"])
+        assert a[r]["hops"] == b[r]["hops"]
+
+
+def test_engine_fused_under_churn(world_x):
+    """Fused serving survives insert/delete churn; no tombstones leak."""
+    from repro.serving.engine import WaveEngine
+
+    x = world_x
+    dqf = _built(_fused_cfg(True, quant=QuantConfig(mode="sq8",
+                                                    rerank_k=16)), x)
+    wl = ZipfWorkload(x, seed=9)
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=6)
+    r0 = eng.submit(wl.sample(24))
+    eng.run_until_drained()
+    dqf.insert(make_clustered(n=24, d=16, clusters=12, seed=41))
+    live = dqf.store.live_ids()
+    rng = np.random.default_rng(4)
+    dqf.delete(dqf.store.to_external(rng.choice(live, 24, replace=False)))
+    r1 = eng.submit(wl.sample(24))
+    out = eng.run_until_drained()
+    assert all(r in out["results"] for r in r0 + r1)
+    for rid in r1:
+        ids = out["results"][rid]["ids"]
+        ids = ids[(ids >= 0) & (ids < dqf.store.n)]
+        assert dqf.store.alive[ids].all()
+
+
+def test_tiered_store_falls_back_to_composed(world_x, tmp_path):
+    """cfg.fused on a tiered store must serve through the composed path
+    (host faults can't run in-kernel) and stay bit-identical."""
+    from repro.core import TierConfig
+    from repro.serving.engine import WaveEngine
+
+    x = world_x
+    tier = lambda sub: TierConfig(mode="host", dir=str(tmp_path / sub),
+                                  block_rows=32, cache_frac=0.3)
+    da = _built(_fused_cfg(False, tier=tier("a")), x)
+    db = _built(_fused_cfg(True, tier=tier("b")), x)
+    assert db._fused is False           # gated off, not an error
+    q = ZipfWorkload(x, seed=7).sample(16)
+    ra = da.search(q, record=False)
+    rb = db.search(q, record=False)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists),
+                                  np.asarray(rb.dists))
+    eng = WaveEngine(db, wave_size=8, tick_hops=4)
+    assert eng._fused is False
+    rids = eng.submit(q[:8])
+    out = eng.run_until_drained()
+    assert all(r in out["results"] for r in rids)

@@ -393,3 +393,63 @@ def test_build_dim_mismatch_raises():
     x = np.zeros((20, 4), np.float32)
     with pytest.raises(ValueError, match="dim"):
         DQF(_cfg(dim=8, knn_k=4, out_degree=4)).build(x)
+
+
+# ------------------------------------------------------------- tally decay
+def test_tally_decay_tracks_current_workload(tmp_path):
+    """Decayed tallies let relayout follow a workload shift; without
+    decay the all-time counts keep the stale head clustered."""
+    cap, w, br = 256, 4, 8
+    bf = BlockFile(str(tmp_path / "t.f32"), cap, w, np.float32, br)
+    bf.rows[:cap] = np.arange(cap * w, dtype=np.float32).reshape(cap, w)
+    cache = BlockCache(bf, slots=4, track_rows=True, tally_decay_every=1)
+    old_head = np.arange(0, 16)
+    new_head = np.arange(100, 116)
+    hit = np.zeros_like(old_head, dtype=bool)
+    cache.host_fetch(old_head[None].repeat(8, 0), hit[None].repeat(8, 0))
+    for _ in range(6):                      # 6 decay passes: 8 → 0
+        cache.maintain()
+    cache.host_fetch(new_head[None].repeat(2, 0), hit[None].repeat(2, 0))
+    assert cache.relayout(cap)
+    # the hottest block now clusters the *new* head
+    first_block = cache._order[:br]
+    assert np.isin(first_block, new_head).all()
+
+
+def test_tally_decay_off_keeps_all_time_counts(tmp_path):
+    cap, w, br = 256, 4, 8
+    bf = BlockFile(str(tmp_path / "t.f32"), cap, w, np.float32, br)
+    bf.rows[:cap] = 0.0
+    cache = BlockCache(bf, slots=4, track_rows=True, tally_decay_every=0)
+    cols = np.arange(0, 16)[None].repeat(4, 0)
+    cache.host_fetch(cols, np.zeros_like(cols, bool))
+    before = cache._row_tally.copy()
+    for _ in range(10):
+        cache.maintain()
+    np.testing.assert_array_equal(cache._row_tally, before)
+
+
+def test_tally_decay_leaves_pins_alone(tmp_path):
+    """A pinned block survives admission pressure across decay passes."""
+    cap, w, br = 64, 4, 8
+    bf = BlockFile(str(tmp_path / "t.f32"), cap, w, np.float32, br)
+    bf.rows[:cap] = np.arange(cap * w, dtype=np.float32).reshape(cap, w)
+    cache = BlockCache(bf, slots=1, track_rows=True, tally_decay_every=1)
+    cache._miss_tally[0] = 10
+    assert cache.maintain() == 1 and cache.resident(0)
+    cache.pin_blocks([0])
+    for _ in range(5):                      # decays run, pin holds
+        cache._miss_tally[2] = 100
+        cache.maintain()
+    assert cache.resident(0) and not cache.resident(2)
+
+
+def test_store_threads_decay_knob(tmp_path):
+    from repro.tiering import TierConfig
+    from repro.store import VectorStore
+    x = np.random.default_rng(0).standard_normal((100, 8)).astype(np.float32)
+    st = VectorStore(x, tier=TierConfig(mode="host", dir=str(tmp_path),
+                                        block_rows=16,
+                                        tally_decay_every=7))
+    for c in st.tier_caches():
+        assert c._tally_decay_every == 7
