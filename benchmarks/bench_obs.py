@@ -1,0 +1,114 @@
+"""Observability overhead benchmark (ISSUE 6) + flight-recorder artifacts.
+
+Three closed-loop wave-engine runs over the shared context, identical
+except for the :class:`repro.obs.ObsConfig`:
+
+* ``plain``     — ``ObsConfig(enabled=False)``: the bare pre-obs hot path
+  (no registry, no sampling, null timeline spans).  The in-process control.
+* ``unsampled`` — the default config: registry publishing on, tracing and
+  timeline off.  This is the deployment default; the acceptance criterion
+  is that it costs < 2% qps vs ``plain`` on a quiet host (CI asserts a
+  generous 10% bound because shared runners are noisy).
+* ``traced``    — ``trace_rate=1.0, timeline=True``: every query traced,
+  every tick span recorded.  Upper bound on recorder cost; its artifacts
+  (Perfetto timeline + ``scrape()`` dump) are written to
+  ``$BENCH_ARTIFACT_DIR`` (default ``bench-out``) for CI upload.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.obs import ObsConfig
+from repro.serving.engine import EngineStats, WaveEngine
+
+from .common import get_context, record_metric
+
+WAVE = 64
+ROUNDS = 10
+
+
+def _one_drain_qps(eng, queries) -> float:
+    """One closed-loop drain (one wave submitted, run to empty)."""
+    eng.submit(queries)
+    out = eng.run_until_drained()
+    served = len(out["results"])        # before clear: same dict object
+    eng._results.clear()
+    return served / out["wall_s"] if out["wall_s"] else 0.0
+
+
+def bench_obs():
+    ctx = get_context()
+    art_dir = os.environ.get("BENCH_ARTIFACT_DIR", "bench-out")
+
+    engines = {
+        "plain": WaveEngine(ctx.dqf, wave_size=WAVE, tick_hops=8,
+                            obs=ObsConfig(enabled=False)),
+        "on": WaveEngine(ctx.dqf, wave_size=WAVE, tick_hops=8,
+                         obs=ObsConfig()),
+        "traced": WaveEngine(ctx.dqf, wave_size=WAVE, tick_hops=8,
+                             obs=ObsConfig(trace_rate=1.0, timeline=True,
+                                           trace_capacity=4096)),
+    }
+    # Warm every engine's tick compile, then interleave single drains
+    # round-robin on a *shared* per-round query batch and keep each
+    # config's best: host noise on shared runners (frequency scaling,
+    # CPU contention) swings closed-loop qps by tens of percent
+    # pass-to-pass, and per-engine query sampling would add workload
+    # variance on top — best-of-interleaved over identical batches
+    # tracks each config's quiet-host ceiling on the same work.
+    warm_q = ctx.wl.sample(WAVE)
+    for eng in engines.values():
+        eng.submit(warm_q)
+        eng.run_until_drained()
+        eng.stats = EngineStats()
+        eng._results.clear()
+    best = {k: 0.0 for k in engines}
+    for _ in range(ROUNDS):
+        q = ctx.wl.sample(WAVE)
+        for k, eng in engines.items():
+            best[k] = max(best[k], _one_drain_qps(eng, q))
+    qps_plain, qps_on, qps_traced = best["plain"], best["on"], best["traced"]
+    eng_traced = engines["traced"]
+
+    overhead_pct = (1.0 - qps_on / qps_plain) * 100.0 if qps_plain else 0.0
+    traced_pct = (1.0 - qps_traced / qps_plain) * 100.0 if qps_plain else 0.0
+
+    os.makedirs(art_dir, exist_ok=True)
+    tl_path = os.path.join(art_dir, "tick_timeline.json")
+    eng_traced.export_timeline(tl_path)
+    scrape = eng_traced.scrape()
+    with open(os.path.join(art_dir, "scrape.json"), "w") as f:
+        json.dump(scrape, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    record_metric("obs", "engine_overhead",
+                  qps=round(qps_on, 1),
+                  qps_plain=round(qps_plain, 1),
+                  qps_traced=round(qps_traced, 1),
+                  unsampled_overhead_pct=round(overhead_pct, 2),
+                  traced_overhead_pct=round(traced_pct, 2))
+    record_metric("obs", "artifacts",
+                  timeline_events=len(eng_traced.timeline.events()),
+                  traces=len(eng_traced.traces),
+                  traces_total=eng_traced.traces.total,
+                  scrape_series=len(scrape))
+    print(f"obs/engine_overhead,{0.0:.1f},"
+          f"qps={qps_on:.0f};qps_plain={qps_plain:.0f};"
+          f"qps_traced={qps_traced:.0f};"
+          f"unsampled_overhead_pct={overhead_pct:.2f}")
+    print(f"obs/artifacts,{0.0:.1f},"
+          f"timeline_events={len(eng_traced.timeline.events())};"
+          f"traces={len(eng_traced.traces)};scrape_series={len(scrape)}")
+    # The hard floor: registry-on/unsampled must stay within noise of the
+    # bare hot path (the < 2% acceptance number is measured on a quiet
+    # host and recorded in README; CI runners get 10% slack).
+    assert qps_on >= 0.90 * qps_plain, \
+        f"obs overhead too high: {qps_on:.0f} qps vs {qps_plain:.0f} plain"
+
+
+if __name__ == "__main__":
+    bench_obs()
+    from .common import dump_metrics
+    dump_metrics()

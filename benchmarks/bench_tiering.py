@@ -74,17 +74,18 @@ def bench_tiering():
         dqf.relayout_tier()
         for _ in range(2):                            # re-admit post-layout
             dqf.search(wl.sample(256), record=False)
-        cache.reset_counters()
+        cache.stats_snapshot()            # open the measurement window
         res, secs = timed_search(
             lambda q: dqf.search(q, record=False), queries)
-        hit = cache.hit_rate()
+        hit = cache.stats_snapshot()["hit_rate"]
         p99 = _engine_p99(dqf, queries)
         rep = dqf.memory_report()
         ids = np.asarray(res.ids)
-        # beta=1.2 reference hit-rate on the same cache state
-        cache.reset_counters()
+        # beta=1.2 reference hit-rate on the same cache state (fresh
+        # window: the engine run above consumed snapshots per tick)
+        cache.stats_snapshot()
         dqf.search(wl12.sample(256), record=False)
-        hit12 = cache.hit_rate()
+        hit12 = cache.stats_snapshot()["hit_rate"]
         name = f"cache_{int(frac * 100)}pct"
         record_metric(
             "tiering", name,

@@ -10,6 +10,7 @@ work measure the speedups are judged on.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import numpy as np
@@ -84,15 +85,38 @@ def record_metric(section: str, name: str, **values) -> None:
     _METRICS.setdefault(section, {})[name] = values
 
 
+def _provenance() -> dict:
+    """Who/when/what produced these numbers (stamped into every section)."""
+    import datetime
+    import subprocess
+    sha = os.environ.get("GITHUB_SHA", "")[:12]
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "--short=12", "HEAD"],
+                capture_output=True, text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__))
+            ).stdout.strip() or "unknown"
+        except Exception:
+            sha = "unknown"
+    import jax
+    return {"timestamp": datetime.datetime.now(datetime.timezone.utc)
+            .isoformat(timespec="seconds"),
+            "git_sha": sha,
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend()}
+
+
 def dump_metrics(out_dir: str = ".") -> list:
     import json
-    import os
     os.makedirs(out_dir, exist_ok=True)
+    prov = _provenance()
     paths = []
     for section, entries in sorted(_METRICS.items()):
         p = os.path.join(out_dir, f"BENCH_{section}.json")
         with open(p, "w") as f:
-            json.dump(entries, f, indent=2, sort_keys=True)
+            json.dump({**entries, "_meta": prov}, f, indent=2,
+                      sort_keys=True)
             f.write("\n")
         paths.append(p)
     return paths

@@ -26,6 +26,7 @@ def main() -> None:
     from . import bench_paper as bp
     from . import bench_kernels as bk
     from . import bench_multitenant as bm
+    from . import bench_obs as bo
     from . import bench_tiering as bt
 
     benches = [
@@ -46,6 +47,7 @@ def main() -> None:
         ("kernels", bk.bench_kernels),                # Pallas layer
         ("quant", bk.bench_quant_scoring),            # compressed scan
         ("engine", bk.bench_engine),                  # serving layer
+        ("obs", bo.bench_obs),                        # flight recorder
     ]
     print("name,us_per_call,derived")
     failures = 0

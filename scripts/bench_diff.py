@@ -83,6 +83,17 @@ def main() -> None:
         with open(fresh_path) as f:
             fresh = json.load(f)
         section = fname[len("BENCH_"):-len(".json")]
+        # provenance rides as _meta in each section (benchmarks.common):
+        # carry it through the report, keep it out of the metric compare
+        base_meta = base.pop("_meta", None)
+        fresh_meta = fresh.pop("_meta", None)
+        for tag, meta in (("baseline", base_meta), ("fresh", fresh_meta)):
+            if meta:
+                print(f"bench_diff: {section} {tag}: "
+                      f"sha={meta.get('git_sha', '?')} "
+                      f"{meta.get('timestamp', '?')} "
+                      f"jax={meta.get('jax_version', '?')}/"
+                      f"{meta.get('backend', '?')}")
         warnings += _compare(section, fresh, base)
         compared += 1
     print(f"bench_diff: compared {compared} section(s) against {base_dir}")

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.quant import QuantState, build_quantizer
 from repro.store import VectorStore
 from repro.tenancy import DEFAULT_TENANT, TenantRegistry, TenantState
@@ -87,8 +88,21 @@ def _to_free_slots(adj: np.ndarray, n: int) -> np.ndarray:
 class DQF:
     """Dual-Index Query Framework over a mutable vector store."""
 
-    def __init__(self, cfg: DQFConfig | None = None):
+    def __init__(self, cfg: DQFConfig | None = None, *,
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = cfg or DQFConfig()
+        # Each DQF owns a registry (fresh by default, so instances and
+        # tests never share series); store, caches, tenants and any
+        # WaveEngine over this instance publish into it — one scrape()
+        # covers the whole stack.  Pass obs.default_registry() to publish
+        # process-globally instead.
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._m_batches = self.registry.counter(
+            "search_batches_total", "search() batch calls")
+        self._m_queries = self.registry.counter(
+            "search_queries_total", "queries across all search() batches")
+        self.registry.register_callback("dqf", self._collect_metrics)
         self.store: Optional[VectorStore] = None
         self.full: Optional[SSGIndex] = None
         self.tree: Optional[DecisionTree] = None
@@ -98,6 +112,23 @@ class DQF:
         self._dev_epoch = -1
         self._dev_rows_epoch = -1
         self._adj_buf: Optional[np.ndarray] = None
+
+    def _collect_metrics(self) -> dict:
+        """Registry scrape-time collector (keyed ``"dqf"``)."""
+        if self.store is None:
+            return {}
+        mem = self.memory_report()
+        return {"index_device_bytes": float(mem["device"]["total"]),
+                "index_host_bytes": float(mem["host"]["total"]),
+                "index_disk_bytes": float(mem["disk"]["total"])}
+
+    def scrape(self) -> dict:
+        """One flat metrics dict across store, caches, tenants and engines."""
+        return self.registry.scrape()
+
+    def exposition(self) -> str:
+        """Prometheus text exposition of :meth:`scrape`."""
+        return self.registry.exposition()
 
     # -------------------------------------------------------------- storage
     @property
@@ -177,7 +208,8 @@ class DQF:
             self.timings.quant_train = time.perf_counter() - t0
         self.store = VectorStore(
             x, ext_ids=ext_ids, quant=quant,
-            tier=self.cfg.tier if self.cfg.tier.enabled else None)
+            tier=self.cfg.tier if self.cfg.tier.enabled else None,
+            registry=self.registry)
         t0 = time.perf_counter()
         built = build_ssg(self.store.x, self._ssg_params,
                           n_entry=self.cfg.n_entry)
@@ -185,7 +217,8 @@ class DQF:
         self._set_full_adj(_to_free_slots(built.adj, built.n),
                            built.entries)
         self.tenants = TenantRegistry(self.store.n,
-                                      trigger=self.cfg.n_query_trigger)
+                                      trigger=self.cfg.n_query_trigger,
+                                      registry=self.registry)
         self._sync_device()
         return self
 
@@ -255,6 +288,8 @@ class DQF:
                 f"queries must be (B, {self.store.d}) for this index, got "
                 f"{q.shape} — a dim mismatch would otherwise surface as an "
                 "opaque shape error inside jit")
+        self._m_batches.inc()
+        self._m_queries.inc(q.shape[0])
         self._sync_device()
         if self.store.tiered:
             self.store.tier_begin()
@@ -697,11 +732,13 @@ class DQF:
             tier = self.cfg.tier if self.cfg.tier.dir else \
                 dataclasses.replace(self.cfg.tier,
                                     dir=self._tier_sidecar(path))
-        self.store = VectorStore.from_arrays(z, tier=tier)
+        self.store = VectorStore.from_arrays(z, tier=tier,
+                                             registry=self.registry)
         n = self.store.n
         self._set_full_adj(_to_free_slots(z["full_adj"], n),
                            z["full_entries"])
-        self.tenants = TenantRegistry(n, trigger=self.cfg.n_query_trigger)
+        self.tenants = TenantRegistry(n, trigger=self.cfg.n_query_trigger,
+                                      registry=self.registry)
         self.counter.counts = z["counts"]
         if "counter_since" in z:
             self.counter.since_rebuild = int(z["counter_since"])

@@ -82,6 +82,8 @@ def hot_phase(x_hot_pad, adj_hot_pad, hot_entries, queries, *, pool_size,
                          use_kernel=use_kernel)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("pool_size", "max_hops", "mode"))
 def hot_phase_stacked(xs_hot, adjs_hot, entries_hot, mask_hot, tenant_idx,
                       queries, *, pool_size, max_hops, mode: str = "graph"):
     """Phase 1 over *stacked* per-tenant hot tables (:mod:`repro.tenancy`).
@@ -292,32 +294,37 @@ def dynamic_search(
     unchanged — only where the bytes come from moves.
     """
     n = bs.table_n(x_pad)
-    hot_pool, hot_stats = hot_phase(
-        x_hot_pad, adj_hot_pad, hot_entries, queries,
-        pool_size=hot_pool_size, max_hops=max_hops, mode=hot_mode,
-        use_kernel=use_kernel)
-    hfeats = hot_features(hot_pool, k)
-    state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size,
-                             live_pad)
+    # named_scope annotates the HLO, so device profiles (jax.profiler
+    # traces) show the phase structure; zero cost outside a capture.
+    with jax.named_scope("dqf.hot_phase"):
+        hot_pool, hot_stats = hot_phase(
+            x_hot_pad, adj_hot_pad, hot_entries, queries,
+            pool_size=hot_pool_size, max_hops=max_hops, mode=hot_mode,
+            use_kernel=use_kernel)
+        hfeats = hot_features(hot_pool, k)
+        state = _seed_full_state(hot_pool, hot_ids_pad, n, full_pool_size,
+                                 live_pad)
     table = x_pad if qtable is None else qtable.with_queries(queries)
-    if fused:
-        # phase 2 through the megakernel: the kernel's per-hop body is
-        # _full_phase's body verbatim (inactive lanes are exact no-ops,
-        # so the chunked launches stay bit-identical)
-        state = bs.fused_beam_loop(
-            table, adj_pad, queries, state, max_hops, live_pad,
-            fused_hops=fused_hops, tree=tree, hot=hfeats, k=k,
-            eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth)
-    else:
-        state = _full_phase(
-            table, adj_pad, queries, state, hfeats, tree,
-            k=k, eval_gap=eval_gap, add_step=add_step,
-            tree_depth=tree_depth, max_hops=max_hops, live_pad=live_pad)
-    if qtable is not None and rerank_k > 0:
-        ids, dists = _exact_rerank(x_pad, queries, state.pool,
-                                   k=k, rerank_k=rerank_k, live_pad=live_pad)
-    else:
-        ids, dists = bs.topk_from_pool(state.pool, k)
+    with jax.named_scope("dqf.full_phase"):
+        if fused:
+            # phase 2 through the megakernel: the kernel's per-hop body is
+            # _full_phase's body verbatim (inactive lanes are exact no-ops,
+            # so the chunked launches stay bit-identical)
+            state = bs.fused_beam_loop(
+                table, adj_pad, queries, state, max_hops, live_pad,
+                fused_hops=fused_hops, tree=tree, hot=hfeats, k=k,
+                eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth)
+        else:
+            state = _full_phase(
+                table, adj_pad, queries, state, hfeats, tree,
+                k=k, eval_gap=eval_gap, add_step=add_step,
+                tree_depth=tree_depth, max_hops=max_hops, live_pad=live_pad)
+    with jax.named_scope("dqf.rerank"):
+        if qtable is not None and rerank_k > 0:
+            ids, dists = _exact_rerank(x_pad, queries, state.pool, k=k,
+                                       rerank_k=rerank_k, live_pad=live_pad)
+        else:
+            ids, dists = bs.topk_from_pool(state.pool, k)
     return (SearchResult(ids=ids, dists=dists, stats=state.stats),
             hot_stats, hfeats)
 

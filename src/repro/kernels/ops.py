@@ -119,13 +119,15 @@ def fused_hop(hs: "ref.HopState", adj_pad, queries, live_pad, table,
     """
     mode, t0, t1, t2 = table_spec(table)
     m = _mode(interpret)
-    if m is None:
-        return ref.fused_hop(
+    # named_scope tags the launch in device profiles (jax.profiler)
+    with jax.named_scope("dqf.fused_hop"):
+        if m is None:
+            return ref.fused_hop(
+                hs, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
+                hot_first, hot_ratio, hops=hops, max_hops=max_hops, k=k,
+                eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth)
+        return fused_hop_pallas(
             hs, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
             hot_first, hot_ratio, hops=hops, max_hops=max_hops, k=k,
-            eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth)
-    return fused_hop_pallas(
-        hs, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
-        hot_first, hot_ratio, hops=hops, max_hops=max_hops, k=k,
-        eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
-        bl=bl, interpret=m)
+            eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
+            bl=bl, interpret=m)

@@ -1,0 +1,51 @@
+"""repro.obs — the flight recorder (ISSUE 6).
+
+Three layers, all zero-dependency:
+
+* :mod:`repro.obs.metrics` — typed counters/gauges + log-bucketed
+  histograms on a :class:`MetricsRegistry`; one ``scrape()`` shows the
+  engine, the block caches, the store and every tenant at once.
+* :mod:`repro.obs.tracing` — deterministic per-request sampling
+  (:func:`sample_decision`) and the bounded :class:`TraceLog` the wave
+  engine fills with per-query phase breakdowns at retirement.
+* :mod:`repro.obs.timeline` — host span instrumentation emitting Chrome
+  trace-event JSON (Perfetto), plus the ``jax.profiler`` bridge for
+  lining device profiles up with host ticks.
+
+:class:`ObsConfig` is the single knob consumers (the wave engine) take:
+``enabled=False`` reverts to the bare pre-obs hot path, the default is
+wired-but-unsampled (registry publishing only), ``trace_rate``/
+``timeline`` switch the per-query and per-tick recorders on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      default_registry)
+from .timeline import Timeline, device_annotation
+from .tracing import TraceLog, sample_decision
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "default_registry", "Timeline", "device_annotation", "TraceLog",
+           "sample_decision", "ObsConfig"]
+
+
+@dataclasses.dataclass
+class ObsConfig:
+    """Observability knobs for one consumer (engine / benchmark).
+
+    ``registry=None`` means "use the owning component's registry" (the
+    engine falls back to ``dqf.registry``); pass
+    :func:`default_registry()` to publish process-globally instead.
+    """
+
+    enabled: bool = True            # False → bare pre-obs hot path
+    registry: Optional[MetricsRegistry] = None
+    trace_rate: float = 0.0         # fraction of requests traced
+    trace_seed: int = 0             # sampling is pure in (seed, rid)
+    trace_capacity: int = 1024      # bounded TraceLog
+    timeline: bool = False          # per-tick Chrome-trace spans
+    timeline_capacity: int = 65536

@@ -51,8 +51,10 @@ full phase is tenant-agnostic, so in-flight lanes are undisturbed).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
+from typing import Optional
 
 import numpy as np
 import jax
@@ -63,6 +65,8 @@ from repro.core.decision_tree import predict_jax
 from repro.core.dynamic_search import _seed_full_state, hot_phase_stacked
 from repro.core.features import feature_matrix, hot_features
 from repro.core.types import DQFConfig, HotFeatures
+from repro.obs import (ObsConfig, Timeline, TraceLog, device_annotation,
+                       sample_decision)
 from repro.tenancy import DEFAULT_TENANT
 
 __all__ = ["WaveEngine", "EngineStats"]
@@ -82,15 +86,29 @@ class EngineStats:
     compactions: int = 0        # background drain-and-compact cycles
     latencies_ms: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+    # submit→seed wait, recorded when the lane is seeded; splitting it from
+    # the end-to-end latency separates queueing from service time
+    queue_wait_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
 
     def qps(self, wall_s: float) -> float:
         return self.completed / wall_s if wall_s > 0 else 0.0
 
     def p99_ms(self) -> float:
-        """p99 over the most recent ``latencies_ms.maxlen`` retirements."""
+        """p99 over the most recent ``latencies_ms.maxlen`` retirements.
+
+        NaN on an empty window — 0.0 would read as "infinitely fast" in a
+        dashboard; NaN propagates and comparisons against it are False.
+        """
         if not self.latencies_ms:
-            return 0.0
+            return float("nan")
         return float(np.percentile(self.latencies_ms, 99))
+
+    def queue_wait_p99_ms(self) -> float:
+        """p99 submit→seed wait over the recent window (NaN when empty)."""
+        if not self.queue_wait_ms:
+            return float("nan")
+        return float(np.percentile(self.queue_wait_ms, 99))
 
 
 class WaveEngine:
@@ -99,7 +117,7 @@ class WaveEngine:
     def __init__(self, dqf, *, wave_size: int = 64, tick_hops: int = 8,
                  latency_window: int = LATENCY_WINDOW,
                  auto_compact: bool = True, compact_ratio: float = 0.3,
-                 prefetch: bool = True):
+                 prefetch: bool = True, obs: Optional[ObsConfig] = None):
         self.dqf = dqf
         self.cfg: DQFConfig = dqf.cfg
         self.wave = wave_size
@@ -109,7 +127,39 @@ class WaveEngine:
         self.prefetch = prefetch
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats(
-            latencies_ms=collections.deque(maxlen=latency_window))
+            latencies_ms=collections.deque(maxlen=latency_window),
+            queue_wait_ms=collections.deque(maxlen=latency_window))
+        # --- observability (repro.obs): registry publishing + sampled
+        # per-query traces + tick timeline.  ``obs.enabled=False`` is the
+        # bare pre-obs hot path (no registry, no sampling, null spans).
+        self.obs = obs if obs is not None else ObsConfig()
+        obs_on = bool(self.obs.enabled)
+        self._obs_on = obs_on
+        self.registry = ((self.obs.registry
+                          or getattr(dqf, "registry", None))
+                         if obs_on else None)
+        self.timeline = Timeline(enabled=obs_on and self.obs.timeline,
+                                 capacity=self.obs.timeline_capacity)
+        self.traces = TraceLog(self.obs.trace_capacity)
+        self._trace_rate = float(self.obs.trace_rate) if obs_on else 0.0
+        self._trace_seed = int(self.obs.trace_seed)
+        self._lane_trace: list = [None] * wave_size
+        self._last_pinned = 0
+        self._tick_ann = ((lambda: device_annotation("dqf.wave_tick"))
+                          if obs_on else contextlib.nullcontext)
+        if self.registry is not None:
+            r = self.registry
+            self._h_service = r.histogram(
+                "engine_service_ms", "seed→retire service time (ms)")
+            self._h_qwait = r.histogram(
+                "engine_queue_wait_ms", "submit→seed queue wait (ms)")
+            self._h_hops = r.histogram(
+                "engine_hops", "full-phase hops per retired query",
+                lo=1.0, hi=1e5)
+            self._g_tick_hit = r.gauge(
+                "tier_tick_hit_rate",
+                "block-cache hit rate over the last tick window")
+            r.register_callback("engine", self._collect_metrics)
         # Fused wave-hop megakernel tick: one kernel launch per tick with
         # the wave state resident in VMEM (bit-identical to the composed
         # scan).  Tiered stores stay composed — their host faults can't
@@ -121,7 +171,7 @@ class WaveEngine:
         self._remap_epoch = dqf.store.remap_epoch
         self._cap = dqf.store.capacity
         self._tick_fn = self._build_tick()
-        # per-lane (request_id, t_enqueue, tenant_name, tenant_gen)
+        # per-lane (request_id, t_enqueue, t_seed, tenant_name, tenant_gen)
         self._lane_meta = [None] * wave_size
         self._results: dict = {}
         self._state = None
@@ -225,8 +275,33 @@ class WaveEngine:
         wall = time.perf_counter() - t0
         return {"results": self._results, "wall_s": wall,
                 "qps": self.stats.qps(wall), "p99_ms": self.stats.p99_ms(),
+                "queue_wait_p99_ms": self.stats.queue_wait_p99_ms(),
                 "straggled": self.stats.straggled,
                 "compactions": self.stats.compactions}
+
+    def scrape(self) -> dict:
+        """One flat metrics dict across engine, caches, store and tenants."""
+        return self.registry.scrape() if self.registry is not None else {}
+
+    def export_timeline(self, path: Optional[str] = None):
+        """Chrome trace-event JSON of the recorded tick spans (Perfetto)."""
+        return self.timeline.export(path)
+
+    def _collect_metrics(self) -> dict:
+        """Registry scrape-time collector (keyed ``"engine"``)."""
+        s = self.stats
+        return {"engine_completed_total": float(s.completed),
+                "engine_straggled_total": float(s.straggled),
+                "engine_dropped_total": float(s.dropped),
+                "engine_ticks_total": float(s.ticks),
+                "engine_hops_total": float(s.total_hops),
+                "engine_compactions_total": float(s.compactions),
+                "engine_queue_depth": float(len(self.queue)),
+                "engine_live_lanes": float(
+                    sum(m is not None for m in self._lane_meta)),
+                "engine_wave_size": float(self.wave),
+                "engine_traces_recorded": float(self.traces.total),
+                "engine_traces_dropped": float(self.traces.dropped)}
 
     # -------------------------------------------------------------- internals
     def _any_live(self) -> bool:
@@ -340,7 +415,7 @@ class WaveEngine:
         q = jnp.asarray(np.stack([r[1] for r in reqs]))
         stk = reg.stacked(self.dqf.store)
         tidx = jnp.asarray([reg.slot_of(r[3]) for r in reqs], jnp.int32)
-        hot_pool, _ = hot_phase_stacked(
+        hot_pool, hot_stats = hot_phase_stacked(
             stk.x, stk.adj, stk.entries, stk.mask, tidx, q,
             pool_size=self.cfg.hot_pool, max_hops=self.cfg.max_hops,
             mode=self.cfg.hot_mode)
@@ -349,6 +424,18 @@ class WaveEngine:
                                   self.dqf.store.capacity,
                                   self.cfg.full_pool,
                                   self.dqf._dev["live_pad"])
+        # Trace sampling is a pure function of (seed, rid): no flags ride
+        # the queue, and the hot-phase stats transfer happens only when at
+        # least one lane in this refill batch is sampled (the unsampled
+        # path pays no extra device syncs).
+        sampled = [sample_decision(self._trace_seed, r[0], self._trace_rate)
+                   for r in reqs]
+        if any(sampled):
+            hot_hops = np.asarray(hot_stats.hops)
+            hot_dist = np.asarray(hot_stats.dist_count)
+        cache = (self.dqf.store.full_phase_cache()
+                 if self.dqf.store.tiered else None)
+        t_seed = time.perf_counter()
         # splice the new lanes into the wave state (host-side: simple, and
         # refills are rare relative to ticks)
         st = jax.tree.map(lambda a: np.array(a), self._state)  # writable
@@ -365,8 +452,24 @@ class WaveEngine:
             self._hot_first[lane] = float(hf.first[j])
             self._hot_ratio[lane] = float(hf.first_div_kth[j])
             self._evals[lane] = 0
-            self._lane_meta[lane] = (reqs[j][0], reqs[j][2], reqs[j][3],
+            rid, t_in = reqs[j][0], reqs[j][2]
+            self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
                                      reqs[j][4])
+            wait_ms = (t_seed - t_in) * 1e3
+            self.stats.queue_wait_ms.append(wait_ms)
+            if self.registry is not None:
+                self._h_qwait.observe(wait_ms)
+            if sampled[j]:
+                self._lane_trace[lane] = {
+                    "rid": rid, "tenant": reqs[j][3],
+                    "hot_hops": int(hot_hops[j]),
+                    "hot_dist_evals": int(hot_dist[j]),
+                    "seed_tick": self.stats.ticks,
+                    "tier_miss0": (cache.counters["misses"]
+                                   if cache is not None else 0),
+                }
+            else:
+                self._lane_trace[lane] = None
         self._state = jax.tree.map(jnp.asarray, st)
         self._update_table()
 
@@ -438,11 +541,18 @@ class WaveEngine:
         if live:
             ids = np.asarray(self._state.pool.ids)[live]
             ids = ids[ids < st.n]
-            cache.pin_blocks(cache.blocks_of_rows(ids))
+            bids = cache.blocks_of_rows(ids)
+            cache.pin_blocks(bids)
+            self._last_pinned = int(len(bids))
         else:
             cache.pin_blocks(())
+            self._last_pinned = 0
         cache.apply_prefetch()
         cache.maintain()
+        if self.registry is not None:
+            # per-tick window hit rate (the cache's own collector publishes
+            # the lifetime counters; this gauge tracks the current phase)
+            self._g_tick_hit.set(cache.stats_snapshot()["hit_rate"])
         if self.prefetch and live:
             nxt = np.asarray(bs.next_expansions(self._state, st.capacity))
             nxt = nxt[nxt < st.n]
@@ -467,38 +577,106 @@ class WaveEngine:
         self._update_table()
 
     def _tick(self):
-        self._maybe_refresh()
-        self._tier_begin_tick()
-        state, evals = self._tick_fn(
-            self._state, self._table, self.dqf._dev["adj_pad"],
-            self.dqf._dev["live_pad"], jnp.asarray(self._queries),
-            jnp.asarray(self._hot_first), jnp.asarray(self._hot_ratio),
-            jnp.asarray(self._evals))
-        self._state = state
-        self._evals = np.array(evals)   # writable copy (refill mutates)
-        self.stats.ticks += 1
-        active = np.asarray(state.active)
-        now = time.perf_counter()
-        retiring = [lane for lane, meta in enumerate(self._lane_meta)
-                    if meta is not None and not active[lane]]
-        if retiring:
-            # one vectorized rerank pass for every lane retiring this tick
-            pool_ids = np.asarray(state.pool.ids)
-            pool_dists = np.asarray(state.pool.dists)
-            batch_ids, batch_dists = self._retire_batch(
-                pool_ids[retiring], pool_dists[retiring],
-                self._queries[retiring])
+        tl = self.timeline
+        with tl.span("tick", tick=self.stats.ticks):
+            with tl.span("tick.housekeeping"):
+                self._maybe_refresh()
+            with tl.span("tick.tier"):
+                self._tier_begin_tick()
+            with tl.span("tick.jit", hops=self.tick_hops):
+                # TraceAnnotation lines this host span up with the device
+                # lanes of a jax.profiler capture (see repro.obs.timeline)
+                with self._tick_ann():
+                    state, evals = self._tick_fn(
+                        self._state, self._table, self.dqf._dev["adj_pad"],
+                        self.dqf._dev["live_pad"],
+                        jnp.asarray(self._queries),
+                        jnp.asarray(self._hot_first),
+                        jnp.asarray(self._hot_ratio),
+                        jnp.asarray(self._evals))
+                    if tl.enabled:      # make the span cover device time
+                        state = jax.block_until_ready(state)
+            self._state = state
+            self._evals = np.array(evals)  # writable copy (refill mutates)
+            self.stats.ticks += 1
+            active = np.asarray(state.active)
+            now = time.perf_counter()
+            retiring = [lane for lane, meta in enumerate(self._lane_meta)
+                        if meta is not None and not active[lane]]
+            with tl.span("tick.retire", retiring=len(retiring)):
+                self._retire_lanes(state, retiring, now)
+            # Background compaction (satellite of the tiering ISSUE): once
+            # the tombstone ratio trips the trigger, stop refilling, let
+            # live lanes drain, compact at the safe boundary, then resume.
+            # (The COW double-buffer that would overlap compaction with
+            # serving is future work — see ROADMAP.)
+            if self.auto_compact and not self._draining \
+                    and self.dqf.store.should_compact(self.compact_ratio):
+                self._draining = True
+            if self._draining:
+                if not self._any_live():
+                    self._do_compact()
+                    with tl.span("tick.refill"):
+                        self._refill()
+                return
+            with tl.span("tick.refill"):
+                self._refill()
+
+    def _retire_lanes(self, state: bs.BeamState, retiring: list,
+                      now: float) -> None:
+        """Harvest results + stats for every lane retiring this tick."""
+        if not retiring:
+            return
+        # one vectorized rerank pass for every lane retiring this tick
+        pool_ids = np.asarray(state.pool.ids)
+        pool_dists = np.asarray(state.pool.dists)
+        batch_ids, batch_dists = self._retire_batch(
+            pool_ids[retiring], pool_dists[retiring],
+            self._queries[retiring])
+        # whole-array transfers once per retiring tick (never per lane);
+        # the extra stats arrays move only when a sampled lane retires
+        hops_all = np.asarray(state.stats.hops)
+        if any(self._lane_trace[ln] is not None for ln in retiring):
+            dist_all = np.asarray(state.stats.dist_count)
+            upd_all = np.asarray(state.stats.update_count)
+            term_all = np.asarray(state.stats.terminated_early)
+        cache = (self.dqf.store.full_phase_cache()
+                 if self.dqf.store.tiered else None)
         for j, lane in enumerate(retiring):
-            rid, t_in, tenant, gen = self._lane_meta[lane]
+            rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
             ids, dists = batch_ids[j], batch_dists[j]
-            hops = int(np.asarray(state.stats.hops[lane]))
+            hops = int(hops_all[lane])
             self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
                                   "tenant": tenant}
             self.stats.completed += 1
             self.stats.total_hops += hops
-            if hops >= self.cfg.max_hops:
+            straggled = hops >= self.cfg.max_hops
+            if straggled:
                 self.stats.straggled += 1
+            service_ms = (now - t_seed) * 1e3
             self.stats.latencies_ms.append((now - t_in) * 1e3)
+            if self.registry is not None:
+                self._h_service.observe(service_ms)
+                self._h_hops.observe(hops)
+            tr = self._lane_trace[lane]
+            if tr is not None:
+                miss0 = tr.pop("tier_miss0")
+                tr.update(
+                    queue_wait_ms=(t_seed - t_in) * 1e3,
+                    service_ms=service_ms,
+                    total_ms=(now - t_in) * 1e3,
+                    full_hops=hops,
+                    full_dist_evals=int(dist_all[lane]),
+                    full_updates=int(upd_all[lane]),
+                    terminated_early=bool(term_all[lane]),
+                    straggled=straggled,
+                    rerank_k=int(self.dqf._rerank_k),
+                    ticks_in_flight=self.stats.ticks - tr["seed_tick"],
+                    tier_misses=(cache.counters["misses"] - miss0
+                                 if cache is not None else 0),
+                    pinned_blocks=self._last_pinned)
+                self.traces.add(tr)
+                self._lane_trace[lane] = None
             self._lane_meta[lane] = None
             # Preference feedback: the retiring lane's results feed its
             # tenant's counter, and a due Alg-2 clock rebuilds that
@@ -509,17 +687,3 @@ class WaveEngine:
                     and self.dqf.tenants.get(tenant).gen == gen:
                 self.dqf.record(ids[None, :], tenant=tenant)
                 self.dqf.maybe_rebuild_hot(tenant=tenant)
-        # Background compaction (satellite of the tiering ISSUE): once the
-        # tombstone ratio trips the trigger, stop refilling, let live lanes
-        # drain, compact at the safe boundary, then resume.  (The COW
-        # double-buffer that would overlap compaction with serving is
-        # future work — see ROADMAP.)
-        if self.auto_compact and not self._draining \
-                and self.dqf.store.should_compact(self.compact_ratio):
-            self._draining = True
-        if self._draining:
-            if not self._any_live():
-                self._do_compact()
-                self._refill()
-            return
-        self._refill()

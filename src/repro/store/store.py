@@ -90,7 +90,8 @@ class VectorStore:
                  quant: Optional[QuantState] = None,
                  next_ext: Optional[int] = None,
                  capacity: Optional[int] = None,
-                 tier: Optional[TierConfig] = None):
+                 tier: Optional[TierConfig] = None,
+                 registry=None):
         x = np.ascontiguousarray(x, np.float32)
         n = self._n = x.shape[0]
         self._d = x.shape[1]
@@ -128,6 +129,21 @@ class VectorStore:
         self.rows_epoch = 0
         # ----- tiered storage (repro.tiering): rows/codes move to mmap-backed
         # block files, device residency becomes a bounded block cache.
+        # ----- observability (repro.obs): mutation counters are typed
+        # instruments (incremented at the mutation sites), liveness/epoch
+        # are a scrape-time collector keyed "store" — rebuilding the store
+        # on the same registry replaces the stale closure.
+        self.registry = registry
+        if registry is not None:
+            self._m_ins = registry.counter(
+                "store_rows_inserted_total", "rows appended via add()")
+            self._m_del = registry.counter(
+                "store_rows_deleted_total", "rows tombstoned")
+            self._m_cmp = registry.counter(
+                "store_compactions_total", "compaction passes")
+            self._m_drop = registry.counter(
+                "store_rows_dropped_total", "tombstones reclaimed")
+            registry.register_callback("store", self._collect_metrics)
         self.tier = tier if (tier is not None and tier.enabled) else None
         self.tier_dir: Optional[str] = None
         self._rows_bf: Optional[BlockFile] = None
@@ -158,7 +174,8 @@ class VectorStore:
         self._row_cache = BlockCache(bf, self._cache_slots(bf),
                                      name="rows", prefetch=t.prefetch,
                                      track_rows=self.quant is None,
-                                     tally_decay_every=t.tally_decay_every)
+                                     tally_decay_every=t.tally_decay_every,
+                                     registry=self.registry)
         if self.quant is not None:
             cbf = BlockFile(os.path.join(d, "codes.bin"), self.capacity,
                             self._codes.shape[1], self._codes.dtype,
@@ -170,7 +187,8 @@ class VectorStore:
             self._code_cache = BlockCache(
                 cbf, self._cache_slots(cbf), name="codes",
                 prefetch=t.prefetch, track_rows=True,
-                tally_decay_every=t.tally_decay_every)
+                tally_decay_every=t.tally_decay_every,
+                registry=self.registry)
 
     def _cache_slots(self, bf: BlockFile) -> int:
         t = self.tier
@@ -359,6 +377,8 @@ class VectorStore:
         self._tier_note_write(start, start + m)
         self.epoch += 1
         self.rows_epoch += 1
+        if self.registry is not None:
+            self._m_ins.inc(m)
         return new_ext
 
     def _grow(self, new_cap: int) -> None:
@@ -400,8 +420,10 @@ class VectorStore:
         new = BlockCache(bf, self._cache_slots(bf), name=old.name,
                          prefetch=self.tier.prefetch,
                          track_rows=old._track_rows,
-                         tally_decay_every=self.tier.tally_decay_every)
+                         tally_decay_every=self.tier.tally_decay_every,
+                         registry=self.registry)
         new.counters = old.counters
+        new._snap_prev = dict(old._snap_prev)   # snapshot window survives
         return new
 
     def _encode(self, rows: np.ndarray) -> np.ndarray:
@@ -418,6 +440,8 @@ class VectorStore:
             raise ValueError("row already tombstoned")
         self.alive[internal] = False
         self.epoch += 1
+        if self.registry is not None:
+            self._m_del.inc(internal.size)
         return internal
 
     def compact(self) -> CompactionResult:
@@ -444,6 +468,9 @@ class VectorStore:
         self.epoch += 1
         self.rows_epoch += 1
         self.remap_epoch += 1
+        if self.registry is not None:
+            self._m_cmp.inc()
+            self._m_drop.inc(n_before - n_after)
         return CompactionResult(remap=remap, n_before=n_before,
                                 n_after=self._n)
 
@@ -486,6 +513,15 @@ class VectorStore:
         return int(self.x.nbytes + self.alive.nbytes + self.ext_ids.nbytes
                    + (self.quant.nbytes() if self.quant else 0))
 
+    def _collect_metrics(self) -> dict:
+        """Registry scrape-time collector (keyed ``"store"``)."""
+        return {"store_rows": float(self._n),
+                "store_live_rows": float(self.live_count),
+                "store_tombstones": float(self._n - self.live_count),
+                "store_capacity": float(self.capacity),
+                "store_epoch": float(self.epoch),
+                "store_remap_epoch": float(self.remap_epoch)}
+
     def to_arrays(self, prefix: str = "store_") -> dict:
         out = {"x": self.x,                        # legacy key, kept readable
                prefix + "alive": self.alive,
@@ -498,7 +534,8 @@ class VectorStore:
 
     @classmethod
     def from_arrays(cls, arrays, prefix: str = "store_",
-                    tier: Optional[TierConfig] = None) -> "VectorStore":
+                    tier: Optional[TierConfig] = None,
+                    registry=None) -> "VectorStore":
         """Rebuild from :meth:`to_arrays` output (or a pre-store checkpoint
         holding only ``x``, for which everything defaults to live).
 
@@ -516,4 +553,5 @@ class VectorStore:
         return cls(x, alive=alive, ext_ids=ext,
                    next_ext=int(nxt) if nxt is not None else None,
                    capacity=int(cap) if cap is not None else None,
-                   quant=QuantState.from_arrays(arrays), tier=tier)
+                   quant=QuantState.from_arrays(arrays), tier=tier,
+                   registry=registry)

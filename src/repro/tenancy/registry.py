@@ -64,7 +64,7 @@ class TenantRegistry:
     """Create/evict tenants; fan out store hooks; stack device tables."""
 
     def __init__(self, n_rows: int, trigger: int, *,
-                 default: str = DEFAULT_TENANT):
+                 default: str = DEFAULT_TENANT, registry=None):
         self._n = int(n_rows)
         self._trigger = int(trigger)
         self._tenants: dict[str, TenantState] = {}
@@ -73,6 +73,12 @@ class TenantRegistry:
         self._stack: Optional[StackedHotTables] = None
         self._stack_key = None
         self._gen = 0
+        # obs wiring (repro.obs.MetricsRegistry): per-tenant preference
+        # gauges published at scrape time; keyed, so a rebuilt registry
+        # (new DQF.build) replaces the stale closure.
+        self.metrics = registry
+        if registry is not None:
+            registry.register_callback("tenants", self._collect_metrics)
         self.create(default)
 
     # -------------------------------------------------------------- lifecycle
@@ -152,6 +158,36 @@ class TenantRegistry:
                 need_rebuild.append(t.name)
         self._n = self.default.counter.n
         return need_rebuild
+
+    def _collect_metrics(self) -> dict:
+        """Registry scrape-time collector (keyed ``"tenants"``).
+
+        ``tenant_head_mass`` is the governor's signal (see ROADMAP): the
+        fraction of a tenant's preference mass concentrated in its
+        hot-sized head — low head mass means the hot index buys little and
+        that tenant's device bytes are better spent elsewhere.
+        """
+        out = {"tenants_live": float(len(self._tenants))}
+        for t in self._tenants.values():
+            lbl = f"{{tenant={t.name}}}"
+            counts = t.counter.counts
+            total = float(counts.sum())
+            out[f"tenant_pref_mass_total{lbl}"] = total
+            out[f"tenant_since_rebuild{lbl}"] = float(
+                t.counter.since_rebuild)
+            hot_n = t.hot.size if t.hot is not None else 0
+            out[f"tenant_hot_size{lbl}"] = float(hot_n)
+            if total > 0.0 and hot_n > 0:
+                head = counts if hot_n >= counts.size else \
+                    np.partition(counts, -hot_n)[-hot_n:]
+                out[f"tenant_head_mass{lbl}"] = float(head.sum()) / total
+                ids = t.hot.ids[t.hot.ids < counts.size]
+                out[f"tenant_hot_mass_ratio{lbl}"] = \
+                    float(counts[ids].sum()) / total
+            else:
+                out[f"tenant_head_mass{lbl}"] = 0.0
+                out[f"tenant_hot_mass_ratio{lbl}"] = 0.0
+        return out
 
     def hot_tenants_containing(self, ids: np.ndarray) -> list[str]:
         """Tenants whose hot index references any of ``ids`` (deletions)."""

@@ -44,7 +44,7 @@ class BlockCache:
 
     def __init__(self, bf: BlockFile, slots: int, *, name: str = "",
                  prefetch: bool = False, track_rows: bool = False,
-                 tally_decay_every: int = 0):
+                 tally_decay_every: int = 0, registry=None):
         self.bf = bf
         self.slots = max(1, min(int(slots), bf.n_blocks))
         self.name = name
@@ -84,6 +84,15 @@ class BlockCache:
         self.counters = dict(hits=0, misses=0, evictions=0, admissions=0,
                              invalidations=0, prefetch_issued=0,
                              prefetch_applied=0, relayouts=0)
+        # windowed-stats baseline for stats_snapshot() deltas
+        self._snap_prev = dict(self.counters)
+        # re-home the counters on a metrics registry (repro.obs): scraped
+        # lazily via a keyed callback, so the increment sites stay plain
+        # dict writes and the hot fetch path pays nothing.
+        self.registry = registry
+        if registry is not None:
+            registry.register_callback(
+                f"tier_cache:{name}", self._collect_metrics)
         # prefetch worker state (started lazily)
         self._prefetch_enabled = bool(prefetch)
         self._lock = threading.Lock()
@@ -411,9 +420,39 @@ class BlockCache:
 
     # ------------------------------------------------------------------ stats
     def hit_rate(self) -> float:
+        """Lifetime hit rate (hits / gathers served, sentinels excluded)."""
         h, m = self.counters["hits"], self.counters["misses"]
         return h / (h + m) if (h + m) else 0.0
+
+    def stats_snapshot(self) -> dict:
+        """Counter deltas since the previous snapshot + window hit rate.
+
+        Delta-since-last-snapshot semantics: each call closes the current
+        measurement window and opens the next one, without resetting the
+        lifetime counters (which the registry scrape and ``hit_rate()``
+        keep reading).  This is the one place windowed hit-rate math
+        lives — benchmarks and the engine's tier housekeeping consume it
+        instead of re-deriving ratios from the raw dict.
+        """
+        cur = dict(self.counters)
+        out = {k: cur[k] - self._snap_prev.get(k, 0) for k in cur}
+        self._snap_prev = cur
+        h, m = out["hits"], out["misses"]
+        out["hit_rate"] = h / (h + m) if (h + m) else 0.0
+        return out
 
     def reset_counters(self) -> None:
         for k in self.counters:
             self.counters[k] = 0
+        self._snap_prev = dict(self.counters)
+
+    def _collect_metrics(self) -> dict:
+        """Registry scrape-time collector (keyed on the cache name)."""
+        lbl = f"{{cache={self.name}}}"
+        out = {f"tier_{k}_total{lbl}": float(v)
+               for k, v in self.counters.items()}
+        out[f"tier_hit_rate{lbl}"] = self.hit_rate()
+        out[f"tier_resident_blocks{lbl}"] = float(
+            int((self._slot_bid >= 0).sum()))
+        out[f"tier_arena_bytes{lbl}"] = float(self.arena_nbytes())
+        return out

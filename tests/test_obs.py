@@ -1,0 +1,344 @@
+"""Flight recorder (repro.obs): metrics registry, traces, timelines.
+
+Contracts under test:
+
+* histogram bucket boundaries and percentile accuracy (relative error
+  bounded by ``growth - 1`` vs ``np.percentile`` on the same samples);
+* registry label fan-out, type-conflict detection, keyed callbacks;
+* trace sampling is a pure function of (seed, rid) — deterministic across
+  calls, seed-sensitive, empirically near the requested rate;
+* timeline spans export valid Chrome trace-event JSON (Perfetto schema);
+* engine integration: a sampled run traces every retirement, one scrape
+  covers engine + store + tenants, and ``enabled=False`` changes nothing
+  about results.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       ObsConfig, Timeline, TraceLog, default_registry,
+                       sample_decision)
+from repro.serving.engine import EngineStats, WaveEngine
+
+
+# ------------------------------------------------------------- histogram
+def test_histogram_bucket_boundaries():
+    h = Histogram("h", lo=1.0, hi=16.0, growth=2.0)
+    edges = h.bucket_edges()
+    assert edges == [1.0, 2.0, 4.0, 8.0, 16.0]
+    assert h._bucket(0.5) == 0 and h._bucket(1.0) == 0
+    assert h._bucket(1.001) == 1 and h._bucket(2.0) == 1
+    assert h._bucket(2.001) == 2
+    assert h._bucket(16.0) == 4
+    assert h._bucket(1e9) == h.n_buckets - 1      # overflow clamps
+
+
+def test_histogram_percentiles_vs_numpy():
+    rng = np.random.default_rng(3)
+    samples = np.exp(rng.normal(2.0, 1.5, 5000))  # lognormal, wide range
+    h = Histogram("lat", lo=1e-3, hi=1e6)
+    for v in samples:
+        h.observe(float(v))
+    assert h.count() == samples.size
+    assert h.sum() == pytest.approx(float(samples.sum()), rel=1e-9)
+    tol = h.growth - 1.0
+    for q in (50, 95, 99):
+        exact = float(np.percentile(samples, q))
+        est = h.percentile(q)
+        assert abs(est - exact) / exact <= tol, (q, est, exact)
+
+
+def test_histogram_empty_and_clamping():
+    h = Histogram("h", lo=1.0, hi=100.0, growth=2.0)
+    assert math.isnan(h.percentile(99))
+    h.observe(0.25)         # underflow: bucket 0, exact min kept
+    h.observe(1e6)          # overflow: last bucket, exact max kept
+    assert h.count() == 2
+    assert h.percentile(0) >= 0.25
+    assert h.percentile(100) <= 1e6
+    h.observe(float("nan"))                       # ignored, not poisoned
+    assert h.count() == 2
+
+
+def test_histogram_labels_scrape():
+    h = Histogram("lat_ms")
+    h.observe(5.0, tenant="a")
+    h.observe(50.0, tenant="b")
+    out = {}
+    h.scrape_into(out)
+    assert out["lat_ms_count{tenant=a}"] == 1.0
+    assert out["lat_ms_count{tenant=b}"] == 1.0
+    assert "lat_ms_p99{tenant=a}" in out
+    assert not any(math.isnan(v) for v in out.values())
+
+
+# -------------------------------------------------------------- registry
+def test_registry_label_fanout_and_types():
+    r = MetricsRegistry()
+    c = r.counter("reqs_total")
+    c.inc(tenant="a")
+    c.inc(2, tenant="b")
+    c.inc()
+    g = r.gauge("depth")
+    g.set(7)
+    out = r.scrape()
+    assert out["reqs_total{tenant=a}"] == 1.0
+    assert out["reqs_total{tenant=b}"] == 2.0
+    assert out["reqs_total"] == 1.0
+    assert out["depth"] == 7.0
+    assert r.counter("reqs_total") is c           # get-or-create
+    with pytest.raises(TypeError):
+        r.gauge("reqs_total")                     # kind conflict
+
+
+def test_registry_keyed_callbacks_replace():
+    r = MetricsRegistry()
+    r.register_callback("eng", lambda: {"a": 1.0})
+    assert r.scrape()["a"] == 1.0
+    r.register_callback("eng", lambda: {"a": 2.0})  # rebuilt component
+    out = r.scrape()
+    assert out["a"] == 2.0
+    r.register_callback("bad", lambda: 1 / 0)     # must not break scrape
+    assert r.scrape()["a"] == 2.0
+    r.unregister_callback("eng")
+    assert "a" not in r.scrape()
+
+
+def test_registry_exposition_format():
+    r = MetricsRegistry()
+    r.counter("hits_total").inc(3, cache="rows")
+    r.histogram("lat", lo=1.0, hi=8.0, growth=2.0).observe(3.0)
+    r.register_callback("x", lambda: {"extra{k=v}": 1.5})
+    text = r.exposition()
+    assert '# TYPE hits_total counter' in text
+    assert 'hits_total{cache="rows"} 3' in text
+    assert '# TYPE lat histogram' in text
+    assert 'lat_bucket{le="4"} 1' in text
+    assert 'lat_bucket{le="+Inf"} 1' in text
+    assert 'extra{k="v"} 1.5' in text
+
+
+def test_default_registry_is_shared():
+    assert default_registry() is default_registry()
+    assert isinstance(default_registry().counter("x_total"), Counter)
+    assert isinstance(default_registry().gauge("y"), Gauge)
+
+
+# -------------------------------------------------------------- sampling
+def test_sample_decision_deterministic_and_rate():
+    rids = range(20_000)
+    rate = 0.3
+    picked = {rid for rid in rids if sample_decision(42, rid, rate)}
+    again = {rid for rid in rids if sample_decision(42, rid, rate)}
+    assert picked == again                        # pure in (seed, rid)
+    frac = len(picked) / 20_000
+    assert abs(frac - rate) < 0.02
+    other = {rid for rid in rids if sample_decision(43, rid, rate)}
+    assert picked != other                        # seed-sensitive
+    assert all(sample_decision(0, rid, 1.0) for rid in range(100))
+    assert not any(sample_decision(0, rid, 0.0) for rid in range(100))
+
+
+def test_trace_log_bounded():
+    log = TraceLog(capacity=4)
+    for i in range(10):
+        log.add({"rid": i})
+    assert len(log) == 4
+    assert log.total == 10 and log.dropped == 6
+    assert [t["rid"] for t in log.snapshot()] == [6, 7, 8, 9]
+    assert [t["rid"] for t in log.drain()] == [6, 7, 8, 9]
+    assert len(log) == 0
+
+
+# -------------------------------------------------------------- timeline
+def test_timeline_spans_and_export(tmp_path):
+    tl = Timeline(enabled=True)
+    with tl.span("tick", n=3):
+        with tl.span("tick.jit"):
+            pass
+    tl.instant("marker")
+    evs = tl.events()
+    assert [e["name"] for e in evs] == ["tick.jit", "tick", "marker"]
+    doc = tl.export()
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] in ("X", "i")
+        assert isinstance(ev["ts"], float) and ev["ts"] >= 0
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+    p = str(tmp_path / "tl.json")
+    tl.export(p)
+    with open(p) as f:
+        loaded = json.load(f)                     # strictly valid JSON
+    assert loaded["traceEvents"]
+    json.dumps(loaded, allow_nan=False)           # Perfetto rejects NaN
+
+
+def test_timeline_disabled_is_noop():
+    tl = Timeline(enabled=False)
+    s1 = tl.span("a")
+    s2 = tl.span("b")
+    assert s1 is s2                               # shared null span
+    with s1:
+        pass
+    tl.instant("x")
+    assert tl.events() == []
+
+
+# ----------------------------------------------------------- engine stats
+def test_engine_stats_empty_percentiles_nan():
+    s = EngineStats()
+    assert math.isnan(s.p99_ms())
+    assert math.isnan(s.queue_wait_p99_ms())
+    s.latencies_ms.append(5.0)
+    assert s.p99_ms() == pytest.approx(5.0)
+
+
+# ------------------------------------------------------ engine integration
+def _drain(eng, wl, n=48):
+    eng.submit(wl.sample(n))
+    return eng.run_until_drained()
+
+
+def test_engine_traces_every_query_at_rate_one(built_dqf):
+    dqf, wl = built_dqf
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8,
+                     obs=ObsConfig(trace_rate=1.0, timeline=True,
+                                   trace_capacity=256))
+    out = _drain(eng, wl)
+    assert len(out["results"]) == 48
+    assert len(eng.traces) == eng.stats.completed == 48
+    required = {"rid", "tenant", "hot_hops", "hot_dist_evals", "seed_tick",
+                "queue_wait_ms", "service_ms", "total_ms", "full_hops",
+                "full_dist_evals", "full_updates", "terminated_early",
+                "straggled", "rerank_k", "ticks_in_flight", "tier_misses",
+                "pinned_blocks"}
+    for tr in eng.traces:
+        assert required <= set(tr)
+        assert tr["service_ms"] >= 0 and tr["queue_wait_ms"] >= 0
+        assert tr["total_ms"] >= tr["service_ms"]
+        assert tr["full_hops"] >= 0 and tr["ticks_in_flight"] >= 1
+    assert {tr["rid"] for tr in eng.traces} == set(out["results"])
+    # summary splits queue wait from service latency
+    assert out["queue_wait_p99_ms"] >= 0
+
+
+def test_engine_trace_rate_zero_records_nothing(built_dqf):
+    dqf, wl = built_dqf
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8, obs=ObsConfig())
+    out = _drain(eng, wl)
+    assert len(out["results"]) == 48
+    assert len(eng.traces) == 0
+    assert eng.timeline.events() == []            # timeline off by default
+
+
+def test_engine_timeline_is_valid_chrome_trace(built_dqf, tmp_path):
+    dqf, wl = built_dqf
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8,
+                     obs=ObsConfig(timeline=True))
+    _drain(eng, wl, n=20)
+    p = str(tmp_path / "timeline.json")
+    eng.export_timeline(p)
+    with open(p) as f:
+        doc = json.load(f)
+    json.dumps(doc, allow_nan=False)
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"tick", "tick.jit", "tick.retire", "tick.refill",
+            "tick.housekeeping", "tick.tier"} <= names
+    ticks = [e for e in doc["traceEvents"] if e["name"] == "tick"]
+    assert len(ticks) == eng.stats.ticks
+    for e in doc["traceEvents"]:
+        assert e["ph"] in ("X", "i") and e["dur" if e["ph"] == "X"
+                                           else "ts"] >= 0
+
+
+def test_engine_scrape_parity(built_dqf):
+    dqf, wl = built_dqf
+    c0 = dqf.scrape().get("engine_service_ms_count", 0.0)
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8, obs=ObsConfig())
+    _drain(eng, wl)
+    out = eng.scrape()
+    assert out == dqf.scrape()                    # one registry, one surface
+    assert out["engine_completed_total"] == float(eng.stats.completed)
+    assert out["engine_ticks_total"] == float(eng.stats.ticks)
+    assert out["engine_wave_size"] == 16.0
+    # store + dqf collectors land in the same flat dict
+    assert out["store_rows"] == float(dqf.store.n)
+    assert out["store_live_rows"] == float(dqf.store.live_count)
+    assert out["index_device_bytes"] > 0
+    # per-tenant gauges (default tenant) ride along
+    assert out["tenant_hot_size{tenant=default}"] > 0
+    assert 0.0 <= out["tenant_head_mass{tenant=default}"] <= 1.0
+    # engine-side histograms observed one entry per retirement (delta:
+    # the registry is the dqf's, shared by every engine over it)
+    assert out["engine_service_ms_count"] - c0 == float(eng.stats.completed)
+    # and the whole thing renders as Prometheus text
+    text = dqf.exposition()
+    assert "# TYPE engine_service_ms histogram" in text
+    assert "store_rows" in text
+
+
+def test_engine_obs_disabled_matches_enabled_results(built_dqf):
+    dqf, wl = built_dqf
+    q = wl.sample(24)
+    eng_off = WaveEngine(dqf, wave_size=8, tick_hops=8,
+                         obs=ObsConfig(enabled=False))
+    eng_off.submit(q)
+    off = eng_off.run_until_drained()
+    eng_on = WaveEngine(dqf, wave_size=8, tick_hops=8,
+                        obs=ObsConfig(trace_rate=1.0, timeline=True))
+    eng_on.submit(q)
+    on = eng_on.run_until_drained()
+    for rid in off["results"]:
+        np.testing.assert_array_equal(off["results"][rid]["ids"],
+                                      on["results"][rid]["ids"])
+    assert eng_off.registry is None               # bare hot path
+    assert eng_off.scrape() == {}
+    assert eng_off.timeline.events() == []
+    assert len(eng_off.traces) == 0
+
+
+def test_search_counters_on_dqf(built_dqf):
+    dqf, wl = built_dqf
+    before = dqf.scrape().get("search_queries_total", 0.0)
+    dqf.search(wl.sample(8), record=False)
+    out = dqf.scrape()
+    assert out["search_queries_total"] == before + 8.0
+
+
+# -------------------------------------------------- block cache snapshots
+def test_block_cache_stats_snapshot_deltas(tmp_path):
+    from repro.tiering import BlockCache, BlockFile
+    bf = BlockFile(str(tmp_path / "t.f32"), 64, 4, np.float32, 8)
+    bf.rows[:64] = np.zeros((64, 4), np.float32)
+    cache = BlockCache(bf, slots=2)
+    cache.counters["hits"] += 6
+    cache.counters["misses"] += 2
+    snap = cache.stats_snapshot()
+    assert snap["hits"] == 6 and snap["misses"] == 2
+    assert snap["hit_rate"] == pytest.approx(0.75)
+    # the window closed: an immediate second snapshot is empty
+    snap2 = cache.stats_snapshot()
+    assert snap2["hits"] == 0 and snap2["misses"] == 0
+    assert snap2["hit_rate"] == 0.0
+    cache.counters["hits"] += 1
+    assert cache.stats_snapshot()["hit_rate"] == 1.0
+    # lifetime counters unaffected by windowing
+    assert cache.hit_rate() == pytest.approx(7 / 9)
+
+
+def test_block_cache_registry_callback(tmp_path):
+    from repro.tiering import BlockCache, BlockFile
+    r = MetricsRegistry()
+    bf = BlockFile(str(tmp_path / "t.f32"), 64, 4, np.float32, 8)
+    cache = BlockCache(bf, slots=2, registry=r)
+    cache.counters["hits"] += 3
+    out = r.scrape()
+    key = f"tier_hits_total{{cache={cache.name}}}"
+    assert out[key] == 3.0
+    assert f"tier_resident_blocks{{cache={cache.name}}}" in out
