@@ -1,0 +1,201 @@
+"""Sharded serving benchmark: closed-loop scaling at 1/2/4/8 shards.
+
+The paper's scale-out claim, CPU-sized: one dataset served by a
+:class:`repro.sharding.ShardedDQF` at growing shard counts, each shard a
+full mutable VectorStore with its own NSSG, and per-shard search effort
+scaled to the shard's ``N/S`` data share:
+
+* **serving effort shrinks with the slice** — out-degree, beam pools and
+  hop budget all scale down (od 16 -> 8, max_hops 64 -> 6, full_pool
+  64 -> 14 from 1 to 8 shards): a shard holding ``N/S`` rows needs a
+  proportionally shallower walk to cover its slice, and the cross-shard
+  bitonic merge (``S * full_pool`` candidates into one top-k) recovers
+  the global answer;
+* **build quality rises as slices shrink** — ``knn_k`` scales 16 -> 32:
+  NSSGs built on small random slices of clustered data are beam-weak
+  (full-depth baseline recall drops to ~0.85 on 1000-row slices at the
+  default ``knn_k=16``), and a denser build graph repairs that.  knn_k
+  is a build-time knob only; serving cost tracks ``out_degree``;
+* **constant per-device hot budget** — every shard keeps the same ~80
+  hot rows regardless of S (``index_ratio = 80 * S / N``), the way a
+  real deployment sizes the hot tier per device, so aggregate hot
+  capacity grows with the mesh;
+* **MXU hot seeding** (``hot_mode="mxu"``) — the per-tenant hot tables
+  are small enough to brute-force on the matrix unit, which both seeds
+  the beam exactly and removes the sequential hot-graph walk from the
+  tick.
+
+The 1-shard baseline runs the repo's standard serving configuration
+(``knn_k=16, out_degree=16``, full-depth pools — the same single-shard
+config every other bench in this suite uses) and sits at recall 1.0;
+the sharded rows are tuned to the >= 0.98 recall@10 band.  Per-row
+recall is reported next to qps so the quality/throughput trade is
+visible, not hidden.
+
+All shard counts run on the 8 faked XLA host devices CI provides
+(``--xla_force_host_platform_device_count=8``), which share one CPU
+core, so the measured scaling is pure per-shard work reduction —
+smaller pools, fewer sequential hops.  Two consequences for method:
+
+* ``use_mesh=False``: placing the stacked shard tables on the faked
+  mesh adds real SPMD partitioning overhead but no real parallelism on
+  a shared core, which only obscures the algorithmic effect being
+  measured.  Mesh-placement correctness (sharded ≡ oracle on a live
+  mesh) is covered by ``tests/test_distributed.py``; a real multi-device
+  mesh adds S-way compute parallelism on top of these numbers.
+* interleaved timing: throughput on a shared core drifts between
+  processes and even between compilations, so all four engines are
+  built and warmed first, then timed drains are interleaved round-robin
+  across shard counts (best-of-``ROUNDS`` per count), the same
+  decorrelation scheme bench_obs uses.
+
+Measured per shard count, after a warmup drain (jit compile excluded):
+
+* closed-loop ShardedEngine qps and p99 (waves of 128 mixed lanes,
+  ``tick_hops = min(16, max_hops)`` admission granularity),
+* recall@10 of the merged results against brute-force ground truth,
+* per-shard winner share (how evenly merged top-k mass spreads),
+* ``oracle_exact``: merged stacked-path results ≡ sequential
+  single-shard oracle, bitwise, on a probe batch.
+
+Emits ``BENCH_sharded.json`` with qps/p99/recall per shard count plus
+the 1→8 scaling ratio.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DQFConfig, ZipfWorkload, ground_truth, recall_at_k
+from repro.serving.engine import EngineStats
+from repro.sharding import ShardConfig, ShardedDQF, ShardedEngine
+
+from .common import make_dataset, record_metric
+
+N = 4_000
+D = 32
+N_HISTORY = 8_000
+N_EVAL = 256
+WAVE = 128
+ROUNDS = 4
+SHARD_COUNTS = (1, 2, 4, 8)
+SEED = 17
+
+# Per-shard-count serving policy (see module docstring): build quality
+# (knn_k) rises and serving effort (out_degree, pools, hops) falls as
+# the per-shard slice shrinks; hot budget is constant per device.
+#        S: (knn_k, out_degree, n_entry, hot_pool, full_pool,
+#            max_hops, tick_hops)
+SHARD_CFGS = {
+    1: (16, 16, 8, 32, 64, 64, 16),
+    2: (32, 14, 4, 16, 32, 20, 20),
+    4: (32, 12, 2, 12, 20, 12, 12),
+    8: (32, 8, 2, 12, 14, 6, 6),
+}
+HOT_ROWS_PER_SHARD = 80
+
+
+def _cfg(num_shards: int) -> DQFConfig:
+    knn, od, ne, hp, fp, mh, _ = SHARD_CFGS[num_shards]
+    return DQFConfig(knn_k=knn, out_degree=od, n_entry=ne,
+                     index_ratio=HOT_ROWS_PER_SHARD * num_shards / N,
+                     k=10, hot_pool=hp, full_pool=fp, max_hops=mh,
+                     hot_mode="mxu", n_query_trigger=10 ** 9)
+
+
+def _rows(*rows):
+    for r in rows:
+        print(r)
+    return list(rows)
+
+
+def _drain(eng, queries):
+    """One timed closed-loop drain; returns (qps, p99, results)."""
+    eng.stats = EngineStats()
+    eng._results.clear()
+    rids = eng.submit(queries)
+    t0 = time.perf_counter()
+    out = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    qps = len(out["results"]) / wall
+    return qps, eng.stats.p99_ms(), {r: out["results"][r]["ids"]
+                                     for r in rids}
+
+
+def bench_sharded():
+    x = make_dataset(n=N, d=D, seed=SEED)
+    wl = ZipfWorkload(x, beta=1.2, sigma=0.05, seed=SEED)
+    hist_q, hist_t = wl.sample(N_HISTORY, with_targets=True)
+    queries = wl.sample(N_EVAL)
+    gt = ground_truth(x, queries, 10)
+    probe = queries[:32]
+
+    # build + warm every shard count first, then interleave the timed
+    # rounds so machine drift hits all counts evenly
+    setups = []
+    for S in SHARD_COUNTS:
+        sd = ShardedDQF(_cfg(S),
+                        ShardConfig(num_shards=S, use_mesh=False)).build(x)
+        sd.warm(hist_q, hist_t)
+
+        # the equivalence the merge guarantees: stacked ≡ oracle, bitwise
+        a = sd.search(probe, record=False)
+        b = sd.search_oracle(probe)
+        exact = bool(np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+                     and np.array_equal(np.asarray(a.dists),
+                                        np.asarray(b.dists)))
+
+        eng = ShardedEngine(sd, wave_size=WAVE,
+                            tick_hops=SHARD_CFGS[S][6])
+        eng.submit(queries[:WAVE])          # warmup: compiles the tick
+        eng.run_until_drained()
+        setups.append((S, sd, eng, exact))
+
+    best = {S: (0.0, float("nan"), {}) for S in SHARD_COUNTS}
+    for _ in range(ROUNDS):
+        for S, _sd, eng, _exact in setups:
+            qps, p99, results = _drain(eng, queries)
+            if qps > best[S][0]:
+                best[S] = (qps, p99, results)
+
+    rows = []
+    base_qps = None
+    per_s = {}
+    for S, sd, _eng, exact in setups:
+        qps, p99, results = best[S]
+        got = np.stack([results[r] for r in sorted(results)])
+        rec = recall_at_k(np.where(got < 0, 0, got), gt)
+        # per-shard winner share of the merged top-k mass
+        owners = np.array([sd._owner.get(int(e), -1)
+                           for e in got.ravel() if e >= 0])
+        share = [round(float((owners == s).mean()), 4) for s in range(S)]
+        scaling = qps / base_qps if base_qps else 1.0
+        if base_qps is None:
+            base_qps = qps
+        per_s[S] = qps
+        rows.append(
+            f"sharded/shards_{S},{1e6 / qps:.1f},"
+            f"qps={qps:.0f};p99_ms={p99:.1f};recall={rec:.4f};"
+            f"scaling={scaling:.2f}x;oracle_exact={exact}")
+        record_metric("sharded", f"shards_{S}",
+                      qps=round(qps, 1), p99_ms=round(p99, 2),
+                      recall=round(rec, 4), oracle_exact=exact,
+                      shard_winner_share=share,
+                      scaling_vs_1shard=round(scaling, 3),
+                      knn_k=_cfg(S).knn_k,
+                      out_degree=_cfg(S).out_degree,
+                      full_pool=_cfg(S).full_pool,
+                      max_hops=_cfg(S).max_hops,
+                      hot_rows_per_shard=HOT_ROWS_PER_SHARD,
+                      served=int(len(results)))
+
+    ratio = per_s[SHARD_COUNTS[-1]] / per_s[1]
+    rows.append(f"sharded/scaling_1_to_{SHARD_COUNTS[-1]},0.0,"
+                f"qps_ratio={ratio:.2f}x")
+    record_metric("sharded", "scaling",
+                  qps_1shard=round(per_s[1], 1),
+                  qps_8shard=round(per_s[SHARD_COUNTS[-1]], 1),
+                  qps_ratio_1_to_8=round(ratio, 3))
+    return _rows(*rows)

@@ -27,6 +27,7 @@ def main() -> None:
     from . import bench_kernels as bk
     from . import bench_multitenant as bm
     from . import bench_obs as bo
+    from . import bench_sharded as bsh
     from . import bench_tiering as bt
 
     benches = [
@@ -48,6 +49,7 @@ def main() -> None:
         ("quant", bk.bench_quant_scoring),            # compressed scan
         ("engine", bk.bench_engine),                  # serving layer
         ("obs", bo.bench_obs),                        # flight recorder
+        ("sharded", bsh.bench_sharded),               # scale-out layer
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -3,8 +3,8 @@
 Host-side orchestrator tying together the mutable vector store, the full
 NSSG, the tenant registry (per-tenant query counters + hot indexes), the
 decision tree, and the jitted search kernels.  This is the single-shard
-engine; :mod:`repro.serving.sharded` wraps it with shard_map for the
-multi-device deployment.
+engine; :mod:`repro.sharding` scales it out data-parallel (one full DQF
+per shard on a device mesh, cross-shard top-k merge).
 
 Typical flow::
 

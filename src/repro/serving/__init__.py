@@ -1,4 +1,9 @@
-"""Serving layer: wave engine (continuous batching), sharded search, retrieval glue."""
+"""Serving layer: wave engine (continuous batching), sharded search, retrieval glue.
+
+Data-parallel serving over mutable per-shard VectorStores lives in
+:mod:`repro.sharding` (``ShardedDQF`` / ``ShardedEngine``); the
+``sharded`` module here is the frozen per-segment shard_map path.
+"""
 
 from .engine import WaveEngine  # noqa: F401
 from .retrieval import RetrievalService, KNNLMHead  # noqa: F401

@@ -49,28 +49,46 @@ class ShardedIndex:
 def build_sharded_index(x: np.ndarray, num_shards: int,
                         params: SSGParams | None = None,
                         n_entry: int = 8, seed: int = 0) -> ShardedIndex:
-    """Round-robin rows into segments; independent NSSG per segment."""
+    """Round-robin rows into segments; independent NSSG per segment.
+
+    ``n`` need not divide ``num_shards``: segments differ by at most one
+    row, and shorter segments are padded to the common width with
+    unreachable sentinel rows (distance-1e9 vectors whose adjacency points
+    at the segment sentinel, global id ``-1``) — the external-id mapping
+    in ``offsets`` stays exact for every real row.
+    """
     params = params or SSGParams()
     n, d = x.shape
-    if n % num_shards:
-        raise ValueError(f"n={n} must divide into {num_shards} shards")
-    n_seg = n // num_shards
+    n_seg = -(-n // num_shards)                  # ceil: common segment width
     rng = np.random.default_rng(seed)
     perm = rng.permutation(n)                    # density-balance segments
     xs, adjs, ents, offs = [], [], [], []
-    for s in range(num_shards):
-        rows = np.sort(perm[s * n_seg: (s + 1) * n_seg])
+    R = 0
+    segs = [np.sort(perm[s::num_shards]) for s in range(num_shards)]
+    if min(len(r) for r in segs) < 2:
+        raise ValueError(
+            f"n={n} leaves a segment with < 2 rows over {num_shards} shards")
+    for rows in segs:
+        n_s = rows.size
         seg = np.ascontiguousarray(x[rows], np.float32)
         idx = build_ssg(seg, params, n_entry=n_entry)
-        xs.append(np.concatenate(
-            [seg, np.full((1, d), 1e9, np.float32)], axis=0))
-        adjs.append(np.concatenate(
-            [idx.adj, np.full((1, idx.adj.shape[1]), n_seg, np.int32)]))
+        xp = np.full((n_seg + 1, d), 1e9, np.float32)
+        xp[:n_s] = seg
+        R = max(R, idx.adj.shape[1])
+        ap = np.full((n_seg + 1, idx.adj.shape[1]), n_seg, np.int32)
+        a = idx.adj
+        ap[:n_s] = np.where((a < 0) | (a >= n_s), n_seg, a)
+        xs.append(xp)
+        adjs.append(ap)
         e = idx.entries
         if e.size < n_entry:                    # pad entries to equal width
             e = np.concatenate([e, np.full(n_entry - e.size, e[0], e.dtype)])
         ents.append(e[:n_entry])
-        offs.append(rows)                        # (n_seg,) global ids
+        rp = np.full(n_seg, -1, np.int64)
+        rp[:n_s] = rows                          # global ids; -1 = padding
+        offs.append(rp)
+    adjs = [np.pad(a, ((0, 0), (0, R - a.shape[1])),
+                   constant_values=n_seg) for a in adjs]
     return ShardedIndex(
         x_pad=np.stack(xs), adj_pad=np.stack(adjs),
         entries=np.stack(ents).astype(np.int32),
@@ -84,8 +102,10 @@ def _segment_search(x_pad, adj_pad, entries, rows, queries, *, pool_size,
                          pool_size=pool_size, k=k, max_hops=max_hops)
     n_seg = rows.shape[1]
     local = jnp.minimum(res.ids, n_seg - 1)
-    gids = jnp.where(res.ids >= n_seg, -1, rows[0][local])   # -1 = invalid
-    dists = jnp.where(res.ids >= n_seg, jnp.inf, res.dists)
+    # invalid = pool sentinel OR a remainder-padding row (global id -1)
+    bad = (res.ids >= n_seg) | (rows[0][local] < 0)
+    gids = jnp.where(bad, -1, rows[0][local])
+    dists = jnp.where(bad, jnp.inf, res.dists)
     return gids.astype(jnp.int32), dists
 
 
@@ -127,9 +147,27 @@ def sharded_search(index: ShardedIndex, queries: np.ndarray, mesh: Mesh, *,
 
 
 def merge_with_dropout(per_shard_ids: list, per_shard_dists: list,
-                       alive: list, k: int):
+                       alive: list, k: int, *, registry=None):
     """Host-side degraded merge: skip shards flagged dead (stragglers that
-    timed out / failed hosts).  Returns (ids, dists, coverage)."""
+    timed out / failed hosts).  Returns (ids, dists, coverage).
+
+    With a :class:`repro.obs.MetricsRegistry`, every degraded merge is
+    visible in ``scrape()``/``exposition()``: responding shards count into
+    ``shard_responses_total{shard=i}`` and each dead shard into
+    ``shard_dropout_total``.
+    """
+    if registry is not None:
+        resp = registry.counter(
+            "shard_responses_total",
+            "per-shard responses folded into degraded merges")
+        for s, a in enumerate(alive):
+            if a:
+                resp.inc(1.0, shard=s)
+        dead = len(alive) - sum(bool(a) for a in alive)
+        if dead:
+            registry.counter(
+                "shard_dropout_total",
+                "shards dropped from degraded merges").inc(float(dead))
     ids = [i for i, a in zip(per_shard_ids, alive) if a]
     ds = [d for d, a in zip(per_shard_dists, alive) if a]
     if not ids:

@@ -1,0 +1,18 @@
+"""Data-parallel sharded serving: per-shard VectorStores on a mesh.
+
+The scale-out layer for the paper's 100M-row claim: ``num_shards``
+independent single-shard stacks (mutable store, NSSG, tenants, optional
+disk tier) behind one merged-search front door.  ``ShardedDQF`` is the
+index API (build / search / insert / delete / compact / warm), bit-
+identical to a sequential single-shard oracle; ``ShardedEngine`` is the
+continuous-batching wave server over it.  See
+:mod:`repro.sharding.sharded` for the placement and equivalence story.
+"""
+
+from .engine import ShardedEngine
+from .merge import merge_topk, merge_topk_host
+from .sharded import ShardedDQF
+from .types import ShardConfig
+
+__all__ = ["ShardConfig", "ShardedDQF", "ShardedEngine",
+           "merge_topk", "merge_topk_host"]

@@ -1,0 +1,499 @@
+"""ShardedEngine — continuous-batching waves fanned across shards.
+
+A thin scale-out of :class:`repro.serving.WaveEngine` over a
+:class:`~repro.sharding.ShardedDQF`: the engine holds ONE wave of
+``wave_size`` lanes whose queries are replicated to every shard, and each
+tick is a single jitted call that
+
+* advances the per-shard beam state ``tick_hops`` expansions — the same
+  composed scan (or fused wave-hop, ``cfg.fused``) as the single-shard
+  engine, vmapped over the shard axis of the stacked tables, and
+* merges the full wave's per-shard pools ``(S, W, L)`` into global
+  ``(W, k)`` results on the tie-broken stable bitonic
+  (:func:`repro.sharding.merge.merge_topk`), with tombstoned rows
+  filtered on device via the stacked liveness table — so mid-flight
+  deletes never need a host fallback.
+
+A lane retires when it has gone inactive on **every** shard (per-shard
+no-op semantics of inactive lanes make the extra iterations on
+early-finishing shards exact no-ops); its result rows are read from the
+tick's merged pool, and its global external ids feed the owning shards'
+tenant counters **once** through :meth:`ShardedDQF.record` — each shard's
+Alg-2 clock advances by the query count, same cadence as a single-shard
+deployment.
+
+Serving under churn mirrors the single-shard engine: insert/delete swap
+the stacked tables between ticks (shapes move only on capacity growth,
+which re-pads the stacked state in place); compaction requires a drained
+wave, and with ``auto_compact`` the engine drains and runs
+:meth:`ShardedDQF.compact` itself — which is also where Quake-style
+traffic rebalancing migrates hot rows between shards.
+
+Tiered or quantized shards are rejected up front: their host-faulting
+score tables can't ride the stacked vmapped tick (serve those through
+:meth:`ShardedDQF.search`).
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import beam_search as bs
+from repro.core.decision_tree import predict_jax
+from repro.core.dynamic_search import _seed_full_state, hot_phase_stacked
+from repro.core.features import feature_matrix, hot_features
+from repro.core.types import INF_DIST, HotFeatures, PoolState, SearchStats
+from repro.obs import ObsConfig
+from repro.serving.engine import LATENCY_WINDOW, EngineStats
+from repro.tenancy import DEFAULT_TENANT
+from repro.tenancy.registry import _PAD_VALUE
+
+from .merge import merge_topk
+from .sharded import ShardedDQF
+
+__all__ = ["ShardedEngine"]
+
+
+class ShardedEngine:
+    """Continuous-batching engine over a built :class:`ShardedDQF`."""
+
+    def __init__(self, sharded: ShardedDQF, *, wave_size: int = 64,
+                 tick_hops: int = 8,
+                 latency_window: int = LATENCY_WINDOW,
+                 auto_compact: bool = True, compact_ratio: float = 0.3,
+                 obs: Optional[ObsConfig] = None):
+        sharded._require()
+        if not sharded._stacked_ok:
+            raise ValueError(
+                "ShardedEngine needs resident float32 shards — tiered or "
+                "quantized shards serve through ShardedDQF.search()")
+        self.sharded = sharded
+        self.cfg = sharded.cfg
+        self.S = sharded.num_shards
+        self.wave = wave_size
+        self.tick_hops = tick_hops
+        self.auto_compact = auto_compact
+        self.compact_ratio = compact_ratio
+        self.queue: collections.deque = collections.deque()
+        self.stats = EngineStats(
+            latencies_ms=collections.deque(maxlen=latency_window),
+            queue_wait_ms=collections.deque(maxlen=latency_window))
+        self.obs = obs if obs is not None else ObsConfig()
+        self.registry = sharded.registry if self.obs.enabled else None
+        if self.registry is not None:
+            self.registry.register_callback("sharded_engine",
+                                            self._collect_metrics)
+        self._d = sharded.shards[0].dqf.store.d
+        self._stk = sharded._sync_stacked()
+        self._cap = sharded._stk_cap
+        self._epoch_key = sharded._epoch_key()
+        self._remap_key = self._remap_epochs()
+        self._tick_fn = self._build_tick()
+        self._seed_fn = None            # built lazily, keyed on common cap
+        self._seed_cap = -1
+        self._hot_key = None            # common-padded registry stack cache
+        self._hot_stk = None
+        self._lane_meta = [None] * wave_size
+        self._results: dict = {}
+        self._state = None
+        self._merged = None         # (W, k) ids/dists from the last tick
+        self._draining = False
+        self._next_rid = 0
+
+    # ------------------------------------------------------------ jitted ops
+    def _build_tick(self):
+        cfg = self.cfg
+        tree = (self.sharded.tree.arrays
+                if self.sharded.tree is not None else None)
+        tick_hops = self.tick_hops
+
+        if cfg.fused:
+            from repro.kernels import ops as kops
+
+            def shard_tick(state, table, adj_pad, live_pad, queries,
+                           hot_first, hot_ratio, evals_done):
+                hs = kops.fused_hop(
+                    bs.to_hop_state(state, evals_done=evals_done),
+                    adj_pad, queries, live_pad, table, tree,
+                    hot_first, hot_ratio, hops=tick_hops,
+                    max_hops=cfg.max_hops, k=cfg.k,
+                    eval_gap=cfg.eval_gap, add_step=0,
+                    tree_depth=cfg.tree_depth)
+                return bs.from_hop_state(hs), hs.evals_done
+        else:
+            def shard_tick(state, table, adj_pad, live_pad, queries,
+                           hot_first, hot_ratio, evals_done):
+                def one(carry, _):
+                    s, ev = carry
+                    s = bs.expand_step(table, adj_pad, queries, s, live_pad)
+                    s = s._replace(
+                        active=s.active & (s.stats.hops < cfg.max_hops))
+                    if tree is not None:
+                        due = (s.stats.dist_count // cfg.eval_gap) > ev
+                        due = due & s.active
+                        feats = feature_matrix(
+                            HotFeatures(hot_first, hot_ratio), s.pool,
+                            s.stats, cfg.k)
+                        stop = (predict_jax(tree, feats, cfg.tree_depth)
+                                < 0.5) & due
+                        ev = jnp.where(
+                            due, s.stats.dist_count // cfg.eval_gap, ev)
+                        s = s._replace(
+                            active=s.active & ~stop,
+                            stats=s.stats._replace(
+                                terminated_early=s.stats.terminated_early
+                                | (stop & s.active)))
+                    return (s, ev), None
+
+                (state, evals_done), _ = jax.lax.scan(
+                    one, (state, evals_done), None, length=tick_hops)
+                return state, evals_done
+
+        # shard axis leads every per-shard leaf; the wave's queries are
+        # replicated (in_axes=None)
+        vtick = jax.vmap(shard_tick,
+                         in_axes=(0, 0, 0, 0, None, 0, 0, 0))
+
+        def fn(state, x_pad, adj_pad, live_pad, gid_pad, queries,
+               hot_first, hot_ratio, evals):
+            state, evals = vtick(state, x_pad, adj_pad, live_pad, queries,
+                                 hot_first, hot_ratio, evals)
+            # cross-shard merge of the FULL wave (S, W, L) → (W, k): gid
+            # gather maps per-shard rows to global ids, the stacked live
+            # table drops rows tombstoned mid-flight, and invalid slots
+            # (per-shard sentinels) carry gid -1.
+            ids = state.pool.ids
+            g = jax.vmap(lambda g_, i_: g_[i_])(gid_pad, ids)
+            alive = jax.vmap(lambda l_, i_: l_[i_])(live_pad, ids)
+            bad = (g < 0) | ~alive
+            d = jnp.where(bad, INF_DIST, state.pool.dists)
+            g = jnp.where(bad, -1, g)
+            m_ids, m_dists = merge_topk(d, g, self.cfg.k)
+            return state, evals, m_ids, m_dists
+
+        return jax.jit(fn)
+
+    # ---------------------------------------------------------------- public
+    def submit(self, queries: np.ndarray, *,
+               tenant: str = DEFAULT_TENANT) -> list:
+        """Enqueue queries for one tenant; returns their request ids."""
+        for sh in self.sharded.shards:
+            t = sh.dqf.tenants.get(tenant)      # unknown → KeyError
+            if t.hot is None:
+                raise RuntimeError(
+                    f"tenant {tenant!r} has no hot index on shard "
+                    f"{sh.index} — warm() it before serving")
+        gen = self.sharded.shards[0].dqf.tenants.get(tenant).gen
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim != 2 or queries.shape[1] != self._d:
+            raise ValueError(
+                f"queries must be (B, {self._d}), got {queries.shape}")
+        ids = []
+        for q in queries:
+            rid = self._next_rid
+            self._next_rid += 1
+            self.queue.append((rid, q, time.perf_counter(), tenant, gen))
+            ids.append(rid)
+        return ids
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> dict:
+        t0 = time.perf_counter()
+        self._init_wave()
+        while (self.queue or self._any_live()) \
+                and self.stats.ticks < max_ticks:
+            self._tick()
+        if self._draining and not self._any_live():
+            self._do_compact()
+        wall = time.perf_counter() - t0
+        return {"results": self._results, "wall_s": wall,
+                "qps": self.stats.qps(wall), "p99_ms": self.stats.p99_ms(),
+                "queue_wait_p99_ms": self.stats.queue_wait_p99_ms(),
+                "straggled": self.stats.straggled,
+                "compactions": self.stats.compactions}
+
+    def scrape(self) -> dict:
+        return self.sharded.scrape()
+
+    def _collect_metrics(self) -> dict:
+        s = self.stats
+        return {"sharded_engine_completed_total": float(s.completed),
+                "sharded_engine_straggled_total": float(s.straggled),
+                "sharded_engine_dropped_total": float(s.dropped),
+                "sharded_engine_ticks_total": float(s.ticks),
+                "sharded_engine_compactions_total": float(s.compactions),
+                "sharded_engine_queue_depth": float(len(self.queue)),
+                "sharded_engine_live_lanes": float(
+                    sum(m is not None for m in self._lane_meta)),
+                "sharded_engine_wave_size": float(self.wave)}
+
+    # -------------------------------------------------------------- internals
+    def _any_live(self) -> bool:
+        return any(m is not None for m in self._lane_meta)
+
+    def _remap_epochs(self) -> tuple:
+        return tuple(sh.dqf.store.remap_epoch
+                     for sh in self.sharded.shards)
+
+    def _maybe_refresh(self):
+        """Re-capture the stacked tables after any shard mutated."""
+        key = self.sharded._epoch_key()
+        if key == self._epoch_key:
+            return
+        if self._remap_epochs() != self._remap_key and self._any_live():
+            raise RuntimeError(
+                "a shard compacted while lanes are in flight — drain the "
+                "engine before calling compact()")
+        old_cap = self._cap
+        self._stk = self.sharded._sync_stacked()
+        if self._state is not None and self.sharded._stk_cap != old_cap:
+            self._state = self._grow_state(self._state, old_cap,
+                                           self.sharded._stk_cap)
+        self._cap = self.sharded._stk_cap
+        self._epoch_key = key
+        self._remap_key = self._remap_epochs()
+
+    def _grow_state(self, state, old_cap: int, new_cap: int):
+        """Re-pad the stacked wave state after common-capacity growth."""
+        seen = np.asarray(state.seen)               # (S, W, old_cap+1)
+        S, W = seen.shape[:2]
+        grown = np.zeros((S, W, new_cap + 1), bool)
+        grown[:, :, :old_cap] = seen[:, :, :old_cap]
+        grown[:, :, new_cap] = True
+        ids = np.asarray(state.pool.ids)
+        ids = np.where(ids == old_cap, new_cap, ids).astype(np.int32)
+        return state._replace(
+            pool=state.pool._replace(ids=jnp.asarray(ids)),
+            seen=jnp.asarray(grown))
+
+    def _zero_state(self) -> bs.BeamState:
+        S, W, L = self.S, self.wave, self.cfg.full_pool
+        n = self._cap
+        pool = PoolState(
+            ids=jnp.full((S, W, L), n, jnp.int32),
+            dists=jnp.full((S, W, L), INF_DIST, jnp.float32),
+            expanded=jnp.zeros((S, W, L), bool))
+        seen = jnp.zeros((S, W, n + 1), bool).at[:, :, n].set(True)
+        stats = SearchStats(
+            dist_count=jnp.zeros((S, W), jnp.int32),
+            update_count=jnp.zeros((S, W), jnp.int32),
+            hops=jnp.zeros((S, W), jnp.int32),
+            terminated_early=jnp.zeros((S, W), bool))
+        return bs.BeamState(pool, seen, stats, jnp.zeros((S, W), bool))
+
+    def _init_wave(self):
+        self._maybe_refresh()
+        S, W, d = self.S, self.wave, self._d
+        self._queries = np.zeros((W, d), np.float32)
+        self._tidx = np.zeros((S, W), np.int32)
+        self._hot_first = jnp.zeros((S, W), jnp.float32)
+        self._hot_ratio = jnp.zeros((S, W), jnp.float32)
+        self._evals = jnp.zeros((S, W), jnp.int32)
+        self._state = self._zero_state()
+        self._refill()
+
+    def _hot_stacks(self):
+        """Common-padded ``(S, T, H+1, …)`` registry hot stacks (cached).
+
+        Each shard's :meth:`TenantRegistry.stacked` tables are re-padded
+        to shared T/H/R/E so one vmapped hot phase seeds every shard;
+        sentinel remaps (native ``H_s`` → common ``H``) keep the per-shard
+        hot searches bit-identical to their native-shape runs (entry and
+        adjacency slots at the sentinel score INF and never enter the
+        frontier).  Rebuilt only when a shard's stack or the common
+        capacity changes.
+        """
+        stks = [sh.dqf.tenants.stacked(sh.dqf.store)
+                for sh in self.sharded.shards]
+        key = tuple(sh.dqf.tenants._stack_key
+                    for sh in self.sharded.shards) + (self._cap,)
+        if key == self._hot_key:
+            return self._hot_stk
+        S, d = self.S, self._d
+        T = max(s.x.shape[0] for s in stks)
+        H = max(s.x.shape[1] - 1 for s in stks)
+        R = max(s.adj.shape[2] for s in stks)
+        E = max(s.entries.shape[1] for s in stks)
+        xs = np.full((S, T, H + 1, d), _PAD_VALUE, np.float32)
+        adjs = np.full((S, T, H + 1, R), H, np.int32)
+        ents = np.full((S, T, E), H, np.int32)
+        mask = np.zeros((S, T, H + 1), bool)
+        hids = np.full((S, T, H + 1), self._cap, np.int32)
+        for s, stk in enumerate(stks):
+            t, h1 = stk.x.shape[:2]
+            h = h1 - 1
+            a = np.asarray(stk.adj)
+            e = np.asarray(stk.entries)
+            xs[s, :t, :h1] = np.asarray(stk.x)
+            adjs[s, :t, :h1, :a.shape[2]] = np.where(a >= h, H, a)
+            ents[s, :t, :e.shape[1]] = np.where(e >= h, H, e)
+            mask[s, :t, :h1] = np.asarray(stk.mask)
+            hids[s, :t, :h1] = np.asarray(stk.ids)
+        self._hot_stk = tuple(jnp.asarray(v)
+                              for v in (xs, adjs, ents, mask, hids))
+        self._hot_key = key
+        return self._hot_stk
+
+    def _build_seed(self, cap: int):
+        """One jitted fixed-shape refill: vmapped hot phase + full-state
+        seeding for ALL wave lanes, spliced into the live state by a lane
+        mask (occupied lanes keep their in-flight state untouched)."""
+        cfg = self.cfg
+
+        def shard_seed(xs, adjs, ents, mask, hids, tidx, live, q):
+            pool, _ = hot_phase_stacked(
+                xs, adjs, ents, mask, tidx, q, pool_size=cfg.hot_pool,
+                max_hops=cfg.max_hops, mode=cfg.hot_mode)
+            hf = hot_features(pool, cfg.k)
+            # seed against the COMMON capacity sentinel and this shard's
+            # common-padded liveness (INF-dist hot sentinels land on cap
+            # first, so native-capacity padding never leaks)
+            seeded = _seed_full_state(pool, hids[tidx], cap,
+                                      cfg.full_pool, live)
+            return seeded, hf.first, hf.first_div_kth
+
+        vseed = jax.vmap(shard_seed,
+                         in_axes=(0, 0, 0, 0, 0, 0, 0, None))
+
+        def fn(state, evals, hot_first, hot_ratio, xs, adjs, ents, mask,
+               hids, tidx, live_pad, queries, refill):
+            seeded, first, ratio = vseed(xs, adjs, ents, mask, hids,
+                                         tidx, live_pad, queries)
+
+            def mix(new, old):
+                m = refill.reshape((1, -1) + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+
+            state = jax.tree.map(mix, seeded, state)
+            m = refill[None, :]
+            return (state, jnp.where(m, 0, evals),
+                    jnp.where(m, first, hot_first),
+                    jnp.where(m, ratio, hot_ratio))
+
+        return jax.jit(fn)
+
+    def _refill(self):
+        """Seed free lanes from the queue in ONE jitted dispatch.
+
+        The hot phase + phase-2 seeding runs for the whole wave at a fixed
+        shape (occupied lanes compute throwaway seeds and are masked out on
+        splice), so refills never recompile for a new batch size and cost
+        one device round-trip regardless of the shard count.
+        """
+        reg0 = self.sharded.shards[0].dqf.tenants
+        free = [i for i, m in enumerate(self._lane_meta) if m is None]
+        reqs = []
+        while self.queue and len(reqs) < len(free):
+            r = self.queue.popleft()
+            name, gen = r[3], r[4]
+            if name in reg0 and reg0.get(name).gen == gen:
+                reqs.append(r)
+            else:
+                self._results[r[0]] = self._dropped_result(name)
+                self.stats.dropped += 1
+        if not reqs:
+            return
+        if self._seed_fn is None or self._seed_cap != self._cap:
+            self._seed_fn = self._build_seed(self._cap)
+            self._seed_cap = self._cap
+        xs, adjs, ents, mask, hids = self._hot_stacks()
+        lanes = free[:len(reqs)]
+        refill = np.zeros(self.wave, bool)
+        t_seed = time.perf_counter()
+        for j, lane in enumerate(lanes):
+            refill[lane] = True
+            self._queries[lane] = reqs[j][1]
+            for s, sh in enumerate(self.sharded.shards):
+                self._tidx[s, lane] = sh.dqf.tenants.slot_of(reqs[j][3])
+            rid, t_in = reqs[j][0], reqs[j][2]
+            self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
+                                     reqs[j][4])
+            self.stats.queue_wait_ms.append((t_seed - t_in) * 1e3)
+        (self._state, self._evals, self._hot_first,
+         self._hot_ratio) = self._seed_fn(
+            self._state, self._evals, self._hot_first, self._hot_ratio,
+            xs, adjs, ents, mask, hids, jnp.asarray(self._tidx),
+            self._stk["live_pad"], jnp.asarray(self._queries),
+            jnp.asarray(refill))
+
+    def _dropped_result(self, tenant: str) -> dict:
+        k = self.cfg.k
+        return {"ids": np.full(k, -1, np.int64),
+                "dists": np.full(k, np.inf, np.float32),
+                "hops": 0, "tenant": tenant, "dropped": True}
+
+    def _do_compact(self):
+        """Drained compaction (and Quake-style rebalance) at a safe tick
+        boundary; the wave state is rebuilt against the new stacked maps."""
+        self.sharded.compact()
+        self.stats.compactions += 1
+        self._draining = False
+        self._stk = self.sharded._sync_stacked()
+        self._cap = self.sharded._stk_cap
+        self._epoch_key = self.sharded._epoch_key()
+        self._remap_key = self._remap_epochs()
+        self._state = self._zero_state()
+
+    def _tick(self):
+        self._maybe_refresh()
+        state, evals, m_ids, m_dists = self._tick_fn(
+            self._state, self._stk["x_pad"], self._stk["adj_pad"],
+            self._stk["live_pad"], self._stk["gid_pad"],
+            jnp.asarray(self._queries), self._hot_first,
+            self._hot_ratio, self._evals)
+        self._state = state
+        self._evals = evals
+        self.stats.ticks += 1
+        active = np.asarray(state.active)           # (S, W)
+        lane_live = active.any(axis=0)
+        now = time.perf_counter()
+        retiring = [lane for lane, meta in enumerate(self._lane_meta)
+                    if meta is not None and not lane_live[lane]]
+        if retiring:
+            self._retire_lanes(state, np.asarray(m_ids),
+                               np.asarray(m_dists), retiring, now)
+        if self.auto_compact and not self._draining and any(
+                sh.dqf.store.should_compact(self.compact_ratio)
+                for sh in self.sharded.shards):
+            self._draining = True
+        if self._draining:
+            if not self._any_live():
+                self._do_compact()
+                self._refill()
+            return
+        self._refill()
+
+    def _retire_lanes(self, state, m_ids, m_dists, retiring, now):
+        """Harvest merged results for every lane retiring this tick."""
+        hops_all = np.asarray(state.stats.hops)     # (S, W)
+        feed = {}                                   # (tenant, gen) -> [ids]
+        for lane in retiring:
+            rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
+            ids = m_ids[lane].astype(np.int64)
+            dists = np.where(ids < 0, np.inf,
+                             m_dists[lane]).astype(np.float32)
+            hops = int(hops_all[:, lane].max())
+            self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
+                                  "tenant": tenant}
+            self.stats.completed += 1
+            self.stats.total_hops += int(hops_all[:, lane].sum())
+            if hops >= self.cfg.max_hops:
+                self.stats.straggled += 1
+            self.stats.latencies_ms.append((now - t_in) * 1e3)
+            self._lane_meta[lane] = None
+            feed.setdefault((tenant, gen), []).append(ids)
+        # merged global ids feed the owning shards' counters ONCE per
+        # query: every shard's Alg-2 clock sees one query per lane,
+        # non-owned slots arrive as -1 and are ignored by the counter.
+        # Lanes are batched per (tenant, gen) so a full wave costs one
+        # record + one rebuild check per tenant, not per lane.
+        reg0 = self.sharded.shards[0].dqf.tenants
+        for (tenant, gen), rows in feed.items():
+            if tenant in reg0 and reg0.get(tenant).gen == gen:
+                self.sharded.record(np.stack(rows), tenant=tenant)
+                self.sharded.maybe_rebuild_hot(tenant=tenant)

@@ -1,0 +1,62 @@
+"""Cross-shard top-k merge on the tie-broken stable bitonic network.
+
+Per-shard searches return candidates in *shard-major* order: shard 0's
+pool (already sorted ascending), then shard 1's, and so on.  The merge
+ranks that concatenation by distance with ties broken by position —
+exactly the permutation a stable argsort produces — so the device merge
+(:func:`merge_topk`, built on :func:`repro.kernels.bitonic.
+bitonic_sort_stable`) and the host oracle (:func:`merge_topk_host`,
+``np.argsort(kind="stable")``) are bit-identical, which is what makes the
+sharded deployment provably equivalent to a single-shard oracle that
+searches every shard sequentially and merges on the host.
+
+Candidates are (global id, distance) pairs; invalid slots (per-shard pool
+padding, tombstoned rows) carry id ``-1`` and distance ``INF_DIST``.  The
+pow2 padding the network needs uses ``+inf`` keys, which sort strictly
+after every real ``INF_DIST`` slot.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitonic import bitonic_sort_stable, next_pow2
+
+__all__ = ["merge_topk", "merge_topk_host"]
+
+
+def merge_topk(dists: jnp.ndarray, gids: jnp.ndarray, k: int):
+    """Merge per-shard candidate lists into one global top-k (device).
+
+    ``dists``/``gids`` are ``(S, B, m)``: shard-major candidates per query
+    (each shard's ``m`` slots sorted ascending, invalid slots ``INF``/
+    ``-1``).  Returns ``(ids, dists)`` of shape ``(B, k)`` — the stable
+    top-k of the shard-major concatenation, bit-identical to
+    :func:`merge_topk_host` on the same inputs.
+    """
+    S, B, m = dists.shape
+    cat_d = jnp.transpose(dists, (1, 0, 2)).reshape(B, S * m)
+    cat_g = jnp.transpose(gids, (1, 0, 2)).reshape(B, S * m)
+    P = next_pow2(max(S * m, k))
+    pad = P - S * m
+    if pad:
+        cat_d = jnp.concatenate(
+            [cat_d, jnp.full((B, pad), jnp.inf, cat_d.dtype)], axis=1)
+        cat_g = jnp.concatenate(
+            [cat_g, jnp.full((B, pad), -1, cat_g.dtype)], axis=1)
+    sd, sg = bitonic_sort_stable(cat_d, cat_g)
+    return sg[:, :k], sd[:, :k]
+
+
+def merge_topk_host(per_shard_ids, per_shard_dists, k: int):
+    """Single-shard oracle merge: stable argsort over the shard-major
+    concatenation on the host.  ``per_shard_ids``/``per_shard_dists`` are
+    sequences of ``(B, m)`` arrays (one per shard, shard-major order).
+    """
+    cat_i = np.concatenate([np.asarray(a) for a in per_shard_ids], axis=1)
+    cat_d = np.concatenate(
+        [np.asarray(d, np.float32) for d in per_shard_dists], axis=1)
+    order = np.argsort(cat_d, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(cat_i, order, 1),
+            np.take_along_axis(cat_d, order, 1))

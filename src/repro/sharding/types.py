@@ -1,0 +1,46 @@
+"""Configuration for the data-parallel sharded serving layer."""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ShardConfig"]
+
+
+@dataclasses.dataclass
+class ShardConfig:
+    """How a :class:`~repro.sharding.ShardedDQF` splits and serves rows.
+
+    ``num_shards`` per-shard VectorStores are built from a density-balancing
+    permutation of the input rows (identity at ``num_shards == 1``, so the
+    single-shard deployment is bit-identical to a plain :class:`DQF`).
+
+    ``use_mesh`` controls device placement of the stacked per-shard tables:
+    ``"auto"`` lays them out over a ``jax.sharding`` mesh when the process
+    has at least ``num_shards`` devices (e.g. under
+    ``--xla_force_host_platform_device_count=8``), ``True`` requires one,
+    ``False`` keeps the stacked tables on the default device (the jitted
+    search is the same either way — placement only moves where each shard's
+    slice lives).
+
+    Rebalancing (Quake-style adaptive partitioning): at :meth:`compact`
+    time, if one shard's observed preference mass exceeds
+    ``rebalance_imbalance``× the coldest shard's, up to
+    ``rebalance_max_rows`` of its hottest rows migrate to the coldest shard
+    through the stores' delete/insert remap hooks, carrying their external
+    ids and per-tenant counter mass with them.
+    """
+
+    num_shards: int = 1
+    seed: int = 0                    # partition permutation seed
+    axis: str = "shard"              # mesh axis name
+    use_mesh: object = "auto"        # "auto" | True | False
+    rebalance: bool = True
+    rebalance_imbalance: float = 2.0
+    rebalance_max_rows: int = 64
+
+    def __post_init__(self):
+        if self.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {self.num_shards}")
+        if self.rebalance_imbalance <= 1.0:
+            raise ValueError("rebalance_imbalance must be > 1")

@@ -103,6 +103,50 @@ def test_sharded_dqf_search_recall():
     assert out["recall"] > 0.9
 
 
+def test_sharded_dqf_mesh_parity_8dev():
+    """ShardedDQF on a real 8-device shard mesh ≡ single-shard oracle,
+    bitwise, and the stacked tables are actually placed on the mesh."""
+    code = textwrap.dedent("""
+        import json, numpy as np
+        import jax
+        from repro.core import DQFConfig, ground_truth, recall_at_k
+        from repro.sharding import ShardConfig, ShardedDQF, ShardedEngine
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((1200, 16)).astype(np.float32)
+        q = x[rng.choice(1200, 32, replace=False)] + \\
+            0.05 * rng.standard_normal((32, 16)).astype(np.float32)
+        cfg = DQFConfig(dim=16, k=5, hot_pool=16, full_pool=16,
+                        max_hops=100, n_query_trigger=10_000)
+        sd = ShardedDQF(cfg, ShardConfig(num_shards=8,
+                                         use_mesh=True)).build(x)
+        sd.warm(q[:8])
+        stk = sd._sync_stacked()
+        n_dev = len(stk["x_pad"].sharding.device_set)
+        a = sd.search(q, record=False)
+        b = sd.search_oracle(q)
+        ids_eq = bool(np.array_equal(np.asarray(a.ids), np.asarray(b.ids)))
+        d_eq = bool(np.array_equal(np.asarray(a.dists),
+                                   np.asarray(b.dists)))
+        gt = ground_truth(x, q, 5)
+        rec = recall_at_k(np.asarray(a.ids), gt)
+        eng = ShardedEngine(sd, wave_size=8, tick_hops=4)
+        rids = eng.submit(q)
+        out = eng.run_until_drained()
+        got = np.stack([out["results"][r]["ids"] for r in rids])
+        rec_eng = recall_at_k(got, gt)
+        print(json.dumps({"devices": n_dev, "ids_eq": ids_eq,
+                          "d_eq": d_eq, "recall": rec,
+                          "engine_recall": rec_eng,
+                          "completed": eng.stats.completed}))
+    """)
+    out = run_subprocess(code, devices=8)
+    assert out["devices"] == 8          # stacked tables live on the mesh
+    assert out["ids_eq"] and out["d_eq"]
+    assert out["recall"] > 0.85
+    assert out["completed"] == 32
+    assert out["engine_recall"] > out["recall"] - 0.1
+
+
 def test_spmd_train_step_runs():
     """Real sharded train step on a 2x2 fake mesh, loss decreases."""
     code = textwrap.dedent("""

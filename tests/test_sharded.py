@@ -1,0 +1,314 @@
+"""repro.sharding: cross-shard merge parity, churn, rebalancing, engine.
+
+The contract under test: a ShardedDQF's one-jit stacked search (vmapped
+per-shard dual-index search + device bitonic merge) is **bit-identical**
+to the single-shard oracle (sequential per-shard searches + host stable
+merge), at 1/2/4 shards, including under insert/delete churn and mixed
+tenants — and at 1 shard it is bit-identical to a plain DQF.  Multi-
+device placement of the same path runs in tests/test_distributed.py
+under ``--xla_force_host_platform_device_count=8``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ground_truth, recall_at_k
+from repro.core.dqf import DQF
+from repro.core.ssg import SSGParams
+from repro.core.types import DQFConfig
+from repro.obs import MetricsRegistry
+from repro.serving.sharded import build_sharded_index, merge_with_dropout
+from repro.sharding import (ShardConfig, ShardedDQF, ShardedEngine,
+                            merge_topk, merge_topk_host)
+
+D = 16
+CFG = dict(dim=D, k=5, hot_pool=16, full_pool=32, max_hops=100,
+           n_query_trigger=10_000)
+
+
+def _data(n=600, nq=32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, D)).astype(np.float32)
+    q = x[rng.choice(n, nq, replace=False)] \
+        + 0.05 * rng.standard_normal((nq, D)).astype(np.float32)
+    return x, q
+
+
+def _built(num_shards, n=600, seed=0, **over):
+    x, q = _data(n=n, seed=seed)
+    cfg = DQFConfig(**{**CFG, **over})
+    sd = ShardedDQF(cfg, ShardConfig(num_shards=num_shards)).build(x)
+    sd.warm(q[:8])
+    return sd, x, q
+
+
+def _assert_parity(sd, q, tenant=None):
+    kw = {} if tenant is None else {"tenant": tenant}
+    a = sd.search(q, record=False, **kw)
+    b = sd.search_oracle(q, **kw)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    return a
+
+
+# --------------------------------------------------------------- unit: merge
+def test_merge_topk_matches_host_oracle():
+    rng = np.random.default_rng(3)
+    S, B, m, k = 5, 7, 6, 4
+    dists = np.sort(rng.random((S, B, m)).astype(np.float32), axis=-1)
+    gids = rng.integers(0, 1000, (S, B, m)).astype(np.int32)
+    dists[0, :, -2:] = np.inf                       # per-shard padding slots
+    gids[0, :, -2:] = -1
+    ids_d, d_d = merge_topk(dists, gids, k)
+    ids_h, d_h = merge_topk_host([gids[s] for s in range(S)],
+                                 [dists[s] for s in range(S)], k)
+    np.testing.assert_array_equal(np.asarray(ids_d), ids_h)
+    np.testing.assert_array_equal(np.asarray(d_d), d_h)
+
+
+def test_merge_topk_stable_tie_break():
+    """Equal keys resolve shard-major, matching the stable host argsort."""
+    d = np.zeros((3, 2, 4), np.float32)             # all distances tie
+    g = np.arange(24, dtype=np.int32).reshape(3, 2, 4)
+    ids_d, _ = merge_topk(d, g, 6)
+    ids_h, _ = merge_topk_host(list(g), list(d), 6)
+    np.testing.assert_array_equal(np.asarray(ids_d), ids_h)
+
+
+# ------------------------------------------------------------ search parity
+def test_single_shard_bitwise_equals_plain_dqf():
+    x, q = _data()
+    cfg = DQFConfig(**CFG)
+    sd = ShardedDQF(cfg, 1).build(x)
+    ref = DQF(cfg).build(x)
+    sd.warm(q[:8])
+    ref.warm(q[:8])
+    a = sd.search(q, record=False)
+    b = ref.search(q, record=False)
+    np.testing.assert_array_equal(
+        np.asarray(a.ids), ref.to_external(np.asarray(b.ids)))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_stacked_matches_oracle(num_shards):
+    sd, x, q = _built(num_shards)
+    res = _assert_parity(sd, q)
+    gt = ground_truth(x, q, 5)
+    assert recall_at_k(np.asarray(res.ids), gt) > 0.85
+
+
+def test_parity_with_tree():
+    sd, x, q = _built(3)
+    sd.fit_tree(q)
+    _assert_parity(sd, q)
+
+
+def test_parity_under_churn():
+    sd, x, q = _built(4)
+    rng = np.random.default_rng(9)
+    ext_new = sd.insert(rng.standard_normal((40, D)).astype(np.float32))
+    assert ext_new.size == 40
+    dead = np.arange(0, 60, 7)
+    sd.delete(dead)
+    res = _assert_parity(sd, q)
+    assert not (set(np.asarray(res.ids).ravel().tolist())
+                & set(dead.tolist()))
+    # compact remaps every shard internally; external results unchanged
+    before = np.asarray(sd.search(q, record=False).ids)
+    sd.compact()
+    _assert_parity(sd, q)
+    np.testing.assert_array_equal(
+        before, np.asarray(sd.search(q, record=False).ids))
+
+
+def test_mixed_tenant_parity():
+    sd, x, q = _built(3)
+    sd.warm(q[:8], tenant="a")
+    sd.warm(q[8:16], tenant="b")
+    for t in ("a", "b"):
+        _assert_parity(sd, q, tenant=t)
+
+
+def test_insert_balances_and_delete_routes():
+    sd, x, q = _built(4)
+    counts0 = [sh.dqf.store.live_count for sh in sd.shards]
+    sd.insert(np.random.default_rng(5).standard_normal(
+        (20, D)).astype(np.float32))
+    counts1 = [sh.dqf.store.live_count for sh in sd.shards]
+    assert sum(counts1) == sum(counts0) + 20
+    assert max(counts1) - min(counts1) <= max(counts0) - min(counts0) + 1
+    with pytest.raises(KeyError):
+        sd.delete([10 ** 6])
+
+
+def test_counters_fed_once_per_query():
+    """Every shard's Alg-2 clock advances by the query count, not by the
+    per-shard result count — the cadence of a single-shard deployment."""
+    sd, x, q = _built(3)
+    base = [sh.dqf.tenants.default.counter.since_rebuild
+            for sh in sd.shards]
+    sd.search(q, record=True, auto_rebuild=False)
+    for sh, b in zip(sd.shards, base):
+        assert sh.dqf.tenants.default.counter.since_rebuild \
+            == b + q.shape[0]
+
+
+# -------------------------------------------------------------- rebalancing
+def test_compact_rebalances_hot_rows():
+    """Traffic concentrated on one shard's rows migrates them at
+    compaction (Quake-style, driven by the obs head-mass gauges)."""
+    sd, x, q = _built(3, n=900)
+    donor_ext = sd.shards[0].dqf.store.ext_ids[:5].astype(np.int64)
+    # a preference head pinned to shard 0: every query's merged winners
+    # land on the same few donor rows
+    for _ in range(5):
+        sd.record(np.tile(donor_ext, (20, 1)))
+    sd.rebuild_hot()                       # head-mass gauges go live
+    owner_before = dict(sd._owner)
+    rep = sd.compact()
+    assert rep["rebalanced_rows"] > 0
+    moved = [e for e, s in sd._owner.items() if owner_before[e] != s]
+    assert len(moved) == rep["rebalanced_rows"]
+    assert len({owner_before[e] for e in moved}) == 1  # one donor shard
+    assert {owner_before[e] for e in moved} == {0}
+    assert sd.scrape()["shard_rebalanced_rows_total"] \
+        == rep["rebalanced_rows"]
+    # moved rows still resolve and results stay oracle-exact
+    _assert_parity(sd, q)
+    res = sd.search(np.ascontiguousarray(x[donor_ext]), record=False)
+    assert set(donor_ext.tolist()) <= set(np.asarray(res.ids)[:, 0].tolist())
+
+
+# ------------------------------------------------- legacy segment index fix
+def test_build_sharded_index_remainder():
+    """n % num_shards != 0 pads the short segments with unreachable
+    sentinel rows; the external-id mapping stays exact."""
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((1003, 12)).astype(np.float32)
+    idx = build_sharded_index(x, 4, SSGParams(knn_k=10, out_degree=10))
+    assert idx.x_pad.shape[1] == 252           # ceil(1003/4) + sentinel
+    offs = idx.offsets
+    real = offs[offs >= 0]
+    assert np.array_equal(np.sort(real), np.arange(1003))
+    assert (offs < 0).sum() == 4 * 251 - 1003
+
+
+def test_build_sharded_index_rejects_tiny_segments():
+    x = np.zeros((5, 4), np.float32)
+    with pytest.raises(ValueError):
+        build_sharded_index(x, 4, SSGParams(knn_k=2, out_degree=2))
+
+
+def test_merge_with_dropout_metrics():
+    rng = np.random.default_rng(13)
+    per_i = [rng.integers(0, 100, (4, 6)) for _ in range(4)]
+    per_d = [np.sort(rng.random((4, 6)).astype(np.float32)) for _ in range(4)]
+    reg = MetricsRegistry()
+    ids, dists, cov = merge_with_dropout(per_i, per_d,
+                                         [True, False, True, False], 3,
+                                         registry=reg)
+    assert cov == 0.5
+    sc = reg.scrape()
+    assert sc["shard_responses_total{shard=0}"] == 1.0
+    assert sc["shard_responses_total{shard=2}"] == 1.0
+    assert "shard_responses_total{shard=1}" not in sc
+    assert sc["shard_dropout_total"] == 2.0
+    assert "shard_dropout_total" in reg.exposition()
+    # merged ids only come from the shards that responded
+    alive_ids = set(per_i[0].ravel().tolist()) \
+        | set(per_i[2].ravel().tolist())
+    assert set(ids.ravel().tolist()) <= alive_ids
+
+
+def test_sharded_search_degraded_counts():
+    sd, x, q = _built(3)
+    ids, dists, cov = sd.search_degraded(q, [True, True, False])
+    assert cov == pytest.approx(2 / 3)
+    sc = sd.scrape()
+    assert sc["shard_responses_total{shard=0}"] == 1.0
+    assert sc["shard_dropout_total"] == 1.0
+
+
+# -------------------------------------------------------------- observability
+def test_scrape_labels_per_shard_series():
+    sd, x, q = _built(2)
+    sd.search(q, record=True)
+    sc = sd.scrape()
+    assert sc["sharded_search_queries_total"] == q.shape[0]
+    assert sc["shard_count"] == 2.0
+    # every shard's own scrape rides along with a shard= label
+    for s in range(2):
+        assert any(k.endswith(f"shard={s}}}") for k in sc)
+    assert "shard_count" in sd.exposition()
+
+
+def test_memory_report_per_shard_splits():
+    sd, x, q = _built(3)
+    mr = sd.memory_report()
+    assert len(mr["per_shard"]) == 3
+    for entry in mr["per_shard"]:
+        assert set(entry) == {"device", "host", "disk"}
+    for tier in ("device", "host", "disk"):
+        assert mr[tier]["total"] == sum(e[tier]["total"]
+                                        for e in mr["per_shard"])
+    assert mr["total"] > 0
+
+
+# -------------------------------------------------------------------- engine
+def test_sharded_engine_matches_search():
+    sd, x, q = _built(4)
+    eng = ShardedEngine(sd, wave_size=16, tick_hops=4)
+    rids = eng.submit(q)
+    out = eng.run_until_drained()
+    assert eng.stats.completed == q.shape[0]
+    got = np.stack([out["results"][r]["ids"] for r in rids])
+    gt = ground_truth(x, q, 5)
+    r_eng = recall_at_k(got, gt)
+    r_search = recall_at_k(
+        np.asarray(sd.search(q, record=False).ids), gt)
+    assert r_eng > r_search - 0.08
+
+
+def test_sharded_engine_mixed_tenants_feed_counters_once():
+    sd, x, q = _built(3)
+    sd.warm(q[:8], tenant="a")
+    base = [sh.dqf.tenants.get("a").counter.since_rebuild
+            for sh in sd.shards]
+    eng = ShardedEngine(sd, wave_size=8, tick_hops=4)
+    rids_a = eng.submit(q[:12], tenant="a")
+    rids_d = eng.submit(q[12:24])
+    eng.run_until_drained()
+    assert eng.stats.completed == 24
+    for sh, b in zip(sd.shards, base):
+        assert sh.dqf.tenants.get("a").counter.since_rebuild == b + 12
+    res = eng._results
+    assert all(res[r]["tenant"] == "a" for r in rids_a)
+    assert all(res[r]["tenant"] != "a" for r in rids_d)
+
+
+def test_sharded_engine_serves_under_churn():
+    sd, x, q = _built(3)
+    eng = ShardedEngine(sd, wave_size=8, tick_hops=4,
+                        auto_compact=True, compact_ratio=0.05)
+    eng.submit(q[:8])
+    eng.run_until_drained()
+    sd.delete(sd.shards[0].dqf.store.ext_ids[:30].astype(np.int64))
+    rids = eng.submit(q)
+    out = eng.run_until_drained()
+    assert eng.stats.completed == 8 + q.shape[0]
+    assert out["compactions"] >= 1
+    got = np.stack([out["results"][r]["ids"] for r in rids])
+    assert (got >= -1).all()
+    gt = ground_truth(x, q, 5)
+    assert recall_at_k(np.where(got < 0, 0, got), gt) > 0.6
+
+
+def test_sharded_engine_rejects_quant():
+    from repro.core.types import QuantConfig
+    x, q = _data()
+    cfg = DQFConfig(**CFG, quant=QuantConfig(mode="sq8"))
+    sd = ShardedDQF(cfg, 2).build(x)
+    sd.warm(q[:8])
+    with pytest.raises(ValueError):
+        ShardedEngine(sd)
