@@ -27,6 +27,7 @@ def main() -> None:
     from . import bench_kernels as bk
     from . import bench_multitenant as bm
     from . import bench_obs as bo
+    from . import bench_serving as bsv
     from . import bench_sharded as bsh
     from . import bench_tiering as bt
 
@@ -48,6 +49,7 @@ def main() -> None:
         ("kernels", bk.bench_kernels),                # Pallas layer
         ("quant", bk.bench_quant_scoring),            # compressed scan
         ("engine", bk.bench_engine),                  # serving layer
+        ("serving", bsv.bench_serving),               # open-loop paged/fixed
         ("obs", bo.bench_obs),                        # flight recorder
         ("sharded", bsh.bench_sharded),               # scale-out layer
     ]

@@ -96,6 +96,17 @@ def main() -> None:
                       f"{meta.get('backend', '?')}")
         warnings += _compare(section, fresh, base)
         compared += 1
+    # fresh sections with no committed baseline are a warning, not a
+    # failure: a new benchmark lands before its first baseline commit
+    base_names = {os.path.basename(p) for p in
+                  glob.glob(os.path.join(base_dir, "BENCH_*.json"))}
+    for path in sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json"))):
+        fname = os.path.basename(path)
+        if fname not in base_names:
+            section = fname[len("BENCH_"):-len(".json")]
+            warnings.append(
+                f"{section}: no committed baseline at {base_dir or '.'} — "
+                f"commit {fname} to start tracking it")
     print(f"bench_diff: compared {compared} section(s) against {base_dir}")
     for w in warnings:
         print(f"::warning title=bench regression::{w}")

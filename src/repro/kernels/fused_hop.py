@@ -40,7 +40,7 @@ import numpy as np
 from .bitonic import bitonic_sort_stable, next_pow2
 from .ref import INF_DIST, HopState, _EPS, _INT_MAX
 
-__all__ = ["fused_hop_pallas"]
+__all__ = ["fused_hop_pallas", "fused_hop_paged_pallas"]
 
 # INF_DIST as an inlineable numpy scalar: a jax array constant would be
 # *captured* by the kernel trace, which pallas_call rejects.
@@ -61,11 +61,25 @@ def _compiler_params(pltpu):
 def _hop_kernel(refs, *, pltpu, mode: str, has_tree: bool, has_live: bool,
                 bl: int, R: int, L: int, n: int, hops: int, max_hops: int,
                 k: int, eval_gap: int, add_step: int, tree_depth: int,
-                sort_len: int, pq_k: int):
-    """Kernel body; ``refs`` laid out by :func:`fused_hop_pallas`."""
+                sort_len: int, pq_k: int, paged: bool = False,
+                ppl: int = 0, page_cols: int = 0):
+    """Kernel body; ``refs`` laid out by :func:`fused_hop_pallas`.
+
+    ``paged=True`` swaps the dense per-lane seen block for a page walk:
+    the lane input carries the page table ``(bl, ppl)`` instead of the
+    bitmap, the pool lives in an aliased ANY-space in/out buffer, and the
+    kernel DMAs each lane's pages into a VMEM scratch bitmap on entry and
+    back out at exit.  The hop arithmetic in between is byte-for-byte the
+    dense kernel.
+    """
     it = iter(refs)
-    ids_i, dists_i, exp_i, seen_i, stat_i, q_ref = [next(it) for _ in
-                                                    range(6)]
+    ids_i, dists_i, exp_i = [next(it) for _ in range(3)]
+    pt_i = seen_i = None
+    if paged:
+        pt_i = next(it)
+    else:
+        seen_i = next(it)
+    stat_i, q_ref = next(it), next(it)
     adj_hbm, tab_hbm = next(it), next(it)
     scale_ref = zero_ref = luts_ref = None
     if mode == "sq8":
@@ -77,15 +91,45 @@ def _hop_kernel(refs, *, pltpu, mode: str, has_tree: bool, has_live: bool,
     if has_tree:
         tree_refs = [next(it) for _ in range(5)]
         hot_ref = next(it)
-    ids_o, dists_o, exp_o, seen_o, stat_o = [next(it) for _ in range(5)]
+    if paged:
+        next(it)  # pool input ref; aliased — all access goes via pool_o
+    ids_o, dists_o, exp_o = [next(it) for _ in range(3)]
+    seen_o = pool_o = None
+    if paged:
+        stat_o, pool_o = next(it), next(it)
+    else:
+        seen_o, stat_o = next(it), next(it)
     adj_s, rows_s, d2_s, sem_adj, sem_rows = [next(it) for _ in range(5)]
+    seen_s = sem_seen = None
+    if paged:
+        seen_s, sem_seen = next(it), next(it)
 
     # The output blocks are the VMEM-resident working state for every hop.
     ids_o[...] = ids_i[...]
     dists_o[...] = dists_i[...]
     exp_o[...] = exp_i[...]
-    seen_o[...] = seen_i[...]
     stat_o[...] = stat_i[...]
+    if paged:
+        # Gather this block's pages into the dense VMEM bitmap.  All
+        # copies launch before any waits; live lanes own disjoint pages
+        # and duplicate (scratch-lane) rows carry identical bytes.
+        ptv = pt_i[...]                                    # (bl, ppl)
+
+        def page_dma(i: int, j: int):
+            return pltpu.make_async_copy(
+                pool_o.at[pl.ds(ptv[i, j], 1)],
+                seen_s.at[pl.ds(i, 1),
+                          pl.ds(j * page_cols, page_cols)],
+                sem_seen.at[i, j])
+
+        for i in range(bl):
+            for j in range(ppl):
+                page_dma(i, j).start()
+        for i in range(bl):
+            for j in range(ppl):
+                page_dma(i, j).wait()
+    else:
+        seen_o[...] = seen_i[...]
 
     queries = q_ref[...]                                   # (bl, d)
     live = live_ref[0, :] != 0 if has_live else None       # (n+1,)
@@ -118,11 +162,13 @@ def _hop_kernel(refs, *, pltpu, mode: str, has_tree: bool, has_live: bool,
                                    axis=3)                 # (1, R, M, 1)
         return jnp.sum(vals[..., 0], axis=-1)[0].astype(jnp.float32)
 
+    seen_ref = seen_s if paged else seen_o
+
     def hop(_, carry):
         ids = ids_o[...]
         dists = dists_o[...]
         exp = exp_o[...] != 0
-        seen = seen_o[...] != 0
+        seen = seen_ref[...] != 0
         stat = stat_o[...]
         active = stat[:, 0] != 0
         dist_count, update_count = stat[:, 1], stat[:, 2]
@@ -233,7 +279,7 @@ def _hop_kernel(refs, *, pltpu, mode: str, has_tree: bool, has_live: bool,
         ids_o[...] = ids
         dists_o[...] = dists
         exp_o[...] = exp.astype(jnp.int32)
-        seen_o[...] = seen.astype(jnp.int32)
+        seen_ref[...] = seen.astype(jnp.int32)
         stat_o[...] = jnp.stack(
             [active.astype(jnp.int32), dist_count, update_count, hops_ct,
              terminated.astype(jnp.int32), evals_done, stop_at,
@@ -241,6 +287,24 @@ def _hop_kernel(refs, *, pltpu, mode: str, has_tree: bool, has_live: bool,
         return carry
 
     jax.lax.fori_loop(0, hops, hop, 0)
+
+    if paged:
+        # Scatter the updated bitmap back through the page table.
+        # Duplicate destination rows (padding lanes on the scratch
+        # pages) write identical bytes, so overlap is benign.
+        def page_wb(i: int, j: int):
+            return pltpu.make_async_copy(
+                seen_s.at[pl.ds(i, 1),
+                          pl.ds(j * page_cols, page_cols)],
+                pool_o.at[pl.ds(ptv[i, j], 1)],
+                sem_seen.at[i, j])
+
+        for i in range(bl):
+            for j in range(ppl):
+                page_wb(i, j).start()
+        for i in range(bl):
+            for j in range(ppl):
+                page_wb(i, j).wait()
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -355,6 +419,134 @@ def fused_hop_pallas(hs: HopState, adj_pad, queries, live_pad, mode: str,
     o_ids, o_dists, o_exp, o_seen, o_stat = [a[:B] for a in out]
     return HopState(
         ids=o_ids, dists=o_dists, expanded=o_exp != 0, seen=o_seen != 0,
+        active=o_stat[:, 0] != 0, dist_count=o_stat[:, 1],
+        update_count=o_stat[:, 2], hops=o_stat[:, 3],
+        terminated=o_stat[:, 4] != 0, evals_done=o_stat[:, 5],
+        stop_at=o_stat[:, 6])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "hops", "max_hops", "k", "eval_gap", "add_step", "tree_depth",
+    "bl", "interpret"))
+def fused_hop_paged_pallas(hs: HopState, pt, adj_pad, queries, live_pad,
+                           mode: str, t0, t1=None, t2=None, tree=None,
+                           hot_first=None, hot_ratio=None, *, hops: int,
+                           max_hops: int, k: int = 1, eval_gap: int = 1,
+                           add_step: int = 0, tree_depth: int = 1,
+                           bl: int = 8,
+                           interpret: bool = False) -> HopState:
+    """Paged-seen megakernel; contract = :func:`ref.fused_hop_paged`.
+
+    ``hs.seen`` carries the whole page pool ``(n_pages, page_cols)``
+    instead of a per-lane bitmap; ``pt`` is the lane page table ``(B,
+    pages_per_lane)``.  The kernel walks the page table itself: per grid
+    step it DMAs the block's pages into VMEM, runs the exact dense hop
+    loop, and DMAs the pages back — returning the updated pool in
+    ``seen``.  The wave must already be a multiple of ``bl`` (the engine
+    admits power-of-two buckets ≥ ``bl``); inert padding lanes must point
+    at the allocator's scratch pages so duplicate write-backs carry
+    identical bytes.
+    """
+    from jax.experimental.pallas import tpu as pltpu  # deferred: CPU-safe
+
+    B, L = hs.ids.shape
+    if B % bl:
+        raise ValueError(
+            f"paged wave width {B} must be a multiple of bl={bl}; pad the "
+            "bucket with scratch lanes before dispatch")
+    pool = hs.seen
+    page_cols = pool.shape[1]
+    ppl = pt.shape[1]
+    n1 = adj_pad.shape[0]
+    n = n1 - 1
+    R = adj_pad.shape[1]
+    d = queries.shape[1]
+    has_tree = tree is not None
+    has_live = live_pad is not None
+
+    i32 = lambda a: a.astype(jnp.int32)
+    stat = jnp.stack(
+        [i32(hs.active), i32(hs.dist_count), i32(hs.update_count),
+         i32(hs.hops), i32(hs.terminated), i32(hs.evals_done),
+         i32(hs.stop_at), jnp.zeros((B,), jnp.int32)], axis=1)
+
+    lane_spec = lambda w: pl.BlockSpec((bl, w), lambda i: (i, 0))
+    full_spec = lambda s: pl.BlockSpec(s, lambda i: (0, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    inputs = [i32(hs.ids), hs.dists, i32(hs.expanded), i32(pt), stat,
+              queries.astype(jnp.float32)]
+    in_specs = [lane_spec(L), lane_spec(L), lane_spec(L), lane_spec(ppl),
+                lane_spec(8), lane_spec(d)]
+    inputs += [adj_pad, t0]
+    in_specs += [any_spec, any_spec]
+    pq_k = 1
+    if mode == "sq8":
+        inputs += [t1.reshape(1, d).astype(jnp.float32),
+                   t2.reshape(1, d).astype(jnp.float32)]
+        in_specs += [full_spec((1, d)), full_spec((1, d))]
+    elif mode == "pq":
+        _, M, pq_k = t1.shape
+        inputs += [t1.astype(jnp.float32).reshape(B, M * pq_k)]
+        in_specs += [lane_spec(M * pq_k)]
+    elif mode != "f32":
+        raise ValueError(f"unknown score mode {mode!r}")
+    if has_live:
+        inputs += [i32(live_pad).reshape(1, n1)]
+        in_specs += [full_spec((1, n1))]
+    if has_tree:
+        tf, tt, tl, tr, tv = tree
+        T = tf.shape[0]
+        inputs += [i32(tf).reshape(1, T), tt.reshape(1, T),
+                   i32(tl).reshape(1, T), i32(tr).reshape(1, T),
+                   tv.reshape(1, T),
+                   jnp.stack([hot_first, hot_ratio], axis=1)
+                   .astype(jnp.float32)]
+        in_specs += [full_spec((1, T))] * 5 + [lane_spec(2)]
+    inputs += [i32(pool)]
+    in_specs += [any_spec]
+    pool_idx = len(inputs) - 1
+
+    sort_len = next_pow2(L + R)
+    kernel = functools.partial(
+        lambda *refs, **kw: _hop_kernel(refs, **kw),
+        pltpu=pltpu, mode=mode, has_tree=has_tree, has_live=has_live,
+        bl=bl, R=R, L=L, n=n, hops=hops, max_hops=max_hops, k=k,
+        eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
+        sort_len=sort_len, pq_k=pq_k, paged=True, ppl=ppl,
+        page_cols=page_cols)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B // bl,),
+        in_specs=in_specs,
+        out_specs=[lane_spec(L), lane_spec(L), lane_spec(L), lane_spec(8),
+                   any_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L), jnp.int32),
+            jax.ShapeDtypeStruct((B, L), jnp.float32),
+            jax.ShapeDtypeStruct((B, L), jnp.int32),
+            jax.ShapeDtypeStruct((B, 8), jnp.int32),
+            jax.ShapeDtypeStruct(pool.shape, jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bl, R), jnp.int32),                # adjacency rows
+            pltpu.VMEM((2, R, t0.shape[1]), t0.dtype),     # double buffer
+            pltpu.VMEM((bl, R), jnp.float32),              # lane distances
+            pltpu.SemaphoreType.DMA((bl,)),
+            pltpu.SemaphoreType.DMA((2, R)),
+            pltpu.VMEM((bl, ppl * page_cols), jnp.int32),  # lane bitmaps
+            pltpu.SemaphoreType.DMA((bl, ppl)),
+        ],
+        input_output_aliases={pool_idx: 4},
+        compiler_params=_compiler_params(pltpu)(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(*inputs)
+
+    o_ids, o_dists, o_exp, o_stat, o_pool = out
+    return HopState(
+        ids=o_ids, dists=o_dists, expanded=o_exp != 0, seen=o_pool != 0,
         active=o_stat[:, 0] != 0, dist_count=o_stat[:, 1],
         update_count=o_stat[:, 2], hops=o_stat[:, 3],
         terminated=o_stat[:, 4] != 0, evals_done=o_stat[:, 5],

@@ -16,14 +16,15 @@ import jax.numpy as jnp
 
 from . import ref
 from .distance import pairwise_l2_pallas
-from .fused_hop import fused_hop_pallas
+from .fused_hop import fused_hop_paged_pallas, fused_hop_pallas
 from .fused_scorer import fused_topk_l2_pallas
 from .pq_adc import pq_adc_pallas
 from .sq_distance import sq8_pairwise_l2_pallas
 from .topk_merge import pool_merge_pallas
 
 __all__ = ["pairwise_l2", "fused_topk_l2", "pool_merge", "sq8_pairwise_l2",
-           "pq_adc", "fused_hop", "table_spec", "kernels_native"]
+           "pq_adc", "fused_hop", "fused_hop_paged", "table_spec",
+           "kernels_native"]
 
 
 def kernels_native() -> bool:
@@ -128,6 +129,32 @@ def fused_hop(hs: "ref.HopState", adj_pad, queries, live_pad, table,
                 eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth)
         return fused_hop_pallas(
             hs, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
+            hot_first, hot_ratio, hops=hops, max_hops=max_hops, k=k,
+            eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
+            bl=bl, interpret=m)
+
+
+def fused_hop_paged(hs: "ref.HopState", pt, adj_pad, queries, live_pad,
+                    table, tree=None, hot_first=None, hot_ratio=None, *,
+                    page_cols: int, hops: int, max_hops: int, k: int = 1,
+                    eval_gap: int = 1, add_step: int = 0,
+                    tree_depth: int = 1, interpret: Optional[bool] = None,
+                    bl: int = 8) -> "ref.HopState":
+    """Paged-seen fused hop: ``hs.seen`` is the page pool, ``pt`` the lane
+    page table.  Same contract as :func:`fused_hop` otherwise; returns the
+    updated pool in ``seen``.
+    """
+    mode, t0, t1, t2 = table_spec(table)
+    m = _mode(interpret)
+    with jax.named_scope("dqf.fused_hop_paged"):
+        if m is None:
+            return ref.fused_hop_paged(
+                hs, pt, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
+                hot_first, hot_ratio, page_cols=page_cols, hops=hops,
+                max_hops=max_hops, k=k, eval_gap=eval_gap,
+                add_step=add_step, tree_depth=tree_depth)
+        return fused_hop_paged_pallas(
+            hs, pt, adj_pad, queries, live_pad, mode, t0, t1, t2, tree,
             hot_first, hot_ratio, hops=hops, max_hops=max_hops, k=k,
             eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth,
             bl=bl, interpret=m)

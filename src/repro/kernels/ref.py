@@ -271,3 +271,35 @@ def fused_hop(hs: HopState, adj_pad, queries, live_pad, mode: str, t0,
             hot_first, hot_ratio, max_hops=max_hops, k=k,
             eval_gap=eval_gap, add_step=add_step, tree_depth=tree_depth),
         hs)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "page_cols", "hops", "max_hops", "k", "eval_gap", "add_step",
+    "tree_depth"))
+def fused_hop_paged(hs: HopState, pt, adj_pad, queries, live_pad, mode: str,
+                    t0, t1=None, t2=None, tree=None, hot_first=None,
+                    hot_ratio=None, *, page_cols: int, hops: int,
+                    max_hops: int, k: int = 1, eval_gap: int = 1,
+                    add_step: int = 0, tree_depth: int = 1) -> HopState:
+    """Paged-seen oracle: gather pages dense, hop, scatter pages back.
+
+    ``hs.seen`` holds the whole page pool ``(n_pages, page_cols)``; ``pt``
+    is the per-lane page table ``(B, pages_per_lane)``.  Gathering the
+    lane's pages into a dense ``(B, n1)`` bitmap, running the exact
+    ``fused_hop`` body, and re-paginating is the correctness seam the
+    Pallas walk-the-page-table variant is checked against.  Duplicate
+    page-table rows (padding lanes aliasing the scratch lane) scatter
+    identical data, so the pool write-back stays deterministic.
+    """
+    n1 = adj_pad.shape[0]
+    B = pt.shape[0]
+    pool = hs.seen
+    dense = pool[pt].reshape(B, -1)[:, :n1]
+    out = fused_hop(hs._replace(seen=dense), adj_pad, queries, live_pad,
+                    mode, t0, t1, t2, tree, hot_first, hot_ratio,
+                    hops=hops, max_hops=max_hops, k=k, eval_gap=eval_gap,
+                    add_step=add_step, tree_depth=tree_depth)
+    ppl = pt.shape[1]
+    pad = ppl * page_cols - n1
+    pages = jnp.pad(out.seen, ((0, 0), (0, pad))).reshape(B, ppl, page_cols)
+    return out._replace(seen=pool.at[pt].set(pages))

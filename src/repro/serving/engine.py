@@ -69,11 +69,82 @@ from repro.obs import (ObsConfig, Timeline, TraceLog, device_annotation,
                        sample_decision)
 from repro.tenancy import DEFAULT_TENANT
 
-__all__ = ["WaveEngine", "EngineStats"]
+__all__ = ["WaveEngine", "EngineStats", "retire_batch"]
 
 # Retirement latencies kept for p99 (windowed, so a long-running engine's
 # memory stays bounded; ~4k samples give a stable tail estimate).
 LATENCY_WINDOW = 4096
+
+
+def retire_batch(store, rerank_k: int, k: int, pool_ids: np.ndarray,
+                 pool_dists: np.ndarray, queries: np.ndarray):
+    """Final results for a batch of retiring lanes (host side).
+
+    Drops sentinel/padding ids and rows tombstoned while the lanes were
+    in flight; with a quantized table (``rerank_k > 0``) the pool heads
+    are re-scored exactly in float32.  One vectorized pass covers every
+    retiring lane — ``(m, L)`` pools in, ``(m, k)`` results out.  Shared
+    by the fixed-wave and paged engines.
+    """
+    st = store
+    m, L = pool_ids.shape
+    # filter whole pools first (mid-flight deletes can hit the head),
+    # then compact surviving candidates left, pool order preserved
+    keep = (pool_ids < st.n)
+    keep &= st.alive[np.minimum(pool_ids, st.n - 1)]
+    order = np.argsort(~keep, axis=1, kind="stable")
+    rr = min(max(rerank_k, k), L)
+    cand = np.take_along_axis(pool_ids, order, 1)[:, :rr]
+    cd = np.take_along_axis(pool_dists, order, 1)[:, :rr]
+    valid = np.take_along_axis(keep, order, 1)[:, :rr]
+    if rerank_k:
+        safe = np.where(valid, cand, 0)
+        cd = np.sum((st.x[safe] - queries[:, None, :]) ** 2, axis=-1)
+        cd[~valid] = np.inf
+        top = np.argsort(cd, axis=1, kind="stable")[:, :k]
+        ids = np.take_along_axis(cand, top, 1)
+        dists = np.take_along_axis(cd, top, 1)
+        valid = np.take_along_axis(valid, top, 1)
+    else:                                   # pools are sorted already
+        ids, dists, valid = cand[:, :k], cd[:, :k], valid[:, :k]
+    if ids.shape[1] < k:                    # rr < k: pad the tail
+        pad = k - ids.shape[1]
+        ids = np.concatenate(
+            [ids, np.zeros((m, pad), ids.dtype)], axis=1)
+        dists = np.concatenate(
+            [dists, np.zeros((m, pad), dists.dtype)], axis=1)
+        valid = np.concatenate(
+            [valid, np.zeros((m, pad), bool)], axis=1)
+    ids = np.where(valid, ids, st.capacity).astype(np.int32)
+    dists = np.where(valid, dists, np.inf).astype(np.float32)
+    return ids, dists
+
+
+@jax.jit
+def _splice_lanes(state: bs.BeamState, lanes: jnp.ndarray,
+                  seeded: bs.BeamState) -> bs.BeamState:
+    """Scatter freshly seeded lanes into the wave state, device-side.
+
+    Replaces the old full-wave numpy roundtrip: only the ``m`` refilled
+    rows move, the live lanes' device buffers are never touched by the
+    host.  Recompiles per refill-batch width, the same key the stacked
+    hot phase already keys on.
+    """
+    pool = state.pool._replace(
+        ids=state.pool.ids.at[lanes].set(seeded.pool.ids),
+        dists=state.pool.dists.at[lanes].set(seeded.pool.dists),
+        expanded=state.pool.expanded.at[lanes].set(seeded.pool.expanded))
+    stats = state.stats._replace(
+        dist_count=state.stats.dist_count.at[lanes].set(
+            seeded.stats.dist_count),
+        update_count=state.stats.update_count.at[lanes].set(
+            seeded.stats.update_count),
+        hops=state.stats.hops.at[lanes].set(seeded.stats.hops),
+        terminated_early=state.stats.terminated_early.at[lanes].set(
+            seeded.stats.terminated_early))
+    return state._replace(
+        pool=pool, seen=state.seen.at[lanes].set(seeded.seen), stats=stats,
+        active=state.active.at[lanes].set(True))
 
 
 @dataclasses.dataclass
@@ -264,9 +335,23 @@ class WaveEngine:
             ids.append(rid)
         return ids
 
+    def step(self) -> None:
+        """Advance the engine exactly one tick (open-loop drivers).
+
+        Seeds the wave from the queue on first use; afterwards each call
+        runs one jitted tick + retire + refill.  Interleave with
+        ``submit`` to serve an arrival process instead of a closed batch.
+        """
+        if self._state is None:
+            self._init_wave()
+        self._tick()
+
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
         t0 = time.perf_counter()
-        self._init_wave()
+        if self._state is None or not self._any_live():
+            self._init_wave()       # idle wave: (re)build for new capacity
+        else:
+            self._refill()          # step()-driven lanes are in flight
         while (self.queue or self._any_live()) \
                 and self.stats.ticks < max_ticks:
             self._tick()
@@ -300,6 +385,9 @@ class WaveEngine:
                 "engine_live_lanes": float(
                     sum(m is not None for m in self._lane_meta)),
                 "engine_wave_size": float(self.wave),
+                "engine_occupancy_ratio": (
+                    sum(m is not None for m in self._lane_meta)
+                    / float(self.wave)),
                 "engine_traces_recorded": float(self.traces.total),
                 "engine_traces_dropped": float(self.traces.dropped)}
 
@@ -436,18 +524,11 @@ class WaveEngine:
         cache = (self.dqf.store.full_phase_cache()
                  if self.dqf.store.tiered else None)
         t_seed = time.perf_counter()
-        # splice the new lanes into the wave state (host-side: simple, and
-        # refills are rare relative to ticks)
-        st = jax.tree.map(lambda a: np.array(a), self._state)  # writable
-        new = jax.tree.map(np.asarray, seeded)
+        # splice the new lanes into the wave state device-side: only the
+        # refilled rows move, live lanes never roundtrip through the host
+        self._state = _splice_lanes(
+            self._state, jnp.asarray(np.asarray(lanes, np.int32)), seeded)
         for j, lane in enumerate(lanes):
-            for field in ("ids", "dists", "expanded"):
-                getattr(st.pool, field)[lane] = getattr(new.pool, field)[j]
-            st.seen[lane] = new.seen[j]
-            for f in ("dist_count", "update_count", "hops",
-                      "terminated_early"):
-                getattr(st.stats, f)[lane] = getattr(new.stats, f)[j]
-            st.active[lane] = True
             self._queries[lane] = reqs[j][1]
             self._hot_first[lane] = float(hf.first[j])
             self._hot_ratio[lane] = float(hf.first_div_kth[j])
@@ -470,7 +551,6 @@ class WaveEngine:
                 }
             else:
                 self._lane_trace[lane] = None
-        self._state = jax.tree.map(jnp.asarray, st)
         self._update_table()
 
     def _dropped_result(self, tenant: str) -> dict:
@@ -482,47 +562,9 @@ class WaveEngine:
 
     def _retire_batch(self, pool_ids: np.ndarray, pool_dists: np.ndarray,
                       queries: np.ndarray):
-        """Final results for all lanes retiring this tick (host side).
-
-        Drops sentinel/padding ids and rows tombstoned while the lanes
-        were in flight; with a quantized table the pool heads are
-        re-scored exactly in float32.  One vectorized pass covers every
-        retiring lane — ``(m, L)`` pools in, ``(m, k)`` results out —
-        instead of the per-lane loop retirements used to cost.
-        """
-        st = self.dqf.store
-        k = self.cfg.k
-        m, L = pool_ids.shape
-        # filter whole pools first (mid-flight deletes can hit the head),
-        # then compact surviving candidates left, pool order preserved
-        keep = (pool_ids < st.n)
-        keep &= st.alive[np.minimum(pool_ids, st.n - 1)]
-        order = np.argsort(~keep, axis=1, kind="stable")
-        rr = min(max(self.dqf._rerank_k, k), L)
-        cand = np.take_along_axis(pool_ids, order, 1)[:, :rr]
-        cd = np.take_along_axis(pool_dists, order, 1)[:, :rr]
-        valid = np.take_along_axis(keep, order, 1)[:, :rr]
-        if self.dqf._rerank_k:
-            safe = np.where(valid, cand, 0)
-            cd = np.sum((st.x[safe] - queries[:, None, :]) ** 2, axis=-1)
-            cd[~valid] = np.inf
-            top = np.argsort(cd, axis=1, kind="stable")[:, :k]
-            ids = np.take_along_axis(cand, top, 1)
-            dists = np.take_along_axis(cd, top, 1)
-            valid = np.take_along_axis(valid, top, 1)
-        else:                                   # pools are sorted already
-            ids, dists, valid = cand[:, :k], cd[:, :k], valid[:, :k]
-        if ids.shape[1] < k:                    # rr < k: pad the tail
-            pad = k - ids.shape[1]
-            ids = np.concatenate(
-                [ids, np.zeros((m, pad), ids.dtype)], axis=1)
-            dists = np.concatenate(
-                [dists, np.zeros((m, pad), dists.dtype)], axis=1)
-            valid = np.concatenate(
-                [valid, np.zeros((m, pad), bool)], axis=1)
-        ids = np.where(valid, ids, st.capacity).astype(np.int32)
-        dists = np.where(valid, dists, np.inf).astype(np.float32)
-        return ids, dists
+        """Final results for all lanes retiring this tick (host side)."""
+        return retire_batch(self.dqf.store, self.dqf._rerank_k, self.cfg.k,
+                            pool_ids, pool_dists, queries)
 
     def _tier_begin_tick(self):
         """Tier housekeeping at the tick boundary, then frontier prefetch.

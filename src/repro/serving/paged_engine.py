@@ -1,0 +1,526 @@
+"""Ragged paged wave engine: continuous lane admission over paged state.
+
+The fixed-shape :class:`~repro.serving.engine.WaveEngine` ticks
+``wave_size`` max-padded lanes no matter how many are live, and seeds new
+lanes with a host-side splice of the whole wave state.  This engine keeps
+the same search semantics — bitwise-identical per-query results, see the
+parity tests — but restructures the state the way sglang-jax's ragged
+paged attention restructures ragged KV (:mod:`repro.serving.paged`):
+
+* per-lane scratch lives in ``(P+1, ...)`` slot arrays and the big
+  ``seen`` bitmaps in a shared page pool behind a per-lane page table
+  with cu-len bookkeeping (a host free-list allocator hands out lane
+  slots and pages);
+* each tick gathers the *live* lanes into a dense bucket whose width is
+  the live count rounded up to a power of two (compiles stay bounded:
+  O(log capacity) tick executables), advances it ``tick_hops``
+  expansions — composed scan or the paged fused megakernel — and
+  scatters the bucket back.  Work tracks live lanes, not capacity;
+* admission and retirement are device ``.at[]`` scatters
+  (:func:`repro.serving.paged.admit_wave`), never a host round-trip of
+  wave state, so lanes stream in and out continuously and a straggler
+  holds one lane slot, not a wave;
+* with a tiered store, block pins follow the allocator's *pages*: the
+  pin set each tick is derived from the page-table-live lanes only, so a
+  retired lane's blocks become evictable the moment its pages free.
+
+Occupancy (``engine_occupancy_ratio`` = live lanes / lane capacity) is
+published through the same :mod:`repro.obs` registry as the fixed
+engine, under the collector key ``"paged_engine"``.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import beam_search as bs
+from repro.core.decision_tree import predict_jax
+from repro.core.dynamic_search import _seed_full_state, hot_phase_stacked
+from repro.core.features import feature_matrix, hot_features
+from repro.core.types import DQFConfig, HotFeatures, PoolState
+from repro.obs import ObsConfig, device_annotation
+from repro.serving import paged as pg
+from repro.serving.engine import LATENCY_WINDOW, EngineStats, retire_batch
+from repro.tenancy import DEFAULT_TENANT
+
+__all__ = ["PagedWaveEngine"]
+
+
+class PagedWaveEngine:
+    """Continuous-admission serving engine over paged wave state.
+
+    ``capacity`` is the lane-slot count (the admission ceiling — the
+    analogue of the fixed engine's ``wave_size``); ``page_cols`` the seen
+    page width; ``min_bucket`` the smallest tick bucket.  Everything else
+    mirrors :class:`~repro.serving.engine.WaveEngine`.
+    """
+
+    def __init__(self, dqf, *, capacity: int = 64, tick_hops: int = 8,
+                 page_cols: int = pg.DEFAULT_PAGE_COLS,
+                 min_bucket: int = pg.MIN_BUCKET,
+                 latency_window: int = LATENCY_WINDOW,
+                 auto_compact: bool = True, compact_ratio: float = 0.3,
+                 prefetch: bool = True, obs: Optional[ObsConfig] = None):
+        if min_bucket < 1 or (min_bucket & (min_bucket - 1)):
+            raise ValueError("min_bucket must be a power of two")
+        self.dqf = dqf
+        self.cfg: DQFConfig = dqf.cfg
+        self.capacity = int(capacity)
+        self.tick_hops = tick_hops
+        self.page_cols = int(page_cols)
+        self.min_bucket = int(min_bucket)
+        self.auto_compact = auto_compact
+        self.compact_ratio = compact_ratio
+        self.prefetch = prefetch
+        self.queue: collections.deque = collections.deque()
+        self.stats = EngineStats(
+            latencies_ms=collections.deque(maxlen=latency_window),
+            queue_wait_ms=collections.deque(maxlen=latency_window))
+        self.obs = obs if obs is not None else ObsConfig()
+        obs_on = bool(self.obs.enabled)
+        self.registry = ((self.obs.registry
+                          or getattr(dqf, "registry", None))
+                         if obs_on else None)
+        self._tick_ann = ((lambda: device_annotation("dqf.paged_tick"))
+                          if obs_on else contextlib.nullcontext)
+        if self.registry is not None:
+            r = self.registry
+            self._h_service = r.histogram(
+                "engine_service_ms", "seed→retire service time (ms)")
+            self._h_qwait = r.histogram(
+                "engine_queue_wait_ms", "submit→seed queue wait (ms)")
+            self._h_hops = r.histogram(
+                "engine_hops", "full-phase hops per retired query",
+                lo=1.0, hi=1e5)
+            self._g_tick_hit = r.gauge(
+                "tier_tick_hit_rate",
+                "block-cache hit rate over the last tick window")
+            r.register_callback("paged_engine", self._collect_metrics)
+        self._fused = bool(self.cfg.fused) and not dqf.store.tiered
+        dqf._sync_device()
+        self._d = dqf.store.d
+        self._epoch = dqf.store.epoch
+        self._remap_epoch = dqf.store.remap_epoch
+        self._cap = dqf.store.capacity
+        self.pagepool = pg.PagePool(self.capacity, dqf.store.capacity,
+                                    page_cols=self.page_cols)
+        self._tick_fn = self._build_tick()
+        self._lane_meta = [None] * self.capacity
+        self._results: dict = {}
+        self._state: Optional[pg.PagedState] = None
+        self._queries = np.zeros((self.capacity + 1, self._d), np.float32)
+        self._table = None
+        self._table_key = None
+        self._last_pinned = 0
+        self._draining = False
+        self._next_rid = 0
+
+    # ------------------------------------------------------------ jitted ops
+    def _build_tick(self):
+        cfg = self.cfg
+        tree = self.dqf.tree.arrays if self.dqf.tree is not None else None
+        shift = self.pagepool.page_shift
+        hops = self.tick_hops
+
+        if self._fused:
+            from repro.kernels import ops as kops
+
+            def fused_tick(ps: pg.PagedState, lanes, pt, table, adj_pad,
+                           live_pad):
+                wv = pg.gather_wave(ps, lanes)
+                hs = kops.fused_hop_paged(
+                    bs.to_hop_state(wv.beam, evals_done=wv.evals),
+                    pt, adj_pad, wv.queries, live_pad, table, tree,
+                    wv.hot_first, wv.hot_ratio, page_cols=self.page_cols,
+                    hops=hops, max_hops=cfg.max_hops, k=cfg.k,
+                    eval_gap=cfg.eval_gap, add_step=0,
+                    tree_depth=cfg.tree_depth)
+                beam, evals = bs.from_hop_state(hs), hs.evals_done
+                ps = pg.scatter_wave(ps, lanes, beam, evals)
+                return ps, (beam.active, beam.stats.hops,
+                            beam.pool.ids, beam.pool.dists)
+
+            return jax.jit(fused_tick)
+
+        def tick(ps: pg.PagedState, lanes, pt, table, adj_pad, live_pad):
+            # Same hop body as WaveEngine._build_tick, on a gathered
+            # bucket with page-table seen access; recompiles once per
+            # bucket width (power of two), not per live count.
+            wv = pg.gather_wave(ps, lanes)
+
+            def one(carry, _):
+                s, ev = carry
+                s = pg.expand_step_paged(table, adj_pad, wv.queries, s,
+                                         pt, shift, live_pad)
+                s = s._replace(
+                    active=s.active & (s.stats.hops < cfg.max_hops))
+                if tree is not None:
+                    due = (s.stats.dist_count // cfg.eval_gap) > ev
+                    due = due & s.active
+                    feats = feature_matrix(
+                        HotFeatures(wv.hot_first, wv.hot_ratio), s.pool,
+                        s.stats, cfg.k)
+                    stop = (predict_jax(tree, feats, cfg.tree_depth)
+                            < 0.5) & due
+                    ev = jnp.where(due,
+                                   s.stats.dist_count // cfg.eval_gap, ev)
+                    s = s._replace(
+                        active=s.active & ~stop,
+                        stats=s.stats._replace(
+                            terminated_early=s.stats.terminated_early
+                            | (stop & s.active)))
+                return (s, ev), None
+
+            (beam, evals), _ = jax.lax.scan(
+                one, (wv.beam, wv.evals), None, length=hops)
+            ps = pg.scatter_wave(ps, lanes, beam, evals)
+            return ps, (beam.active, beam.stats.hops,
+                        beam.pool.ids, beam.pool.dists)
+
+        return jax.jit(tick)
+
+    # ---------------------------------------------------------------- public
+    def submit(self, queries: np.ndarray, *,
+               tenant: str = DEFAULT_TENANT) -> list:
+        """Enqueue queries for one tenant; returns their request ids."""
+        t = self.dqf.tenants.get(tenant)       # unknown tenant → KeyError
+        if t.hot is None:
+            raise RuntimeError(
+                f"tenant {tenant!r} has no hot index — warm() it before "
+                "serving")
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim != 2 or queries.shape[1] != self._d:
+            raise ValueError(
+                f"queries must be (B, {self._d}) for this index, got "
+                f"{queries.shape}")
+        ids = []
+        for q in queries:
+            rid = self._next_rid
+            self._next_rid += 1
+            self.queue.append((rid, q, time.perf_counter(), t.name, t.gen))
+            ids.append(rid)
+        return ids
+
+    def step(self) -> None:
+        """Advance one tick; seeds lanes from the queue on first use."""
+        if self._state is None:
+            self._init_wave()
+        self._tick()
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> dict:
+        t0 = time.perf_counter()
+        if self._state is None or not self._any_live():
+            self._init_wave()
+        else:
+            self._refill()
+        while (self.queue or self._any_live()) \
+                and self.stats.ticks < max_ticks:
+            self._tick()
+        if self._draining and not self._any_live():
+            self._do_compact()
+        wall = time.perf_counter() - t0
+        return {"results": self._results, "wall_s": wall,
+                "qps": self.stats.qps(wall), "p99_ms": self.stats.p99_ms(),
+                "queue_wait_p99_ms": self.stats.queue_wait_p99_ms(),
+                "straggled": self.stats.straggled,
+                "compactions": self.stats.compactions}
+
+    def scrape(self) -> dict:
+        return self.registry.scrape() if self.registry is not None else {}
+
+    def _collect_metrics(self) -> dict:
+        """Registry scrape-time collector (keyed ``"paged_engine"``)."""
+        s = self.stats
+        return {"engine_completed_total": float(s.completed),
+                "engine_straggled_total": float(s.straggled),
+                "engine_dropped_total": float(s.dropped),
+                "engine_ticks_total": float(s.ticks),
+                "engine_hops_total": float(s.total_hops),
+                "engine_compactions_total": float(s.compactions),
+                "engine_queue_depth": float(len(self.queue)),
+                "engine_live_lanes": float(self.pagepool.live_count),
+                "engine_lane_capacity": float(self.capacity),
+                "engine_occupancy_ratio": self.pagepool.occupancy()}
+
+    # -------------------------------------------------------------- internals
+    def _any_live(self) -> bool:
+        return self.pagepool.live_count > 0
+
+    def _init_wave(self):
+        self._state = None          # growth path not needed: fresh build
+        self._maybe_refresh()
+        st = self.dqf.store
+        self.pagepool.reset(st.capacity)
+        self._state = pg.zero_paged_state(
+            self.capacity, self.cfg.full_pool, self._d,
+            self.pagepool.n_pages, self.page_cols, st.capacity)
+        self._table_key = None
+        self._refill()
+
+    def _maybe_refresh(self):
+        """Track the store epoch; mirror of WaveEngine._maybe_refresh."""
+        st = self.dqf.store
+        if st.epoch == self._epoch:
+            return
+        if st.remap_epoch != self._remap_epoch and self._any_live():
+            raise RuntimeError(
+                "store compacted while lanes are in flight — drain the "
+                "engine before calling compact()")
+        self.dqf._sync_device()
+        if self._state is not None:
+            if st.remap_epoch != self._remap_epoch:
+                # external compaction, engine drained: rebuild from scratch
+                self.pagepool.reset(st.capacity)
+                self._state = pg.zero_paged_state(
+                    self.capacity, self.cfg.full_pool, self._d,
+                    self.pagepool.n_pages, self.page_cols, st.capacity)
+            elif st.capacity != self._cap:
+                self._grow_paged(self._cap, st.capacity)
+            self._table_key = None
+        self._cap = st.capacity
+        self._epoch = st.epoch
+        self._remap_epoch = st.remap_epoch
+
+    def _grow_paged(self, old_cap: int, new_cap: int):
+        """Re-page live lanes after capacity growth (sentinel id moved).
+
+        Rare host round-trip: densify the live lanes' seen rows at the
+        old width, rebuild the pool for the new width (``pages_per_lane``
+        changed), re-adopt the same lane slots, and re-paginate.  The
+        pool shape changes, so the next tick recompiles — growth is an
+        epoch event, not a steady-state one.
+        """
+        pool = self.pagepool
+        live = pool.live_lanes()
+        if live.size:
+            dense = np.asarray(pg.dense_seen(
+                self._state.seen_pages, jnp.asarray(pool.page_table[live]),
+                old_cap + 1))
+        pool.reset(new_cap)
+        pool.adopt(live)
+        pc = self.page_cols
+        pages_np = np.zeros((pool.n_pages, pc), bool)
+        for j, lane in enumerate(live):
+            row = np.zeros(pool.pages_per_lane * pc, bool)
+            row[:old_cap] = dense[j, :old_cap]   # old sentinel col dropped
+            row[new_cap] = True
+            pages_np[pool.page_table[lane]] = row.reshape(-1, pc)
+        ids = np.asarray(self._state.ids)
+        ids = np.where(ids == old_cap, new_cap, ids).astype(np.int32)
+        self._state = self._state._replace(
+            ids=jnp.asarray(ids), seen_pages=jnp.asarray(pages_np))
+
+    def _bind_table(self, lanes_np: np.ndarray):
+        """Score table for this tick's bucket (PQ LUTs follow the bucket).
+
+        Cached on ``(epoch, bucket lanes)`` — steady-state ticks with an
+        unchanged bucket reuse the bound table; any admission/retirement
+        or store mutation rebinds.  Tiered stores rebind every tick
+        (``_tier_begin_tick`` clears the key: the cache arena moved).
+        """
+        key = (self._epoch, lanes_np.tobytes())
+        if self._table is not None and key == self._table_key:
+            return self._table
+        qtable = self.dqf._quant_table()
+        if qtable is None:
+            self._table = self.dqf._row_table()
+        else:
+            self._table = qtable.with_queries(
+                jnp.asarray(self._queries[lanes_np]))
+        self._table_key = key
+        return self._table
+
+    def _refill(self):
+        """Admit queued requests into freshly allocated lanes.
+
+        The admission batch is padded to a power-of-two bucket (compile
+        keys match the tick's) and seeded with the stacked-tenant hot
+        phase; :func:`repro.serving.paged.admit_wave` scatters the seeded
+        lanes device-side.  Requests whose tenant was evicted (or
+        re-created — the ``gen`` check) while queued drop immediately.
+        """
+        reg = self.dqf.tenants
+        free = self.pagepool.free_lane_count
+        reqs = []
+        while self.queue and len(reqs) < free:
+            r = self.queue.popleft()
+            name, gen = r[3], r[4]
+            if name in reg and reg.get(name).gen == gen:
+                reqs.append(r)
+            else:
+                self._results[r[0]] = self._dropped_result(name)
+                self.stats.dropped += 1
+        if not reqs:
+            return
+        m = len(reqs)
+        mp = pg.bucket_width(m, self.capacity, self.min_bucket)
+        lanes = self.pagepool.alloc(m)
+        lanes_pad = np.full(mp, self.capacity, np.int32)
+        lanes_pad[:m] = lanes
+        pt_pad = self.pagepool.page_table[lanes_pad]
+        qs = np.zeros((mp, self._d), np.float32)
+        qs[:m] = np.stack([r[1] for r in reqs])
+        tidx = np.zeros(mp, np.int32)
+        tidx[:m] = [reg.slot_of(r[3]) for r in reqs]
+        stk = reg.stacked(self.dqf.store)
+        tidx_d = jnp.asarray(tidx)
+        q_d = jnp.asarray(qs)
+        hot_pool, _ = hot_phase_stacked(
+            stk.x, stk.adj, stk.entries, stk.mask, tidx_d, q_d,
+            pool_size=self.cfg.hot_pool, max_hops=self.cfg.max_hops,
+            mode=self.cfg.hot_mode)
+        hf = hot_features(hot_pool, self.cfg.k)
+        seeded = _seed_full_state(hot_pool, stk.ids[tidx_d],
+                                  self.dqf.store.capacity,
+                                  self.cfg.full_pool,
+                                  self.dqf._dev["live_pad"])
+        admit_mask = np.zeros(mp, bool)
+        admit_mask[:m] = True
+        self._state = pg.admit_wave(
+            self._state, jnp.asarray(lanes_pad), jnp.asarray(pt_pad),
+            seeded, q_d, hf.first, hf.first_div_kth,
+            jnp.asarray(admit_mask), page_cols=self.page_cols)
+        t_seed = time.perf_counter()
+        for j, lane in enumerate(lanes):
+            lane = int(lane)
+            self._queries[lane] = reqs[j][1]
+            rid, t_in = reqs[j][0], reqs[j][2]
+            self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
+                                     reqs[j][4])
+            wait_ms = (t_seed - t_in) * 1e3
+            self.stats.queue_wait_ms.append(wait_ms)
+            if self.registry is not None:
+                self._h_qwait.observe(wait_ms)
+        self._table_key = None
+
+    def _dropped_result(self, tenant: str) -> dict:
+        k = self.cfg.k
+        return {"ids": np.full(k, self.dqf.store.capacity, np.int32),
+                "dists": np.full(k, np.inf, np.float32),
+                "hops": 0, "tenant": tenant, "dropped": True}
+
+    def _tier_begin_tick(self):
+        """Tier housekeeping: pins follow the allocator's pages.
+
+        The pin set is derived from the page-table-live lanes only — the
+        moment a lane's pages free, its blocks stop being pinned and the
+        cache can evict them.  Frontier prefetch predicts each live
+        lane's next expansion from the slot arrays, same as the fixed
+        engine's.
+        """
+        st = self.dqf.store
+        if not st.tiered:
+            return
+        cache = st.full_phase_cache()
+        live = self.pagepool.live_lanes()
+        if live.size:
+            live_d = jnp.asarray(live)
+            ids = np.asarray(self._state.ids[live_d])
+            ids = ids[ids < st.n]
+            bids = cache.blocks_of_rows(ids)
+            cache.pin_blocks(bids)
+            self._last_pinned = int(len(bids))
+        else:
+            cache.pin_blocks(())
+            self._last_pinned = 0
+        cache.apply_prefetch()
+        cache.maintain()
+        if self.registry is not None:
+            self._g_tick_hit.set(cache.stats_snapshot()["hit_rate"])
+        if self.prefetch and live.size:
+            sub = bs.BeamState(
+                PoolState(ids=self._state.ids[live_d],
+                          dists=self._state.dists[live_d],
+                          expanded=self._state.expanded[live_d]),
+                None, None, self._state.active[live_d])
+            nxt = np.asarray(bs.next_expansions(sub, st.capacity))
+            nxt = nxt[nxt < st.n]
+            if nxt.size:
+                nbrs = self.dqf.full.adj[nxt]
+                cache.prefetch_async(cache.blocks_of_rows(
+                    np.concatenate([nxt, nbrs[nbrs >= 0]])))
+        self._table_key = None      # cache arena moved: rebind the table
+
+    def _do_compact(self):
+        """Drained compaction at a safe tick boundary; serving resumes."""
+        self.dqf.compact()
+        self.stats.compactions += 1
+        self._draining = False
+        st = self.dqf.store
+        self._epoch = st.epoch
+        self._remap_epoch = st.remap_epoch
+        self._cap = st.capacity
+        self.pagepool.reset(st.capacity)
+        self._state = pg.zero_paged_state(
+            self.capacity, self.cfg.full_pool, self._d,
+            self.pagepool.n_pages, self.page_cols, st.capacity)
+        self._table_key = None
+
+    def _tick(self):
+        self._maybe_refresh()
+        self._tier_begin_tick()
+        lanes_np, pt_np, n_live = self.pagepool.live_bucket(self.min_bucket)
+        if n_live:
+            table = self._bind_table(lanes_np)
+            with self._tick_ann():
+                self._state, (act, hops_b, ids_b, dists_b) = self._tick_fn(
+                    self._state, jnp.asarray(lanes_np), jnp.asarray(pt_np),
+                    table, self.dqf._dev["adj_pad"],
+                    self.dqf._dev["live_pad"])
+            self.stats.ticks += 1
+            active = np.asarray(act)
+            now = time.perf_counter()
+            retiring = [j for j in range(n_live) if not active[j]
+                        and self._lane_meta[lanes_np[j]] is not None]
+            if retiring:
+                self._retire(lanes_np, retiring, np.asarray(ids_b),
+                             np.asarray(dists_b), np.asarray(hops_b), now)
+        else:
+            self.stats.ticks += 1
+        if self.auto_compact and not self._draining \
+                and self.dqf.store.should_compact(self.compact_ratio):
+            self._draining = True
+        if self._draining:
+            if not self._any_live():
+                self._do_compact()
+                self._refill()
+            return
+        self._refill()
+
+    def _retire(self, lanes_np: np.ndarray, retiring: list,
+                ids_b: np.ndarray, dists_b: np.ndarray,
+                hops_b: np.ndarray, now: float):
+        """Harvest results for retiring bucket rows, then free their lanes."""
+        rl = [int(lanes_np[j]) for j in retiring]
+        batch_ids, batch_dists = retire_batch(
+            self.dqf.store, self.dqf._rerank_k, self.cfg.k,
+            ids_b[retiring], dists_b[retiring], self._queries[rl])
+        for i, j in enumerate(retiring):
+            lane = rl[i]
+            rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
+            ids, dists = batch_ids[i], batch_dists[i]
+            hops = int(hops_b[j])
+            self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
+                                  "tenant": tenant}
+            self.stats.completed += 1
+            self.stats.total_hops += hops
+            if hops >= self.cfg.max_hops:
+                self.stats.straggled += 1
+            service_ms = (now - t_seed) * 1e3
+            self.stats.latencies_ms.append((now - t_in) * 1e3)
+            if self.registry is not None:
+                self._h_service.observe(service_ms)
+                self._h_hops.observe(hops)
+            self._lane_meta[lane] = None
+            if tenant in self.dqf.tenants \
+                    and self.dqf.tenants.get(tenant).gen == gen:
+                self.dqf.record(ids[None, :], tenant=tenant)
+                self.dqf.maybe_rebuild_hot(tenant=tenant)
+        self.pagepool.free(rl)

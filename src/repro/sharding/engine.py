@@ -50,6 +50,7 @@ from repro.core.dynamic_search import _seed_full_state, hot_phase_stacked
 from repro.core.features import feature_matrix, hot_features
 from repro.core.types import INF_DIST, HotFeatures, PoolState, SearchStats
 from repro.obs import ObsConfig
+from repro.serving import paged as pg
 from repro.serving.engine import LATENCY_WINDOW, EngineStats
 from repro.tenancy import DEFAULT_TENANT
 from repro.tenancy.registry import _PAD_VALUE
@@ -67,6 +68,9 @@ class ShardedEngine:
                  tick_hops: int = 8,
                  latency_window: int = LATENCY_WINDOW,
                  auto_compact: bool = True, compact_ratio: float = 0.3,
+                 paged: bool = False,
+                 page_cols: int = pg.DEFAULT_PAGE_COLS,
+                 min_bucket: int = pg.MIN_BUCKET,
                  obs: Optional[ObsConfig] = None):
         sharded._require()
         if not sharded._stacked_ok:
@@ -80,6 +84,16 @@ class ShardedEngine:
         self.tick_hops = tick_hops
         self.auto_compact = auto_compact
         self.compact_ratio = compact_ratio
+        # Paged mode (repro.serving.paged): per-shard slot arrays share ONE
+        # host allocator — a lane's seen pages live at the same page-table
+        # row on every shard's pool, so cross-shard merge still sees a
+        # consistent bucket.  Lanes admit/retire continuously, per-tick
+        # work tracks live lanes (bucket width = live count rounded to a
+        # power of two) instead of wave capacity.
+        self.paged = bool(paged)
+        self.page_cols = int(page_cols)
+        self.min_bucket = int(min_bucket)
+        self.pagepool = None            # built after the stacked sync
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats(
             latencies_ms=collections.deque(maxlen=latency_window),
@@ -94,9 +108,14 @@ class ShardedEngine:
         self._cap = sharded._stk_cap
         self._epoch_key = sharded._epoch_key()
         self._remap_key = self._remap_epochs()
+        if self.paged:
+            self.pagepool = pg.PagePool(wave_size, self._cap,
+                                        page_cols=page_cols)
         self._tick_fn = self._build_tick()
         self._seed_fn = None            # built lazily, keyed on common cap
         self._seed_cap = -1
+        self._admit_fn = None           # paged admission, keyed on cap
+        self._admit_cap = -1
         self._hot_key = None            # common-padded registry stack cache
         self._hot_stk = None
         self._lane_meta = [None] * wave_size
@@ -107,7 +126,88 @@ class ShardedEngine:
         self._next_rid = 0
 
     # ------------------------------------------------------------ jitted ops
+    def _build_tick_paged(self):
+        """Bucketed paged tick, vmapped per shard + cross-shard merge.
+
+        The page table and gather bucket are shard-invariant (one host
+        allocator), so ``lanes``/``pt`` broadcast with ``in_axes=None``
+        while every :class:`~repro.serving.paged.PagedState` leaf carries
+        the leading shard axis.  Per-tick work tracks the bucket width —
+        the live-lane count rounded to a power of two — not the wave.
+        """
+        cfg = self.cfg
+        tree = (self.sharded.tree.arrays
+                if self.sharded.tree is not None else None)
+        tick_hops = self.tick_hops
+        shift = self.pagepool.page_shift
+
+        if cfg.fused:
+            from repro.kernels import ops as kops
+
+            def shard_tick(ps, x_pad, adj_pad, live_pad, lanes, pt):
+                wv = pg.gather_wave(ps, lanes)
+                hs = kops.fused_hop_paged(
+                    bs.to_hop_state(wv.beam, evals_done=wv.evals), pt,
+                    adj_pad, wv.queries, live_pad, x_pad, tree,
+                    wv.hot_first, wv.hot_ratio, page_cols=self.page_cols,
+                    hops=tick_hops, max_hops=cfg.max_hops, k=cfg.k,
+                    eval_gap=cfg.eval_gap, add_step=0,
+                    tree_depth=cfg.tree_depth)
+                beam, evals = bs.from_hop_state(hs), hs.evals_done
+                ps = pg.scatter_wave(ps, lanes, beam, evals)
+                return ps, (beam.active, beam.pool.ids, beam.pool.dists,
+                            beam.stats.hops)
+        else:
+            def shard_tick(ps, x_pad, adj_pad, live_pad, lanes, pt):
+                wv = pg.gather_wave(ps, lanes)
+
+                def one(carry, _):
+                    s, ev = carry
+                    s = pg.expand_step_paged(x_pad, adj_pad, wv.queries,
+                                             s, pt, shift, live_pad)
+                    s = s._replace(
+                        active=s.active & (s.stats.hops < cfg.max_hops))
+                    if tree is not None:
+                        due = (s.stats.dist_count // cfg.eval_gap) > ev
+                        due = due & s.active
+                        feats = feature_matrix(
+                            HotFeatures(wv.hot_first, wv.hot_ratio),
+                            s.pool, s.stats, cfg.k)
+                        stop = (predict_jax(tree, feats, cfg.tree_depth)
+                                < 0.5) & due
+                        ev = jnp.where(
+                            due, s.stats.dist_count // cfg.eval_gap, ev)
+                        s = s._replace(
+                            active=s.active & ~stop,
+                            stats=s.stats._replace(
+                                terminated_early=s.stats.terminated_early
+                                | (stop & s.active)))
+                    return (s, ev), None
+
+                (beam, evals), _ = jax.lax.scan(
+                    one, (wv.beam, wv.evals), None, length=tick_hops)
+                ps = pg.scatter_wave(ps, lanes, beam, evals)
+                return ps, (beam.active, beam.pool.ids, beam.pool.dists,
+                            beam.stats.hops)
+
+        vtick = jax.vmap(shard_tick, in_axes=(0, 0, 0, 0, None, None))
+
+        def fn(ps, x_pad, adj_pad, live_pad, gid_pad, lanes, pt):
+            ps, (act, ids, dists, hops) = vtick(ps, x_pad, adj_pad,
+                                                live_pad, lanes, pt)
+            g = jax.vmap(lambda g_, i_: g_[i_])(gid_pad, ids)
+            alive = jax.vmap(lambda l_, i_: l_[i_])(live_pad, ids)
+            bad = (g < 0) | ~alive
+            d = jnp.where(bad, INF_DIST, dists)
+            g = jnp.where(bad, -1, g)
+            m_ids, m_dists = merge_topk(d, g, self.cfg.k)
+            return ps, (act, hops), m_ids, m_dists
+
+        return jax.jit(fn)
+
     def _build_tick(self):
+        if self.paged:
+            return self._build_tick_paged()
         cfg = self.cfg
         tree = (self.sharded.tree.arrays
                 if self.sharded.tree is not None else None)
@@ -222,18 +322,22 @@ class ShardedEngine:
 
     def _collect_metrics(self) -> dict:
         s = self.stats
+        live = (self.pagepool.live_count if self.paged
+                else sum(m is not None for m in self._lane_meta))
         return {"sharded_engine_completed_total": float(s.completed),
                 "sharded_engine_straggled_total": float(s.straggled),
                 "sharded_engine_dropped_total": float(s.dropped),
                 "sharded_engine_ticks_total": float(s.ticks),
                 "sharded_engine_compactions_total": float(s.compactions),
                 "sharded_engine_queue_depth": float(len(self.queue)),
-                "sharded_engine_live_lanes": float(
-                    sum(m is not None for m in self._lane_meta)),
-                "sharded_engine_wave_size": float(self.wave)}
+                "sharded_engine_live_lanes": float(live),
+                "sharded_engine_wave_size": float(self.wave),
+                "sharded_engine_occupancy_ratio": live / float(self.wave)}
 
     # -------------------------------------------------------------- internals
     def _any_live(self) -> bool:
+        if self.paged:
+            return self.pagepool.live_count > 0
         return any(m is not None for m in self._lane_meta)
 
     def _remap_epochs(self) -> tuple:
@@ -252,8 +356,11 @@ class ShardedEngine:
         old_cap = self._cap
         self._stk = self.sharded._sync_stacked()
         if self._state is not None and self.sharded._stk_cap != old_cap:
-            self._state = self._grow_state(self._state, old_cap,
-                                           self.sharded._stk_cap)
+            if self.paged:
+                self._grow_paged(old_cap, self.sharded._stk_cap)
+            else:
+                self._state = self._grow_state(self._state, old_cap,
+                                               self.sharded._stk_cap)
         self._cap = self.sharded._stk_cap
         self._epoch_key = key
         self._remap_key = self._remap_epochs()
@@ -286,9 +393,47 @@ class ShardedEngine:
             terminated_early=jnp.zeros((S, W), bool))
         return bs.BeamState(pool, seen, stats, jnp.zeros((S, W), bool))
 
+    def _zero_paged(self):
+        """All-idle per-shard paged state (leading shard axis, shared pt)."""
+        single = pg.zero_paged_state(
+            self.wave, self.cfg.full_pool, self._d, self.pagepool.n_pages,
+            self.page_cols, self._cap)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.S,) + a.shape),
+            single)
+
+    def _grow_paged(self, old_cap: int, new_cap: int):
+        """Re-page live lanes on every shard after common-cap growth."""
+        pool = self.pagepool
+        live = pool.live_lanes()
+        if live.size:
+            pt = jnp.asarray(pool.page_table[live])
+            dense = np.asarray(jax.vmap(
+                lambda sp: pg.dense_seen(sp, pt, old_cap + 1))(
+                self._state.seen_pages))            # (S, m, old_cap+1)
+        pool.reset(new_cap)
+        pool.adopt(live)
+        pc = self.page_cols
+        pages_np = np.zeros((self.S, pool.n_pages, pc), bool)
+        for j, lane in enumerate(live):
+            rows = np.zeros((self.S, pool.pages_per_lane * pc), bool)
+            rows[:, :old_cap] = dense[:, j, :old_cap]
+            rows[:, new_cap] = True
+            pages_np[:, pool.page_table[lane]] = rows.reshape(
+                self.S, -1, pc)
+        ids = np.asarray(self._state.ids)
+        ids = np.where(ids == old_cap, new_cap, ids).astype(np.int32)
+        self._state = self._state._replace(
+            ids=jnp.asarray(ids), seen_pages=jnp.asarray(pages_np))
+
     def _init_wave(self):
         self._maybe_refresh()
         S, W, d = self.S, self.wave, self._d
+        if self.paged:
+            self.pagepool.reset(self._cap)
+            self._state = self._zero_paged()
+            self._refill()
+            return
         self._queries = np.zeros((W, d), np.float32)
         self._tidx = np.zeros((S, W), np.int32)
         self._hot_first = jnp.zeros((S, W), jnp.float32)
@@ -377,6 +522,87 @@ class ShardedEngine:
 
         return jax.jit(fn)
 
+    def _build_admit_paged(self, cap: int):
+        """Jitted paged admission: vmapped hot seed + per-shard scatter.
+
+        Runs the stacked hot phase for the admission bucket on every
+        shard, then scatters each shard's seeded lanes into its slot
+        arrays and page pool (:func:`repro.serving.paged.admit_wave`) —
+        padding bucket entries target the scratch lane and stay inert.
+        """
+        cfg = self.cfg
+        pc = self.page_cols
+
+        def shard_seed(xs, adjs, ents, mask, hids, tidx, live, q):
+            pool, _ = hot_phase_stacked(
+                xs, adjs, ents, mask, tidx, q, pool_size=cfg.hot_pool,
+                max_hops=cfg.max_hops, mode=cfg.hot_mode)
+            hf = hot_features(pool, cfg.k)
+            seeded = _seed_full_state(pool, hids[tidx], cap,
+                                      cfg.full_pool, live)
+            return seeded, hf.first, hf.first_div_kth
+
+        vseed = jax.vmap(shard_seed, in_axes=(0, 0, 0, 0, 0, 0, 0, None))
+
+        def fn(ps, xs, adjs, ents, mask, hids, tidx, live_pad, lanes, pt,
+               queries, admit_mask):
+            seeded, first, ratio = vseed(xs, adjs, ents, mask, hids,
+                                         tidx, live_pad, queries)
+
+            def adm(ps_s, seeded_s, first_s, ratio_s):
+                return pg.admit_wave(ps_s, lanes, pt, seeded_s, queries,
+                                     first_s, ratio_s, admit_mask,
+                                     page_cols=pc)
+
+            return jax.vmap(adm)(ps, seeded, first, ratio)
+
+        return jax.jit(fn)
+
+    def _refill_paged(self):
+        """Admit queued requests into freshly allocated lanes (paged)."""
+        reg0 = self.sharded.shards[0].dqf.tenants
+        free = self.pagepool.free_lane_count
+        reqs = []
+        while self.queue and len(reqs) < free:
+            r = self.queue.popleft()
+            name, gen = r[3], r[4]
+            if name in reg0 and reg0.get(name).gen == gen:
+                reqs.append(r)
+            else:
+                self._results[r[0]] = self._dropped_result(name)
+                self.stats.dropped += 1
+        if not reqs:
+            return
+        m = len(reqs)
+        mp = pg.bucket_width(m, self.wave, self.min_bucket)
+        lanes = self.pagepool.alloc(m)
+        lanes_pad = np.full(mp, self.wave, np.int32)
+        lanes_pad[:m] = lanes
+        pt_pad = self.pagepool.page_table[lanes_pad]
+        qs = np.zeros((mp, self._d), np.float32)
+        qs[:m] = np.stack([r[1] for r in reqs])
+        tidx = np.zeros((self.S, mp), np.int32)
+        for j, r in enumerate(reqs):
+            for s, sh in enumerate(self.sharded.shards):
+                tidx[s, j] = sh.dqf.tenants.slot_of(r[3])
+        admit_mask = np.zeros(mp, bool)
+        admit_mask[:m] = True
+        if self._admit_fn is None or self._admit_cap != self._cap:
+            self._admit_fn = self._build_admit_paged(self._cap)
+            self._admit_cap = self._cap
+        xs, adjs, ents, mask, hids = self._hot_stacks()
+        self._state = self._admit_fn(
+            self._state, xs, adjs, ents, mask, hids, jnp.asarray(tidx),
+            self._stk["live_pad"], jnp.asarray(lanes_pad),
+            jnp.asarray(pt_pad), jnp.asarray(qs), jnp.asarray(admit_mask))
+        t_seed = time.perf_counter()
+        for j, lane in enumerate(lanes):
+            lane = int(lane)
+            rid, t_in = reqs[j][0], reqs[j][2]
+            self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
+                                     reqs[j][4])
+            self.stats.queue_wait_ms.append((t_seed - t_in) * 1e3)
+
     def _refill(self):
         """Seed free lanes from the queue in ONE jitted dispatch.
 
@@ -385,6 +611,8 @@ class ShardedEngine:
         splice), so refills never recompile for a new batch size and cost
         one device round-trip regardless of the shard count.
         """
+        if self.paged:
+            return self._refill_paged()
         reg0 = self.sharded.shards[0].dqf.tenants
         free = [i for i, m in enumerate(self._lane_meta) if m is None]
         reqs = []
@@ -437,10 +665,16 @@ class ShardedEngine:
         self._cap = self.sharded._stk_cap
         self._epoch_key = self.sharded._epoch_key()
         self._remap_key = self._remap_epochs()
-        self._state = self._zero_state()
+        if self.paged:
+            self.pagepool.reset(self._cap)
+            self._state = self._zero_paged()
+        else:
+            self._state = self._zero_state()
 
     def _tick(self):
         self._maybe_refresh()
+        if self.paged:
+            return self._tick_paged()
         state, evals, m_ids, m_dists = self._tick_fn(
             self._state, self._stk["x_pad"], self._stk["adj_pad"],
             self._stk["live_pad"], self._stk["gid_pad"],
@@ -467,6 +701,66 @@ class ShardedEngine:
                 self._refill()
             return
         self._refill()
+
+    def _tick_paged(self):
+        """One bucketed tick over the live lanes (paged mode)."""
+        lanes_np, pt_np, n_live = self.pagepool.live_bucket(self.min_bucket)
+        if n_live:
+            state, (act, hops_b), m_ids, m_dists = self._tick_fn(
+                self._state, self._stk["x_pad"], self._stk["adj_pad"],
+                self._stk["live_pad"], self._stk["gid_pad"],
+                jnp.asarray(lanes_np), jnp.asarray(pt_np))
+            self._state = state
+            self.stats.ticks += 1
+            lane_live = np.asarray(act).any(axis=0)     # (B,)
+            now = time.perf_counter()
+            retiring = [j for j in range(n_live) if not lane_live[j]
+                        and self._lane_meta[int(lanes_np[j])] is not None]
+            if retiring:
+                self._retire_paged(lanes_np, retiring, np.asarray(m_ids),
+                                   np.asarray(m_dists),
+                                   np.asarray(hops_b), now)
+        else:
+            self.stats.ticks += 1
+        if self.auto_compact and not self._draining and any(
+                sh.dqf.store.should_compact(self.compact_ratio)
+                for sh in self.sharded.shards):
+            self._draining = True
+        if self._draining:
+            if not self._any_live():
+                self._do_compact()
+                self._refill()
+            return
+        self._refill()
+
+    def _retire_paged(self, lanes_np, retiring, m_ids, m_dists, hops_b,
+                      now):
+        """Harvest merged results for retiring bucket rows, free lanes."""
+        feed = {}                                   # (tenant, gen) -> [ids]
+        rl = []
+        for j in retiring:
+            lane = int(lanes_np[j])
+            rl.append(lane)
+            rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
+            ids = m_ids[j].astype(np.int64)
+            dists = np.where(ids < 0, np.inf,
+                             m_dists[j]).astype(np.float32)
+            hops = int(hops_b[:, j].max())
+            self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
+                                  "tenant": tenant}
+            self.stats.completed += 1
+            self.stats.total_hops += int(hops_b[:, j].sum())
+            if hops >= self.cfg.max_hops:
+                self.stats.straggled += 1
+            self.stats.latencies_ms.append((now - t_in) * 1e3)
+            self._lane_meta[lane] = None
+            feed.setdefault((tenant, gen), []).append(ids)
+        self.pagepool.free(np.asarray(rl, np.int32))
+        reg0 = self.sharded.shards[0].dqf.tenants
+        for (tenant, gen), rows in feed.items():
+            if tenant in reg0 and reg0.get(tenant).gen == gen:
+                self.sharded.record(np.stack(rows), tenant=tenant)
+                self.sharded.maybe_rebuild_hot(tenant=tenant)
 
     def _retire_lanes(self, state, m_ids, m_dists, retiring, now):
         """Harvest merged results for every lane retiring this tick."""

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.core import DQF, DQFConfig, QuantConfig, ZipfWorkload
 from repro.core import beam_search as bs
 from repro.kernels import ops, ref
-from repro.kernels.fused_hop import fused_hop_pallas
+from repro.kernels.fused_hop import fused_hop_pallas, fused_hop_paged_pallas
 from tests.conftest import make_clustered
 
 RNG = np.random.default_rng(77)
@@ -193,6 +193,96 @@ def test_ops_dispatch_and_table_spec():
     assert ops.table_spec(x_pad)[0] == "f32"
     with pytest.raises(TypeError, match="composed"):
         ops.table_spec(object())
+
+
+# ------------------------------------------------------- paged seen variant
+def paginate(dense, pt, n_pages, page_cols):
+    """Scatter dense (B, n1) seen rows into a page pool through ``pt``."""
+    B, n1 = dense.shape
+    ppl = pt.shape[1]
+    pad = ppl * page_cols - n1
+    pages = jnp.pad(dense, ((0, 0), (0, pad))).reshape(B, ppl, page_cols)
+    return jnp.zeros((n_pages, page_cols), bool).at[pt].set(pages)
+
+
+def make_paged(hs, B, n1, page_cols=64, seed=123):
+    """A paged twin of a dense HopState with a *shuffled* page table, so
+    the physical layout genuinely diverges from the logical order."""
+    ppl = -(-n1 // page_cols)
+    rng = np.random.default_rng(seed)
+    pt = jnp.asarray(rng.permutation(B * ppl).astype(np.int32).reshape(
+        B, ppl))
+    pool = paginate(hs.seen, pt, B * ppl + ppl, page_cols)
+    return hs._replace(seen=pool), pt
+
+
+@pytest.mark.parametrize("mode", ["f32", "sq8", "pq"])
+@pytest.mark.parametrize("use_tree", [False, True])
+def test_paged_interpret_parity(mode, use_tree):
+    """Paged oracle and paged Pallas kernel ≡ the dense kernel, bit for
+    bit, with the seen bitmap walked through a shuffled page table."""
+    x, x_pad, adj_pad, live_pad = make_world()
+    B, L, H, page_cols = 8, 16, 15, 64
+    n1 = adj_pad.shape[0]
+    q = jnp.asarray(RNG.standard_normal((B, 18)).astype(np.float32))
+    entries = jnp.asarray(np.arange(0, 220, 27).astype(np.int32))[:B]
+    if mode == "f32":
+        table, spec = x_pad, ("f32", x_pad, None, None)
+    else:
+        table, spec = quant_tables(x, q, mode)
+    m, t0, t1, t2 = spec
+    tree = make_tree() if use_tree else None
+    hf = jnp.asarray(RNG.uniform(1, 6, B).astype(np.float32)) \
+        if use_tree else None
+    hr = jnp.asarray(RNG.uniform(0.5, 1.5, B).astype(np.float32)) \
+        if use_tree else None
+    hs = make_hop_state(table, q, entries, L, live_pad)
+    hs_p, pt = make_paged(hs, B, n1, page_cols)
+    kw = dict(hops=H, max_hops=40, k=5, eval_gap=25, add_step=6,
+              tree_depth=4)
+    want = ref.fused_hop(hs, adj_pad, q, live_pad, m, t0, t1, t2, tree,
+                         hf, hr, **kw)
+    got_o = ref.fused_hop_paged(hs_p, pt, adj_pad, q, live_pad, m, t0, t1,
+                                t2, tree, hf, hr, page_cols=page_cols, **kw)
+    got_p = fused_hop_paged_pallas(hs_p, pt, adj_pad, q, live_pad, m, t0,
+                                   t1, t2, tree, hf, hr, bl=4,
+                                   interpret=True, **kw)
+    # the paged seen densifies back to the dense kernel's bitmap ...
+    dense_back = np.asarray(got_o.seen)[np.asarray(pt)].reshape(
+        B, -1)[:, :n1]
+    np.testing.assert_array_equal(dense_back, np.asarray(want.seen))
+    np.testing.assert_array_equal(np.asarray(got_p.seen),
+                                  np.asarray(got_o.seen))
+    # ... and every other field matches exactly
+    empty = jnp.zeros_like(want.seen) > 0
+    pool_empty = jnp.zeros_like(got_o.seen) > 0
+    assert_state_equal(want._replace(seen=empty),
+                       got_o._replace(seen=empty))
+    assert_state_equal(got_o._replace(seen=pool_empty),
+                       got_p._replace(seen=pool_empty))
+
+
+def test_paged_ops_dispatch_and_block_check():
+    x, x_pad, adj_pad, live_pad = make_world()
+    B, page_cols = 8, 64
+    n1 = adj_pad.shape[0]
+    q = jnp.asarray(RNG.standard_normal((B, 18)).astype(np.float32))
+    entries = jnp.asarray(np.arange(0, 220, 27).astype(np.int32))[:B]
+    hs = make_hop_state(x_pad, q, entries, 12, live_pad)
+    hs_p, pt = make_paged(hs, B, n1, page_cols)
+    # CPU default dispatch = paged oracle
+    got = ops.fused_hop_paged(hs_p, pt, adj_pad, q, live_pad, x_pad,
+                              page_cols=page_cols, hops=3, max_hops=64)
+    want = ref.fused_hop_paged(hs_p, pt, adj_pad, q, live_pad, "f32",
+                               x_pad, page_cols=page_cols, hops=3,
+                               max_hops=64)
+    assert_state_equal(want, got)
+    # the paged kernel requires the lane block to divide the wave (a
+    # padding lane would write stale bytes back through a real lane's pt)
+    with pytest.raises(ValueError, match="bl"):
+        fused_hop_paged_pallas(hs_p, pt, adj_pad, q, live_pad, "f32",
+                               x_pad, hops=3, max_hops=64, bl=3,
+                               interpret=True)
 
 
 # -------------------------------------------------------- integration layer

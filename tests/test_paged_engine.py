@@ -1,0 +1,344 @@
+"""Ragged paged wave engine (ISSUE 8): continuous admission over paged state.
+
+The acceptance bar is *bitwise* identity: a PagedWaveEngine produces the
+same per-query results (ids, dists, tie order) as the fixed-wave
+WaveEngine, across score variants (f32 / sq8 / PQ), composed and fused
+ticks, mixed tenants, and store churn applied at drain boundaries — plus
+the allocator contracts (free lists, cu-lens, dense round-trip) and the
+serving behaviours the ragged design exists for: stragglers hold one lane
+not a wave, evicted tenants drop under continuous admission, occupancy
+gauges track live lanes.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import DQF, DQFConfig, QuantConfig, ZipfWorkload, \
+    ground_truth, recall_at_k
+from repro.obs import ObsConfig
+from repro.serving import paged as pg
+from repro.serving.engine import WaveEngine
+from repro.serving.paged_engine import PagedWaveEngine
+
+from tests.conftest import make_clustered
+from tests.test_fused_hop import _built, _fused_cfg
+
+
+@pytest.fixture(scope="module")
+def world_x():
+    return make_clustered(n=900, d=16, clusters=12, seed=31)
+
+
+def _assert_same_results(oa, ob, ra, rb):
+    for i in range(len(ra)):
+        a, b = oa["results"][ra[i]], ob["results"][rb[i]]
+        np.testing.assert_array_equal(a["ids"], b["ids"],
+                                      err_msg=f"query {i} ids")
+        np.testing.assert_array_equal(a["dists"], b["dists"],
+                                      err_msg=f"query {i} dists")
+        assert a["hops"] == b["hops"], (i, a["hops"], b["hops"])
+
+
+# ------------------------------------------------------------- bitwise parity
+@pytest.mark.parametrize("quant_mode", ["none", "sq8", "pq"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_paged_bitwise_equals_fixed_wave(world_x, quant_mode, fused):
+    """Paged ≡ fixed per query, every table variant, composed and fused.
+
+    The schedules must also agree: identical tick counts prove the paged
+    engine runs the same number of device dispatches, just narrower.
+    """
+    x = world_x
+    qc = QuantConfig() if quant_mode == "none" else \
+        QuantConfig(mode=quant_mode, pq_m=4, rerank_k=16)
+    da = _built(_fused_cfg(False, quant=qc), x)
+    db = _built(_fused_cfg(fused, quant=qc), x)
+    q = ZipfWorkload(x, seed=6).sample(40)
+    ea = WaveEngine(da, wave_size=16, tick_hops=6, prefetch=False)
+    eb = PagedWaveEngine(db, capacity=16, tick_hops=6, page_cols=128,
+                         prefetch=False)
+    assert eb._fused is fused
+    ra, rb = ea.submit(q), eb.submit(q)
+    oa, ob = ea.run_until_drained(), eb.run_until_drained()
+    _assert_same_results(oa, ob, ra, rb)
+    assert ea.stats.ticks == eb.stats.ticks
+
+
+def test_paged_parity_under_churn_at_drain_boundaries(world_x):
+    """Identical insert/delete churn applied to both stores between drains
+    keeps the engines bitwise-identical round after round."""
+    x = world_x
+    da = _built(_fused_cfg(False), x)
+    db = _built(_fused_cfg(True), x)
+    ea = WaveEngine(da, wave_size=16, tick_hops=6, prefetch=False)
+    eb = PagedWaveEngine(db, capacity=16, tick_hops=6, page_cols=128,
+                         prefetch=False)
+    wl = ZipfWorkload(x, seed=11)
+    rng = np.random.default_rng(2)
+    for rnd in range(3):
+        q = wl.sample(20)
+        ra, rb = ea.submit(q), eb.submit(q)
+        oa, ob = ea.run_until_drained(), eb.run_until_drained()
+        _assert_same_results(oa, ob, ra, rb)
+        new = make_clustered(n=16, d=16, clusters=12, seed=50 + rnd)
+        da.insert(new)
+        db.insert(new)
+        dead = da.store.to_external(
+            rng.choice(da.store.live_ids(), 10, replace=False))
+        da.delete(dead)
+        db.delete(dead)
+
+
+def test_paged_parity_mixed_tenant_property(world_x):
+    """Property test: a randomized mixed-tenant trace — interleaved
+    submissions of three tenants across drain rounds with deletes in
+    between — retires bitwise-identical results from both engines."""
+    x = world_x
+    tenants = [("t0", 101), ("t1", 202), ("t2", 303)]
+
+    def build(cfg):
+        dqf = DQF(cfg).build(x)
+        for name, seed in tenants:
+            wl = ZipfWorkload(x, seed=seed)
+            q, tg = wl.sample(500, with_targets=True)
+            dqf.warm(q, tg, tenant=name)
+        dqf.fit_tree(ZipfWorkload(x, seed=7).sample(200), tenant="t0")
+        return dqf
+
+    da = build(_fused_cfg(False))
+    db = build(_fused_cfg(True))
+    ea = WaveEngine(da, wave_size=8, tick_hops=5, prefetch=False)
+    eb = PagedWaveEngine(db, capacity=8, tick_hops=5, page_cols=128,
+                         prefetch=False)
+    rng = np.random.default_rng(17)
+    wls = {name: ZipfWorkload(x, seed=seed + 1) for name, seed in tenants}
+    for rnd in range(3):
+        ra, rb = [], []
+        for t in rng.permutation([name for name, _ in tenants]):
+            q = wls[t].sample(int(rng.integers(3, 9)))
+            ra += ea.submit(q, tenant=t)
+            rb += eb.submit(q, tenant=t)
+        oa, ob = ea.run_until_drained(), eb.run_until_drained()
+        _assert_same_results(oa, ob, ra, rb)
+        dead = da.store.to_external(
+            rng.choice(da.store.live_ids(), 8, replace=False))
+        da.delete(dead)
+        db.delete(dead)
+
+
+# ------------------------------------------------------- serving behaviours
+def test_straggler_force_retires_at_max_hops(world_x):
+    """A lane that never self-terminates is force-retired by the max_hops
+    clamp — and holds one lane slot, not the whole wave: admissions keep
+    flowing while it runs."""
+    x = world_x
+    dqf = _built(_fused_cfg(False, max_hops=12, eval_gap=10 ** 6), x)
+    eng = PagedWaveEngine(dqf, capacity=8, tick_hops=5, page_cols=128,
+                          prefetch=False)
+    rids = eng.submit(ZipfWorkload(x, seed=13).sample(24))
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 24
+    assert eng.stats.straggled >= 1
+    for r in rids:
+        assert out["results"][r]["hops"] <= 12
+    # the pool fully drained: every lane slot came back to the free list
+    assert eng.pagepool.live_count == 0
+    assert eng.pagepool.free_lane_count == eng.capacity
+
+
+def test_evicted_tenant_drops_under_continuous_admission(world_x):
+    """With capacity far below the queue depth, admission is continuous —
+    requests whose tenant was evicted (and re-created: the gen check)
+    while queued must drop at admission time, mid-stream, without
+    touching the namesake's counter."""
+    x = world_x
+    dqf = _built(_fused_cfg(False), x)
+    wl = ZipfWorkload(x, seed=23)
+    q, tg = wl.sample(400, with_targets=True)
+    dqf.warm(q, tg, tenant="doomed")
+    eng = PagedWaveEngine(dqf, capacity=4, tick_hops=6, page_cols=128,
+                          prefetch=False)
+    live_rids = eng.submit(wl.sample(8))
+    dead_rids = eng.submit(wl.sample(8), tenant="doomed")
+    dqf.evict_tenant("doomed")
+    dqf.create_tenant("doomed")
+    q2, tg2 = ZipfWorkload(x, seed=29).sample(400, with_targets=True)
+    dqf.warm(q2, tg2, tenant="doomed")
+    fed_before = dqf.tenants.get("doomed").counter.since_rebuild
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 16
+    for r in dead_rids:
+        assert out["results"][r].get("dropped", False)
+    for r in live_rids:
+        assert not out["results"][r].get("dropped", False)
+    assert eng.stats.dropped == 8
+    assert dqf.tenants.get("doomed").counter.since_rebuild == fed_before
+    dqf.evict_tenant("doomed")
+
+
+def test_capacity_growth_with_lanes_in_flight(world_x):
+    """Store growth mid-stream re-pages the live lanes: results stay
+    valid and the allocator tracks the new capacity."""
+    x = world_x
+    dqf = _built(_fused_cfg(False), x)
+    eng = PagedWaveEngine(dqf, capacity=8, tick_hops=4, page_cols=128,
+                          prefetch=False)
+    wl = ZipfWorkload(x, seed=37)
+    q = wl.sample(20)
+    rids = eng.submit(q)
+    eng.step()                      # lanes now in flight
+    cap0 = dqf.store.capacity
+    dqf.insert(make_clustered(n=64, d=16, clusters=12, seed=53))
+    assert dqf.store.capacity > cap0
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 20
+    assert eng._cap == dqf.store.capacity
+    assert eng.pagepool.n_ids == dqf.store.capacity
+    ids = np.stack([out["results"][r]["ids"] for r in rids])
+    valid = ids[(ids >= 0) & (ids < dqf.store.n)]
+    assert dqf.store.alive[valid].all()
+    gt = ground_truth(x, q, eng.cfg.k)
+    assert recall_at_k(ids, gt) > 0.5
+
+
+def test_tiered_store_serves_composed_with_page_pins(world_x, tmp_path):
+    """cfg.fused on a tiered store gates off (host faults can't run
+    in-kernel); the composed paged tick with page-derived pins stays
+    bitwise-identical to the fixed engine on an identical tiered twin."""
+    from repro.core import TierConfig
+
+    x = world_x
+    tier = lambda sub: TierConfig(mode="host", dir=str(tmp_path / sub),
+                                  block_rows=32, cache_frac=0.3)
+    da = _built(_fused_cfg(True, tier=tier("a")), x)
+    db = _built(_fused_cfg(True, tier=tier("b")), x)
+    q = ZipfWorkload(x, seed=7).sample(12)
+    ea = WaveEngine(da, wave_size=8, tick_hops=4)
+    eb = PagedWaveEngine(db, capacity=8, tick_hops=4, page_cols=128)
+    assert eb._fused is False
+    ra, rb = ea.submit(q), eb.submit(q)
+    oa, ob = ea.run_until_drained(), eb.run_until_drained()
+    _assert_same_results(oa, ob, ra, rb)
+
+
+# -------------------------------------------------------------- observability
+def test_occupancy_gauges_track_live_lanes(world_x):
+    x = world_x
+    dqf = _built(_fused_cfg(False), x)
+    eng = PagedWaveEngine(dqf, capacity=8, tick_hops=4, page_cols=128,
+                          prefetch=False, obs=ObsConfig())
+    eng.submit(ZipfWorkload(x, seed=41).sample(20))
+    eng.step()
+    mid = eng.scrape()
+    assert mid["engine_live_lanes"] == float(eng.pagepool.live_count) > 0
+    assert 0.0 < mid["engine_occupancy_ratio"] <= 1.0
+    assert mid["engine_queue_depth"] == float(len(eng.queue))
+    assert mid["engine_lane_capacity"] == 8.0
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 20
+    done = eng.scrape()
+    assert done["engine_live_lanes"] == 0.0
+    assert done["engine_occupancy_ratio"] == 0.0
+    assert done["engine_queue_depth"] == 0.0
+
+
+def test_fixed_engine_occupancy_gauges(built_dqf):
+    """The fixed-wave engine publishes the same queue/occupancy gauges."""
+    dqf, wl = built_dqf
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8, obs=ObsConfig())
+    eng.submit(wl.sample(32))
+    eng.step()
+    mid = eng.scrape()
+    assert mid["engine_live_lanes"] > 0
+    assert 0.0 < mid["engine_occupancy_ratio"] <= 1.0
+    assert mid["engine_queue_depth"] == float(len(eng.queue))
+    eng.run_until_drained()
+    assert eng.scrape()["engine_occupancy_ratio"] == 0.0
+
+
+# ------------------------------------------------------------------ allocator
+def test_page_pool_invariants_under_random_trace():
+    """Free lists + page table stay consistent through a random
+    alloc/free trace: live lanes exactly partition the allocated pages,
+    freed lanes point back at scratch, cu-lens is the exclusive prefix."""
+    rng = np.random.default_rng(5)
+    P, n = 16, 1000
+    pool = pg.PagePool(P, n, page_cols=128)
+    ppl = pool.pages_per_lane
+    assert pool.n_pages == (P + 1) * ppl
+    held = []
+
+    def check():
+        live = pool.live_lanes()
+        assert pool.live_count + pool.free_lane_count == P
+        assert set(live.tolist()).isdisjoint(pool._free_lanes)
+        owned = [p for lane in live for p in pool.page_table[lane]]
+        assert len(owned) == len(set(owned))            # no double owner
+        assert set(owned).isdisjoint(pool._free_pages)
+        assert set(owned).isdisjoint(pool._scratch_pages.tolist())
+        assert len(owned) + len(pool._free_pages) == P * ppl
+        for lane in pool._free_lanes:
+            np.testing.assert_array_equal(pool.page_table[lane],
+                                          pool._scratch_pages)
+        cu = pool.cu_lens()
+        np.testing.assert_array_equal(cu,
+                                      np.arange(len(live) + 1) * ppl)
+
+    for _ in range(60):
+        if pool.free_lane_count and (not held or rng.random() < 0.55):
+            m = int(rng.integers(1, pool.free_lane_count + 1))
+            held.extend(int(v) for v in pool.alloc(m))
+        else:
+            kill = [held.pop(int(rng.integers(len(held))))
+                    for _ in range(int(rng.integers(1, len(held) + 1)))]
+            pool.free(kill)
+        check()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(pool.free_lane_count + 1)
+
+
+def test_live_bucket_pads_with_scratch_lane():
+    pool = pg.PagePool(16, 500, page_cols=128)
+    pool.alloc(5)
+    lanes, pt, n_live = pool.live_bucket(4)
+    assert n_live == 5
+    assert lanes.shape[0] == 8                      # next power of two
+    assert (lanes[5:] == pool.capacity).all()
+    np.testing.assert_array_equal(pt[5:],
+                                  np.tile(pool._scratch_pages, (3, 1)))
+    # empty pool still yields a (min-width) scratch bucket
+    pool.free(lanes[:5])
+    lanes, _, n_live = pool.live_bucket(4)
+    assert n_live == 0 and lanes.shape[0] == 4
+    assert (lanes == pool.capacity).all()
+
+
+def test_bucket_width_schedule():
+    assert pg.bucket_width(0, 64) == pg.MIN_BUCKET
+    assert pg.bucket_width(8, 64) == 8
+    assert pg.bucket_width(9, 64) == 16
+    assert pg.bucket_width(33, 64) == 64
+    assert pg.bucket_width(3, 64, lo=4) == 4
+
+
+def test_dense_seen_roundtrip_through_recycled_pages():
+    """Dense rows → pages → dense survives a shuffled physical layout:
+    alloc/free churn first so recycled pages come back LIFO and the
+    page table genuinely permutes the pool."""
+    rng = np.random.default_rng(9)
+    P, n, pc = 8, 700, 128
+    pool = pg.PagePool(P, n, page_cols=pc)
+    pool.free(pool.alloc(5))                    # scramble the free lists
+    pool.free(pool.alloc(3))
+    lanes = pool.alloc(4)
+    ppl = pool.pages_per_lane
+    dense = rng.random((4, n + 1)) < 0.3
+    pt = jnp.asarray(pool.page_table[lanes])
+    pad = ppl * pc - (n + 1)
+    pages = jnp.pad(jnp.asarray(dense), ((0, 0), (0, pad))).reshape(
+        4, ppl, pc)
+    pool_arr = jnp.zeros((pool.n_pages, pc), bool).at[pt].set(pages)
+    back = np.asarray(pg.dense_seen(pool_arr, pt, n + 1))
+    np.testing.assert_array_equal(back, dense)
