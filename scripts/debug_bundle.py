@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Write a black-box debug bundle from a short instrumented run.
+
+CI's failure-capture path: when a benchmark step dies, this builds a
+small synthetic index, drives a fully-traced sentinel-on wave engine
+over it, and freezes everything the obs stack saw into a bundle
+directory (scrape, exposition, traces, timeline, time series, compile
+telemetry, SLO state, config, provenance).  The artifact upload then
+carries the bundle off the runner so the failure is debuggable without
+re-running anything.
+
+Also a handy local smoke: ``python scripts/debug_bundle.py --out /tmp/b``
+produces a bundle to poke at (``timeline.json`` loads in Perfetto).
+
+Usage:
+    PYTHONPATH=src python scripts/debug_bundle.py \
+        --out bench-out/failure-bundle --reason "bench step failed"
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="bench-out/debug-bundle",
+                    help="bundle output directory")
+    ap.add_argument("--reason", default="manual",
+                    help="recorded in meta.json / MANIFEST.json")
+    ap.add_argument("--n", type=int, default=600,
+                    help="synthetic corpus size")
+    ap.add_argument("--queries", type=int, default=96,
+                    help="queries to drive before capturing")
+    args = ap.parse_args(argv)
+
+    from repro.core import DQF, DQFConfig
+    from repro.obs import ObsConfig, default_slos
+    from repro.serving.engine import WaveEngine
+
+    rng = np.random.default_rng(0)
+    d = 16
+    x = rng.standard_normal((args.n, d)).astype(np.float32)
+    q = x[rng.choice(args.n, args.queries, replace=True)] \
+        + 0.05 * rng.standard_normal((args.queries, d)).astype(np.float32)
+
+    cfg = DQFConfig(dim=d, k=5, hot_pool=16, full_pool=32, max_hops=100,
+                    n_query_trigger=10_000)
+    dqf = DQF(cfg).build(x)
+    dqf.warm(q[:8])
+
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8,
+                     obs=ObsConfig(trace_rate=1.0, timeline=True,
+                                   sentinel=True, sentinel_interval_s=0.0,
+                                   slos=tuple(default_slos())))
+    eng.submit(q)
+    eng.run_until_drained()
+
+    bdir = eng.debug_bundle(args.out, reason=args.reason)
+    man = json.load(open(os.path.join(bdir, "MANIFEST.json")))
+    print(f"debug bundle: {bdir}")
+    print(f"  written: {', '.join(man['written'])}")
+    if man["absent"]:
+        print(f"  absent:  {man['absent']}")
+    # a bundle that doesn't round-trip is worse than none: fail loudly
+    for name in man["written"]:
+        if name.endswith(".json"):
+            json.load(open(os.path.join(bdir, name)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

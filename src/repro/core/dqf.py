@@ -130,6 +130,22 @@ class DQF:
         """Prometheus text exposition of :meth:`scrape`."""
         return self.registry.exposition()
 
+    def debug_bundle(self, out_dir: str, *, reason: str = "") -> str:
+        """Write a black-box diagnostic bundle for this DQF instance.
+
+        Engine-less variant of the engines' ``debug_bundle``: captures
+        the registry scrape/exposition plus config and memory report.
+        Returns the bundle directory path.
+        """
+        from repro.obs.bundle import debug_bundle as _bundle
+        extra = {}
+        if self.store is not None:
+            try:
+                extra["memory_report"] = self.memory_report()
+            except Exception:
+                pass
+        return _bundle(self, out_dir, reason=reason, extra=extra or None)
+
     # -------------------------------------------------------------- storage
     @property
     def x(self) -> Optional[np.ndarray]:

@@ -45,15 +45,30 @@ def _flat_name(name: str, key: tuple) -> str:
     return name + "{" + ",".join(f"{k}={v}" for k, v in key) + "}"
 
 
+def _escape(value: str) -> str:
+    """Prometheus label-value escaping: backslash, double-quote, newline.
+
+    Without this a label like ``path="a\nb"`` splits the exposition line
+    and corrupts every scrape of the whole registry.
+    """
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    """HELP-text escaping (backslash and newline only, per the spec)."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _requote(flat: str) -> str:
-    """``name{k=v,...}`` → Prometheus ``name{k="v",...}``."""
+    """``name{k=v,...}`` → Prometheus ``name{k="v",...}`` (values escaped)."""
     if "{" not in flat:
         return flat
     name, _, rest = flat.partition("{")
     pairs = []
     for item in rest.rstrip("}").split(","):
         k, _, v = item.partition("=")
-        pairs.append(f'{k}="{v}"')
+        pairs.append(f'{k}="{_escape(v)}"')
     return name + "{" + ",".join(pairs) + "}"
 
 
@@ -68,10 +83,16 @@ class _Metric:
     def scrape_into(self, out: dict) -> None:  # pragma: no cover - abstract
         raise NotImplementedError
 
+    def header_lines(self) -> Iterable[str]:
+        """``# HELP`` (when set) + ``# TYPE``, once per metric family."""
+        if self.help:
+            yield f"# HELP {self.name} {_escape_help(self.help)}"
+        yield f"# TYPE {self.name} {self.kind}"
+
     def exposition_lines(self) -> Iterable[str]:
         flat: dict = {}
         self.scrape_into(flat)
-        yield f"# TYPE {self.name} {self.kind}"
+        yield from self.header_lines()
         for k, v in flat.items():
             yield f"{_requote(k)} {v:g}"
 
@@ -248,10 +269,10 @@ class Histogram(_Metric):
                     (kk, vv) for kk, vv in k))
 
     def exposition_lines(self) -> Iterable[str]:
-        yield f"# TYPE {self.name} histogram"
+        yield from self.header_lines()
         edges = self.bucket_edges()
         for k, s in sorted(self._series.items()):
-            labels = list(k)
+            labels = [(a, _escape(b)) for a, b in k]
             cum = 0
             last = max((i for i, c in enumerate(s.counts) if c),
                        default=-1)

@@ -65,8 +65,8 @@ from repro.core.decision_tree import predict_jax
 from repro.core.dynamic_search import _seed_full_state, hot_phase_stacked
 from repro.core.features import feature_matrix, hot_features
 from repro.core.types import DQFConfig, HotFeatures
-from repro.obs import (ObsConfig, Timeline, TraceLog, device_annotation,
-                       sample_decision)
+from repro.obs import (ObsConfig, PerfSentinel, Timeline, TraceLog,
+                       device_annotation, sample_decision)
 from repro.tenancy import DEFAULT_TENANT
 
 __all__ = ["WaveEngine", "EngineStats", "retire_batch"]
@@ -242,6 +242,19 @@ class WaveEngine:
         self._remap_epoch = dqf.store.remap_epoch
         self._cap = dqf.store.capacity
         self._tick_fn = self._build_tick()
+        self._hot_phase = hot_phase_stacked
+        # Perf sentinel (ISSUE 9): time-series snapshots of the registry,
+        # compile telemetry on the jitted entry points, optional SLO
+        # burn-rate alerts with triggered full-rate trace capture.
+        self.sentinel = None
+        if obs_on and self.obs.sentinel and self.registry is not None:
+            self.sentinel = PerfSentinel.from_config(self.obs, self.registry)
+            self._tick_fn = self.sentinel.wrap("wave_tick", self._tick_fn)
+            self._hot_phase = self.sentinel.wrap("hot_phase_stacked",
+                                                 hot_phase_stacked)
+            self.sentinel.attach_capture(
+                self, capture_ticks=self.obs.capture_ticks,
+                bundle_dir=self.obs.capture_dir)
         # per-lane (request_id, t_enqueue, t_seed, tenant_name, tenant_gen)
         self._lane_meta = [None] * wave_size
         self._results: dict = {}
@@ -371,6 +384,11 @@ class WaveEngine:
     def export_timeline(self, path: Optional[str] = None):
         """Chrome trace-event JSON of the recorded tick spans (Perfetto)."""
         return self.timeline.export(path)
+
+    def debug_bundle(self, out_dir: str, *, reason: str = "") -> str:
+        """Write a black-box debug bundle (see :mod:`repro.obs.bundle`)."""
+        from repro.obs import debug_bundle
+        return debug_bundle(self, out_dir, reason=reason)
 
     def _collect_metrics(self) -> dict:
         """Registry scrape-time collector (keyed ``"engine"``)."""
@@ -503,7 +521,7 @@ class WaveEngine:
         q = jnp.asarray(np.stack([r[1] for r in reqs]))
         stk = reg.stacked(self.dqf.store)
         tidx = jnp.asarray([reg.slot_of(r[3]) for r in reqs], jnp.int32)
-        hot_pool, hot_stats = hot_phase_stacked(
+        hot_pool, hot_stats = self._hot_phase(
             stk.x, stk.adj, stk.entries, stk.mask, tidx, q,
             pool_size=self.cfg.hot_pool, max_hops=self.cfg.max_hops,
             mode=self.cfg.hot_mode)
@@ -660,9 +678,11 @@ class WaveEngine:
                     self._do_compact()
                     with tl.span("tick.refill"):
                         self._refill()
-                return
-            with tl.span("tick.refill"):
-                self._refill()
+            else:
+                with tl.span("tick.refill"):
+                    self._refill()
+        if self.sentinel is not None:
+            self.sentinel.on_tick()
 
     def _retire_lanes(self, state: bs.BeamState, retiring: list,
                       now: float) -> None:

@@ -148,16 +148,43 @@ class PagePool:
     """
 
     def __init__(self, capacity: int, n_ids: int,
-                 page_cols: int = DEFAULT_PAGE_COLS):
+                 page_cols: int = DEFAULT_PAGE_COLS, *,
+                 registry=None, name: str = "pool"):
         _check_pow2(page_cols, "page_cols")
         self.capacity = int(capacity)
         self.page_cols = int(page_cols)
         self.page_shift = int(page_cols).bit_length() - 1
+        # lifecycle counters (repro.obs, optional): page churn is the
+        # allocator's traffic signal — alloc/free rates show admission
+        # throughput, grows mark store-capacity epochs, and the in-use
+        # gauge is the paged analogue of wave occupancy
+        self.name = str(name)
+        self._registry = registry
+        if registry is not None:
+            self._c_alloc = registry.counter(
+                "page_pool_alloc_total", "seen pages handed to lanes")
+            self._c_free = registry.counter(
+                "page_pool_free_total", "seen pages returned to free list")
+            self._c_grow = registry.counter(
+                "page_pool_grow_total", "pool rebuilds for a new store size")
+            self._g_in_use = registry.gauge(
+                "page_pool_pages_in_use", "allocated (non-free) seen pages")
+        self._prev_n_ids: Optional[int] = None
         self.reset(n_ids)
+
+    def _publish(self) -> None:
+        if self._registry is not None:
+            self._g_in_use.set(
+                self.capacity * self.pages_per_lane - len(self._free_pages),
+                pool=self.name)
 
     # ------------------------------------------------------------- lifecycle
     def reset(self, n_ids: int) -> None:
         """(Re)build for a store of ``n_ids`` rows; frees every lane."""
+        if self._registry is not None and self._prev_n_ids is not None \
+                and int(n_ids) != self._prev_n_ids:
+            self._c_grow.inc(pool=self.name)
+        self._prev_n_ids = int(n_ids)
         self.n_ids = int(n_ids)
         self.pages_per_lane = -(-(self.n_ids + 1) // self.page_cols)
         ppl, P = self.pages_per_lane, self.capacity
@@ -171,6 +198,7 @@ class PagePool:
         self._free_lanes = list(range(P - 1, -1, -1))
         self._free_pages = list(range(P * ppl - 1, -1, -1))
         self._live: list[int] = []
+        self._publish()
 
     # ------------------------------------------------------------ allocation
     @property
@@ -213,17 +241,25 @@ class PagePool:
         for j, lane in enumerate(lanes):
             self.page_table[lane] = pages[cu[j]:cu[j + 1]]
         self._live.extend(int(v) for v in lanes)
+        if self._registry is not None and len(pages):
+            self._c_alloc.inc(float(len(pages)), pool=self.name)
+            self._publish()
         return lanes
 
     def free(self, lanes) -> None:
         """Release lane slots and their pages back to the free lists."""
+        n_freed = 0
         for lane in lanes:
             lane = int(lane)
             self._live.remove(lane)
             self._free_pages.extend(
                 int(p) for p in self.page_table[lane])
+            n_freed += self.pages_per_lane
             self.page_table[lane] = self._scratch_pages
             self._free_lanes.append(lane)
+        if self._registry is not None and n_freed:
+            self._c_free.inc(float(n_freed), pool=self.name)
+            self._publish()
 
     def adopt(self, lanes) -> None:
         """Re-claim *specific* lane slots after :meth:`reset`, in order.
@@ -234,13 +270,18 @@ class PagePool:
         allocated for each adopted lane; the caller scatters the regrown
         seen rows into them.
         """
+        n_adopted = 0
         for lane in lanes:
             lane = int(lane)
             self._free_lanes.remove(lane)
             cnt = self.pages_per_lane
             self.page_table[lane] = [self._free_pages.pop()
                                      for _ in range(cnt)]
+            n_adopted += cnt
             self._live.append(lane)
+        if self._registry is not None and n_adopted:
+            self._c_alloc.inc(float(n_adopted), pool=self.name)
+            self._publish()
 
     # ------------------------------------------------------------- gathering
     def pt_rows(self, lanes: np.ndarray) -> np.ndarray:

@@ -45,7 +45,8 @@ from repro.core.decision_tree import predict_jax
 from repro.core.dynamic_search import _seed_full_state, hot_phase_stacked
 from repro.core.features import feature_matrix, hot_features
 from repro.core.types import DQFConfig, HotFeatures, PoolState
-from repro.obs import ObsConfig, device_annotation
+from repro.obs import (ObsConfig, PerfSentinel, Timeline, TraceLog,
+                       device_annotation, sample_decision)
 from repro.serving import paged as pg
 from repro.serving.engine import LATENCY_WINDOW, EngineStats, retire_batch
 from repro.tenancy import DEFAULT_TENANT
@@ -90,6 +91,12 @@ class PagedWaveEngine:
                          if obs_on else None)
         self._tick_ann = ((lambda: device_annotation("dqf.paged_tick"))
                           if obs_on else contextlib.nullcontext)
+        self.timeline = Timeline(enabled=obs_on and self.obs.timeline,
+                                 capacity=self.obs.timeline_capacity)
+        self.traces = TraceLog(self.obs.trace_capacity)
+        self._trace_rate = float(self.obs.trace_rate) if obs_on else 0.0
+        self._trace_seed = int(self.obs.trace_seed)
+        self._lane_trace: list = [None] * self.capacity
         if self.registry is not None:
             r = self.registry
             self._h_service = r.histogram(
@@ -110,8 +117,28 @@ class PagedWaveEngine:
         self._remap_epoch = dqf.store.remap_epoch
         self._cap = dqf.store.capacity
         self.pagepool = pg.PagePool(self.capacity, dqf.store.capacity,
-                                    page_cols=self.page_cols)
+                                    page_cols=self.page_cols,
+                                    registry=self.registry, name="paged")
         self._tick_fn = self._build_tick()
+        self._hot_phase = hot_phase_stacked
+        self._admit = pg.admit_wave
+        # Perf sentinel (ISSUE 9).  The paged tick's compile schedule is
+        # the pow2 bucket ladder — min_bucket, 2·min_bucket, …,
+        # next_pow2(capacity) — so its executable budget is declared up
+        # front: one extra signature is a bucket leak, and the sentinel
+        # flags it (``jit_schedule_violations_total``).
+        self.sentinel = None
+        self._n_widths = self._bucket_widths()
+        if obs_on and self.obs.sentinel and self.registry is not None:
+            self.sentinel = PerfSentinel.from_config(self.obs, self.registry)
+            self._tick_fn = self.sentinel.wrap("paged_tick", self._tick_fn)
+            self._hot_phase = self.sentinel.wrap("hot_phase_stacked",
+                                                 hot_phase_stacked)
+            self._admit = self.sentinel.wrap("paged_admit", pg.admit_wave)
+            self.sentinel.expect("paged_tick", self._n_widths)
+            self.sentinel.attach_capture(
+                self, capture_ticks=self.obs.capture_ticks,
+                bundle_dir=self.obs.capture_dir)
         self._lane_meta = [None] * self.capacity
         self._results: dict = {}
         self._state: Optional[pg.PagedState] = None
@@ -121,6 +148,15 @@ class PagedWaveEngine:
         self._last_pinned = 0
         self._draining = False
         self._next_rid = 0
+
+    def _bucket_widths(self) -> int:
+        """Distinct pow2 tick-bucket widths: the compile-schedule budget."""
+        n, w = 1, self.min_bucket
+        top = pg.bucket_width(self.capacity, self.capacity, self.min_bucket)
+        while w < top:
+            w *= 2
+            n += 1
+        return n
 
     # ------------------------------------------------------------ jitted ops
     def _build_tick(self):
@@ -235,6 +271,15 @@ class PagedWaveEngine:
     def scrape(self) -> dict:
         return self.registry.scrape() if self.registry is not None else {}
 
+    def export_timeline(self, path: Optional[str] = None):
+        """Chrome trace-event JSON of the recorded tick spans (Perfetto)."""
+        return self.timeline.export(path)
+
+    def debug_bundle(self, out_dir: str, *, reason: str = "") -> str:
+        """Write a black-box debug bundle (see :mod:`repro.obs.bundle`)."""
+        from repro.obs import debug_bundle
+        return debug_bundle(self, out_dir, reason=reason)
+
     def _collect_metrics(self) -> dict:
         """Registry scrape-time collector (keyed ``"paged_engine"``)."""
         s = self.stats
@@ -247,7 +292,9 @@ class PagedWaveEngine:
                 "engine_queue_depth": float(len(self.queue)),
                 "engine_live_lanes": float(self.pagepool.live_count),
                 "engine_lane_capacity": float(self.capacity),
-                "engine_occupancy_ratio": self.pagepool.occupancy()}
+                "engine_occupancy_ratio": self.pagepool.occupancy(),
+                "engine_traces_recorded": float(self.traces.total),
+                "engine_traces_dropped": float(self.traces.dropped)}
 
     # -------------------------------------------------------------- internals
     def _any_live(self) -> bool:
@@ -316,6 +363,13 @@ class PagedWaveEngine:
         ids = np.where(ids == old_cap, new_cap, ids).astype(np.int32)
         self._state = self._state._replace(
             ids=jnp.asarray(ids), seen_pages=jnp.asarray(pages_np))
+        if self.sentinel is not None:
+            # growth changed the paged shapes: a fresh ladder of bucket
+            # executables is legitimate, so the budget moves with it
+            self.sentinel.expect(
+                "paged_tick",
+                self.sentinel.compile.executables("paged_tick")
+                + self._n_widths)
 
     def _bind_table(self, lanes_np: np.ndarray):
         """Score table for this tick's bucket (PQ LUTs follow the bucket).
@@ -372,7 +426,7 @@ class PagedWaveEngine:
         stk = reg.stacked(self.dqf.store)
         tidx_d = jnp.asarray(tidx)
         q_d = jnp.asarray(qs)
-        hot_pool, _ = hot_phase_stacked(
+        hot_pool, hot_stats = self._hot_phase(
             stk.x, stk.adj, stk.entries, stk.mask, tidx_d, q_d,
             pool_size=self.cfg.hot_pool, max_hops=self.cfg.max_hops,
             mode=self.cfg.hot_mode)
@@ -383,10 +437,17 @@ class PagedWaveEngine:
                                   self.dqf._dev["live_pad"])
         admit_mask = np.zeros(mp, bool)
         admit_mask[:m] = True
-        self._state = pg.admit_wave(
+        self._state = self._admit(
             self._state, jnp.asarray(lanes_pad), jnp.asarray(pt_pad),
             seeded, q_d, hf.first, hf.first_div_kth,
             jnp.asarray(admit_mask), page_cols=self.page_cols)
+        # same sampling contract as the fixed engine: pure in (seed, rid),
+        # hot-phase stats transfer only when some admitted lane is sampled
+        sampled = [sample_decision(self._trace_seed, r[0], self._trace_rate)
+                   for r in reqs]
+        if any(sampled):
+            hot_hops = np.asarray(hot_stats.hops)
+            hot_dist = np.asarray(hot_stats.dist_count)
         t_seed = time.perf_counter()
         for j, lane in enumerate(lanes):
             lane = int(lane)
@@ -398,6 +459,15 @@ class PagedWaveEngine:
             self.stats.queue_wait_ms.append(wait_ms)
             if self.registry is not None:
                 self._h_qwait.observe(wait_ms)
+            if sampled[j]:
+                self._lane_trace[lane] = {
+                    "rid": rid, "tenant": reqs[j][3],
+                    "hot_hops": int(hot_hops[j]),
+                    "hot_dist_evals": int(hot_dist[j]),
+                    "seed_tick": self.stats.ticks,
+                }
+            else:
+                self._lane_trace[lane] = None
         self._table_key = None
 
     def _dropped_result(self, tenant: str) -> dict:
@@ -464,35 +534,52 @@ class PagedWaveEngine:
         self._table_key = None
 
     def _tick(self):
-        self._maybe_refresh()
-        self._tier_begin_tick()
-        lanes_np, pt_np, n_live = self.pagepool.live_bucket(self.min_bucket)
-        if n_live:
-            table = self._bind_table(lanes_np)
-            with self._tick_ann():
-                self._state, (act, hops_b, ids_b, dists_b) = self._tick_fn(
-                    self._state, jnp.asarray(lanes_np), jnp.asarray(pt_np),
-                    table, self.dqf._dev["adj_pad"],
-                    self.dqf._dev["live_pad"])
-            self.stats.ticks += 1
-            active = np.asarray(act)
-            now = time.perf_counter()
-            retiring = [j for j in range(n_live) if not active[j]
-                        and self._lane_meta[lanes_np[j]] is not None]
-            if retiring:
-                self._retire(lanes_np, retiring, np.asarray(ids_b),
-                             np.asarray(dists_b), np.asarray(hops_b), now)
-        else:
-            self.stats.ticks += 1
-        if self.auto_compact and not self._draining \
-                and self.dqf.store.should_compact(self.compact_ratio):
-            self._draining = True
-        if self._draining:
-            if not self._any_live():
-                self._do_compact()
-                self._refill()
-            return
-        self._refill()
+        tl = self.timeline
+        with tl.span("tick", tick=self.stats.ticks):
+            with tl.span("tick.housekeeping"):
+                self._maybe_refresh()
+            with tl.span("tick.tier"):
+                self._tier_begin_tick()
+            lanes_np, pt_np, n_live = self.pagepool.live_bucket(
+                self.min_bucket)
+            if n_live:
+                table = self._bind_table(lanes_np)
+                with tl.span("tick.jit", bucket=len(lanes_np),
+                             live=n_live):
+                    with self._tick_ann():
+                        (self._state,
+                         (act, hops_b, ids_b, dists_b)) = self._tick_fn(
+                            self._state, jnp.asarray(lanes_np),
+                            jnp.asarray(pt_np), table,
+                            self.dqf._dev["adj_pad"],
+                            self.dqf._dev["live_pad"])
+                        if tl.enabled:  # make the span cover device time
+                            jax.block_until_ready(self._state)
+                self.stats.ticks += 1
+                active = np.asarray(act)
+                now = time.perf_counter()
+                retiring = [j for j in range(n_live) if not active[j]
+                            and self._lane_meta[lanes_np[j]] is not None]
+                if retiring:
+                    with tl.span("tick.retire", retiring=len(retiring)):
+                        self._retire(lanes_np, retiring, np.asarray(ids_b),
+                                     np.asarray(dists_b),
+                                     np.asarray(hops_b), now)
+            else:
+                self.stats.ticks += 1
+            if self.auto_compact and not self._draining \
+                    and self.dqf.store.should_compact(self.compact_ratio):
+                self._draining = True
+            if self._draining:
+                if not self._any_live():
+                    self._do_compact()
+                    with tl.span("tick.refill"):
+                        self._refill()
+            else:
+                with tl.span("tick.refill"):
+                    self._refill()
+        if self.sentinel is not None:
+            self.sentinel.on_tick()
 
     def _retire(self, lanes_np: np.ndarray, retiring: list,
                 ids_b: np.ndarray, dists_b: np.ndarray,
@@ -502,6 +589,10 @@ class PagedWaveEngine:
         batch_ids, batch_dists = retire_batch(
             self.dqf.store, self.dqf._rerank_k, self.cfg.k,
             ids_b[retiring], dists_b[retiring], self._queries[rl])
+        # sampled-lane stats transfer once per retiring tick, never per lane
+        if any(self._lane_trace[ln] is not None for ln in rl):
+            dist_all = np.asarray(self._state.dist_count)
+            term_all = np.asarray(self._state.terminated)
         for i, j in enumerate(retiring):
             lane = rl[i]
             rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
@@ -511,13 +602,29 @@ class PagedWaveEngine:
                                   "tenant": tenant}
             self.stats.completed += 1
             self.stats.total_hops += hops
-            if hops >= self.cfg.max_hops:
+            straggled = hops >= self.cfg.max_hops
+            if straggled:
                 self.stats.straggled += 1
             service_ms = (now - t_seed) * 1e3
             self.stats.latencies_ms.append((now - t_in) * 1e3)
             if self.registry is not None:
                 self._h_service.observe(service_ms)
                 self._h_hops.observe(hops)
+            tr = self._lane_trace[lane]
+            if tr is not None:
+                tr.update(
+                    queue_wait_ms=(t_seed - t_in) * 1e3,
+                    service_ms=service_ms,
+                    total_ms=(now - t_in) * 1e3,
+                    full_hops=hops,
+                    full_dist_evals=int(dist_all[lane]),
+                    terminated_early=bool(term_all[lane]),
+                    straggled=straggled,
+                    rerank_k=int(self.dqf._rerank_k),
+                    ticks_in_flight=self.stats.ticks - tr["seed_tick"],
+                    top_id=int(ids[0]))
+                self.traces.add(tr)
+                self._lane_trace[lane] = None
             self._lane_meta[lane] = None
             if tenant in self.dqf.tenants \
                     and self.dqf.tenants.get(tenant).gen == gen:

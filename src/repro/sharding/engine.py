@@ -49,7 +49,8 @@ from repro.core.decision_tree import predict_jax
 from repro.core.dynamic_search import _seed_full_state, hot_phase_stacked
 from repro.core.features import feature_matrix, hot_features
 from repro.core.types import INF_DIST, HotFeatures, PoolState, SearchStats
-from repro.obs import ObsConfig
+from repro.obs import (ObsConfig, PerfSentinel, Timeline, TraceLog,
+                       sample_decision)
 from repro.serving import paged as pg
 from repro.serving.engine import LATENCY_WINDOW, EngineStats
 from repro.tenancy import DEFAULT_TENANT
@@ -99,10 +100,17 @@ class ShardedEngine:
             latencies_ms=collections.deque(maxlen=latency_window),
             queue_wait_ms=collections.deque(maxlen=latency_window))
         self.obs = obs if obs is not None else ObsConfig()
-        self.registry = sharded.registry if self.obs.enabled else None
+        obs_on = bool(self.obs.enabled)
+        self.registry = sharded.registry if obs_on else None
         if self.registry is not None:
             self.registry.register_callback("sharded_engine",
                                             self._collect_metrics)
+        self.timeline = Timeline(enabled=obs_on and self.obs.timeline,
+                                 capacity=self.obs.timeline_capacity)
+        self.traces = TraceLog(self.obs.trace_capacity)
+        self._trace_rate = float(self.obs.trace_rate) if obs_on else 0.0
+        self._trace_seed = int(self.obs.trace_seed)
+        self._lane_trace: list = [None] * wave_size
         self._d = sharded.shards[0].dqf.store.d
         self._stk = sharded._sync_stacked()
         self._cap = sharded._stk_cap
@@ -110,8 +118,20 @@ class ShardedEngine:
         self._remap_key = self._remap_epochs()
         if self.paged:
             self.pagepool = pg.PagePool(wave_size, self._cap,
-                                        page_cols=page_cols)
+                                        page_cols=page_cols,
+                                        registry=self.registry,
+                                        name="sharded")
         self._tick_fn = self._build_tick()
+        # Perf sentinel (ISSUE 9): compile telemetry on the vmapped tick
+        # and the lazily built seed/admission executables, time-series
+        # snapshots per tick, optional SLO alerting + triggered capture.
+        self.sentinel = None
+        if obs_on and self.obs.sentinel and self.registry is not None:
+            self.sentinel = PerfSentinel.from_config(self.obs, self.registry)
+            self._tick_fn = self.sentinel.wrap("sharded_tick", self._tick_fn)
+            self.sentinel.attach_capture(
+                self, capture_ticks=self.obs.capture_ticks,
+                bundle_dir=self.obs.capture_dir)
         self._seed_fn = None            # built lazily, keyed on common cap
         self._seed_cap = -1
         self._admit_fn = None           # paged admission, keyed on cap
@@ -320,6 +340,15 @@ class ShardedEngine:
     def scrape(self) -> dict:
         return self.sharded.scrape()
 
+    def export_timeline(self, path=None):
+        """Chrome trace-event JSON of the recorded tick spans (Perfetto)."""
+        return self.timeline.export(path)
+
+    def debug_bundle(self, out_dir: str, *, reason: str = "") -> str:
+        """Write a black-box debug bundle (see :mod:`repro.obs.bundle`)."""
+        from repro.obs import debug_bundle
+        return debug_bundle(self, out_dir, reason=reason)
+
     def _collect_metrics(self) -> dict:
         s = self.stats
         live = (self.pagepool.live_count if self.paged
@@ -332,7 +361,9 @@ class ShardedEngine:
                 "sharded_engine_queue_depth": float(len(self.queue)),
                 "sharded_engine_live_lanes": float(live),
                 "sharded_engine_wave_size": float(self.wave),
-                "sharded_engine_occupancy_ratio": live / float(self.wave)}
+                "sharded_engine_occupancy_ratio": live / float(self.wave),
+                "sharded_engine_traces_recorded": float(self.traces.total),
+                "sharded_engine_traces_dropped": float(self.traces.dropped)}
 
     # -------------------------------------------------------------- internals
     def _any_live(self) -> bool:
@@ -590,6 +621,9 @@ class ShardedEngine:
         if self._admit_fn is None or self._admit_cap != self._cap:
             self._admit_fn = self._build_admit_paged(self._cap)
             self._admit_cap = self._cap
+            if self.sentinel is not None:
+                self._admit_fn = self.sentinel.wrap("sharded_admit",
+                                                    self._admit_fn)
         xs, adjs, ents, mask, hids = self._hot_stacks()
         self._state = self._admit_fn(
             self._state, xs, adjs, ents, mask, hids, jnp.asarray(tidx),
@@ -602,6 +636,20 @@ class ShardedEngine:
             self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
                                      reqs[j][4])
             self.stats.queue_wait_ms.append((t_seed - t_in) * 1e3)
+            self._lane_trace[lane] = self._trace_begin(rid, reqs[j][3])
+
+    def _trace_begin(self, rid: int, tenant: str):
+        """Trace skeleton for a sampled admission (None when unsampled).
+
+        Same deterministic ``(seed, rid)`` contract as the single-shard
+        engines; the sharded hot phase runs inside one jitted dispatch,
+        so the skeleton carries admission-side fields only and the
+        retirement path fills the merged-result side.
+        """
+        if not sample_decision(self._trace_seed, rid, self._trace_rate):
+            return None
+        return {"rid": rid, "tenant": tenant,
+                "seed_tick": self.stats.ticks, "shards": self.S}
 
     def _refill(self):
         """Seed free lanes from the queue in ONE jitted dispatch.
@@ -629,6 +677,9 @@ class ShardedEngine:
         if self._seed_fn is None or self._seed_cap != self._cap:
             self._seed_fn = self._build_seed(self._cap)
             self._seed_cap = self._cap
+            if self.sentinel is not None:
+                self._seed_fn = self.sentinel.wrap("sharded_seed",
+                                                   self._seed_fn)
         xs, adjs, ents, mask, hids = self._hot_stacks()
         lanes = free[:len(reqs)]
         refill = np.zeros(self.wave, bool)
@@ -642,6 +693,7 @@ class ShardedEngine:
             self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
                                      reqs[j][4])
             self.stats.queue_wait_ms.append((t_seed - t_in) * 1e3)
+            self._lane_trace[lane] = self._trace_begin(rid, reqs[j][3])
         (self._state, self._evals, self._hot_first,
          self._hot_ratio) = self._seed_fn(
             self._state, self._evals, self._hot_first, self._hot_ratio,
@@ -675,63 +727,88 @@ class ShardedEngine:
         self._maybe_refresh()
         if self.paged:
             return self._tick_paged()
-        state, evals, m_ids, m_dists = self._tick_fn(
-            self._state, self._stk["x_pad"], self._stk["adj_pad"],
-            self._stk["live_pad"], self._stk["gid_pad"],
-            jnp.asarray(self._queries), self._hot_first,
-            self._hot_ratio, self._evals)
-        self._state = state
-        self._evals = evals
-        self.stats.ticks += 1
-        active = np.asarray(state.active)           # (S, W)
-        lane_live = active.any(axis=0)
-        now = time.perf_counter()
-        retiring = [lane for lane, meta in enumerate(self._lane_meta)
-                    if meta is not None and not lane_live[lane]]
-        if retiring:
-            self._retire_lanes(state, np.asarray(m_ids),
-                               np.asarray(m_dists), retiring, now)
-        if self.auto_compact and not self._draining and any(
-                sh.dqf.store.should_compact(self.compact_ratio)
-                for sh in self.sharded.shards):
-            self._draining = True
-        if self._draining:
-            if not self._any_live():
-                self._do_compact()
-                self._refill()
-            return
-        self._refill()
+        tl = self.timeline
+        with tl.span("tick", tick=self.stats.ticks):
+            with tl.span("tick.jit", hops=self.tick_hops, shards=self.S):
+                state, evals, m_ids, m_dists = self._tick_fn(
+                    self._state, self._stk["x_pad"], self._stk["adj_pad"],
+                    self._stk["live_pad"], self._stk["gid_pad"],
+                    jnp.asarray(self._queries), self._hot_first,
+                    self._hot_ratio, self._evals)
+                if tl.enabled:          # make the span cover device time
+                    jax.block_until_ready(state)
+            self._state = state
+            self._evals = evals
+            self.stats.ticks += 1
+            active = np.asarray(state.active)           # (S, W)
+            lane_live = active.any(axis=0)
+            now = time.perf_counter()
+            retiring = [lane for lane, meta in enumerate(self._lane_meta)
+                        if meta is not None and not lane_live[lane]]
+            if retiring:
+                with tl.span("tick.retire", retiring=len(retiring)):
+                    self._retire_lanes(state, np.asarray(m_ids),
+                                       np.asarray(m_dists), retiring, now)
+            if self.auto_compact and not self._draining and any(
+                    sh.dqf.store.should_compact(self.compact_ratio)
+                    for sh in self.sharded.shards):
+                self._draining = True
+            if self._draining:
+                if not self._any_live():
+                    self._do_compact()
+                    with tl.span("tick.refill"):
+                        self._refill()
+            else:
+                with tl.span("tick.refill"):
+                    self._refill()
+        if self.sentinel is not None:
+            self.sentinel.on_tick()
 
     def _tick_paged(self):
         """One bucketed tick over the live lanes (paged mode)."""
-        lanes_np, pt_np, n_live = self.pagepool.live_bucket(self.min_bucket)
-        if n_live:
-            state, (act, hops_b), m_ids, m_dists = self._tick_fn(
-                self._state, self._stk["x_pad"], self._stk["adj_pad"],
-                self._stk["live_pad"], self._stk["gid_pad"],
-                jnp.asarray(lanes_np), jnp.asarray(pt_np))
-            self._state = state
-            self.stats.ticks += 1
-            lane_live = np.asarray(act).any(axis=0)     # (B,)
-            now = time.perf_counter()
-            retiring = [j for j in range(n_live) if not lane_live[j]
-                        and self._lane_meta[int(lanes_np[j])] is not None]
-            if retiring:
-                self._retire_paged(lanes_np, retiring, np.asarray(m_ids),
-                                   np.asarray(m_dists),
-                                   np.asarray(hops_b), now)
-        else:
-            self.stats.ticks += 1
-        if self.auto_compact and not self._draining and any(
-                sh.dqf.store.should_compact(self.compact_ratio)
-                for sh in self.sharded.shards):
-            self._draining = True
-        if self._draining:
-            if not self._any_live():
-                self._do_compact()
-                self._refill()
-            return
-        self._refill()
+        tl = self.timeline
+        with tl.span("tick", tick=self.stats.ticks):
+            lanes_np, pt_np, n_live = self.pagepool.live_bucket(
+                self.min_bucket)
+            if n_live:
+                with tl.span("tick.jit", bucket=len(lanes_np),
+                             live=n_live, shards=self.S):
+                    state, (act, hops_b), m_ids, m_dists = self._tick_fn(
+                        self._state, self._stk["x_pad"],
+                        self._stk["adj_pad"], self._stk["live_pad"],
+                        self._stk["gid_pad"], jnp.asarray(lanes_np),
+                        jnp.asarray(pt_np))
+                    if tl.enabled:      # make the span cover device time
+                        jax.block_until_ready(state)
+                self._state = state
+                self.stats.ticks += 1
+                lane_live = np.asarray(act).any(axis=0)     # (B,)
+                now = time.perf_counter()
+                retiring = [
+                    j for j in range(n_live) if not lane_live[j]
+                    and self._lane_meta[int(lanes_np[j])] is not None]
+                if retiring:
+                    with tl.span("tick.retire", retiring=len(retiring)):
+                        self._retire_paged(lanes_np, retiring,
+                                           np.asarray(m_ids),
+                                           np.asarray(m_dists),
+                                           np.asarray(hops_b), now)
+            else:
+                self.stats.ticks += 1
+            if self.auto_compact and not self._draining and any(
+                    sh.dqf.store.should_compact(self.compact_ratio)
+                    for sh in self.sharded.shards):
+                self._draining = True
+            if self._draining:
+                if not self._any_live():
+                    self._do_compact()
+                    with tl.span("tick.refill"):
+                        self._refill()
+            else:
+                with tl.span("tick.refill"):
+                    self._refill()
+        if self.sentinel is not None:
+            self.sentinel.on_tick()
 
     def _retire_paged(self, lanes_np, retiring, m_ids, m_dists, hops_b,
                       now):
@@ -753,6 +830,19 @@ class ShardedEngine:
             if hops >= self.cfg.max_hops:
                 self.stats.straggled += 1
             self.stats.latencies_ms.append((now - t_in) * 1e3)
+            tr = self._lane_trace[lane]
+            if tr is not None:
+                tr.update(
+                    queue_wait_ms=(t_seed - t_in) * 1e3,
+                    service_ms=(now - t_seed) * 1e3,
+                    total_ms=(now - t_in) * 1e3,
+                    full_hops=hops,
+                    shard_hops=[int(h) for h in hops_b[:, j]],
+                    straggled=hops >= self.cfg.max_hops,
+                    ticks_in_flight=self.stats.ticks - tr["seed_tick"],
+                    top_id=int(ids[0]))
+                self.traces.add(tr)
+                self._lane_trace[lane] = None
             self._lane_meta[lane] = None
             feed.setdefault((tenant, gen), []).append(ids)
         self.pagepool.free(np.asarray(rl, np.int32))
@@ -779,6 +869,19 @@ class ShardedEngine:
             if hops >= self.cfg.max_hops:
                 self.stats.straggled += 1
             self.stats.latencies_ms.append((now - t_in) * 1e3)
+            tr = self._lane_trace[lane]
+            if tr is not None:
+                tr.update(
+                    queue_wait_ms=(t_seed - t_in) * 1e3,
+                    service_ms=(now - t_seed) * 1e3,
+                    total_ms=(now - t_in) * 1e3,
+                    full_hops=hops,
+                    shard_hops=[int(h) for h in hops_all[:, lane]],
+                    straggled=hops >= self.cfg.max_hops,
+                    ticks_in_flight=self.stats.ticks - tr["seed_tick"],
+                    top_id=int(ids[0]))
+                self.traces.add(tr)
+                self._lane_trace[lane] = None
             self._lane_meta[lane] = None
             feed.setdefault((tenant, gen), []).append(ids)
         # merged global ids feed the owning shards' counters ONCE per

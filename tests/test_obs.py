@@ -122,6 +122,33 @@ def test_registry_exposition_format():
     assert 'extra{k="v"} 1.5' in text
 
 
+def test_exposition_escapes_hostile_label_values():
+    """Label values with backslash / quote / newline must not split lines.
+
+    A tenant id is caller-controlled; one hostile value would otherwise
+    corrupt the exposition for every metric in the registry.
+    """
+    r = MetricsRegistry()
+    hostile = 'a\\b"c\nd'
+    r.counter("reqs_total", "requests").inc(2, tenant=hostile)
+    r.histogram("lat_ms", "latency\nwith \\ newline",
+                lo=1.0, hi=8.0, growth=2.0).observe(3.0, tenant=hostile)
+    text = r.exposition()
+    assert 'tenant="a\\\\b\\"c\\nd"' in text
+    # every line is intact: metric lines parse as <name{labels}> <value>
+    for line in text.strip().split("\n"):
+        assert line.startswith("#") or len(line.rsplit(" ", 1)) == 2, line
+        assert "\r" not in line
+    # HELP escapes backslash+newline (not quotes) and appears once per
+    # family, before TYPE
+    assert "# HELP lat_ms latency\\nwith \\\\ newline" in text
+    assert text.count("# HELP reqs_total requests") == 1
+    assert text.count("# TYPE reqs_total counter") == 1
+    lines = text.strip().split("\n")
+    assert lines.index("# HELP reqs_total requests") \
+        == lines.index("# TYPE reqs_total counter") - 1
+
+
 def test_default_registry_is_shared():
     assert default_registry() is default_registry()
     assert isinstance(default_registry().counter("x_total"), Counter)

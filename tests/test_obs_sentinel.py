@@ -1,0 +1,522 @@
+"""Perf sentinel (ISSUE 9): time series, compile sentinel, SLOs, capture.
+
+Contracts under test:
+
+* :class:`TimeSeries` is a bounded ring with a cadence gate, windowed
+  counter rates (reset-clamped), derived ``*_per_s`` series, and a JSON
+  export that is strictly valid (``allow_nan=False`` round-trips);
+* :class:`CompileSentinel` keys on the abstract signature jax would key
+  its jit cache on — repeat shapes are cache hits, a new shape is a
+  compile, shape churn inside the storm window flips the alerting gauge,
+  and an ``expect()`` budget turns the paged engine's pow2 bucket ladder
+  into an assertable invariant (strict mode raises);
+* :class:`SLOMonitor` multi-window burn-rate alerts fire only when BOTH
+  windows burn, resolve on recovery, and publish scrapeable state;
+* :class:`CaptureHook` raises live trace sampling to 1.0 for the capture
+  window and restores it after writing the bundle;
+* engine integration: sentinel-on engines trace, watch their own jit
+  entry points, stay inside the pow2 compile schedule over a randomized
+  admission trace, and ``debug_bundle()`` round-trips as valid JSON with
+  a Perfetto-loadable timeline.
+"""
+
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import (BurnWindow, CaptureHook, CompileSentinel,
+                      MetricsRegistry, ObsConfig, SLOMonitor, SLOObjective,
+                      TimeSeries, abstract_signature, default_slos)
+from repro.serving.engine import WaveEngine
+from repro.serving.paged_engine import PagedWaveEngine
+
+
+class _Clock:
+    """Deterministic injectable clock."""
+
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def tick(self, dt):
+        self.t += dt
+        return self.t
+
+
+def _counter_registry():
+    r = MetricsRegistry()
+    c = r.counter("work_total")
+    g = r.gauge("depth")
+    return r, c, g
+
+
+# ------------------------------------------------------------- time series
+def test_timeseries_cadence_gate_and_ring_bound():
+    r, c, _ = _counter_registry()
+    clk = _Clock()
+    ts = TimeSeries(r, capacity=4, interval_s=1.0, clock=clk)
+    assert ts.maybe_sample()                  # first sample always taken
+    assert not ts.maybe_sample()              # gated: no time elapsed
+    clk.tick(0.5)
+    assert not ts.maybe_sample()
+    clk.tick(0.5)
+    assert ts.maybe_sample()
+    for _ in range(10):
+        clk.tick(1.0)
+        c.inc()
+        assert ts.maybe_sample()
+    assert len(ts) == 4                       # ring bound holds
+    assert ts.samples_total == 12
+    assert ts.dropped == 8
+    assert ts.span_s() == pytest.approx(3.0)  # 4 samples, 1s apart
+    with pytest.raises(ValueError):
+        TimeSeries(r, capacity=1)
+
+
+def test_timeseries_rate_delta_and_reset_clamp():
+    r, c, g = _counter_registry()
+    clk = _Clock()
+    ts = TimeSeries(r, capacity=64, interval_s=0.0, clock=clk)
+    for i in range(5):
+        c.inc(10)
+        g.set(i)
+        ts.sample()
+        clk.tick(2.0)
+    assert ts.rate("work_total") == pytest.approx(40.0 / 8.0)
+    assert ts.delta("work_total") == pytest.approx(40.0)
+    assert ts.latest("depth") == 4.0
+    # windowed: only the last two samples (2s apart, 10 apart)
+    assert ts.rate("work_total", window_s=2.0) == pytest.approx(5.0)
+    assert math.isnan(ts.rate("work_total", window_s=0.0))
+    assert math.isnan(ts.rate("nope"))
+    # counter reset (component rebuilt) clamps to zero, never negative
+    r2, c2, _ = _counter_registry()
+    clk2 = _Clock()
+    ts2 = TimeSeries(r2, capacity=8, interval_s=0.0, clock=clk2)
+    c2.inc(100)
+    ts2.sample()
+    clk2.tick(1.0)
+    r2._metrics["work_total"]._values.clear()     # simulate reset
+    c2.inc(1)
+    ts2.sample()
+    assert ts2.rate("work_total") == 0.0
+
+
+def test_timeseries_rates_derive_per_s_for_labeled_counters():
+    r = MetricsRegistry()
+    c = r.counter("engine_completed_total")
+    clk = _Clock()
+    ts = TimeSeries(r, capacity=16, interval_s=0.0, clock=clk)
+    for _ in range(4):
+        c.inc(3)
+        c.inc(1, tenant="a")
+        ts.sample()
+        clk.tick(1.0)
+    rates = ts.rates()
+    assert rates["engine_completed_per_s"] == pytest.approx(3.0)
+    assert rates["engine_completed_per_s{tenant=a}"] == pytest.approx(1.0)
+    assert "depth_per_s" not in rates             # gauges don't rate
+
+
+def test_timeseries_export_is_strict_json(tmp_path):
+    r = MetricsRegistry()
+    r.gauge("g").set(1.5)
+    r.register_callback("bad", lambda: {"inf_metric": float("inf")})
+    clk = _Clock()
+    ts = TimeSeries(r, capacity=8, interval_s=0.0, clock=clk)
+    for _ in range(3):
+        ts.sample()
+        clk.tick(0.25)
+    p = tmp_path / "ts.json"
+    ts.export(str(p))                     # allow_nan=False must not raise
+    doc = json.loads(p.read_text())
+    assert doc["t"] == [0.0, 0.25, 0.5]
+    assert doc["series"]["g"] == [1.5, 1.5, 1.5]
+    assert doc["series"]["inf_metric"] == [None, None, None]
+    assert doc["samples_total"] == 3 and doc["dropped"] == 0
+
+
+# -------------------------------------------------------- abstract signature
+def test_abstract_signature_matches_jit_cache_semantics():
+    a32 = np.zeros((4, 8), np.float32)
+    b32 = np.ones((4, 8), np.float32)
+    a64 = np.zeros((4, 8), np.float64)
+    aj = jnp.zeros((4, 8), jnp.float32)
+    # same shape/dtype, different values: same signature (cache hit)
+    assert abstract_signature((a32,), {}) == abstract_signature((b32,), {})
+    # jax and numpy arrays of the same aval agree
+    assert abstract_signature((a32,), {}) == abstract_signature((aj,), {})
+    # dtype or shape changes the key
+    assert abstract_signature((a32,), {}) != abstract_signature((a64,), {})
+    assert abstract_signature((a32,), {}) != \
+        abstract_signature((a32[:2],), {})
+    # static (non-array) args key on VALUE, as jit does
+    assert abstract_signature((a32, 3), {}) != abstract_signature((a32, 4), {})
+    assert abstract_signature((), {"mode": "graph"}) != \
+        abstract_signature((), {"mode": "tree"})
+    # containers recurse; tuple vs list structure matters
+    assert abstract_signature(((a32, 1),), {}) != \
+        abstract_signature(([a32, 1],), {})
+
+
+def test_compile_sentinel_counts_hits_and_misses():
+    r = MetricsRegistry()
+    clk = _Clock()
+    cs = CompileSentinel(r, clock=clk)
+    calls = []
+    f = cs.wrap("f", lambda x: calls.append(x.shape) or x.sum())
+    x = np.ones((8, 4), np.float32)
+    f(x)
+    f(x + 1)                                  # same signature: hit
+    f(np.ones((16, 4), np.float32))           # new shape: compile
+    assert cs.calls("f") == 3
+    assert cs.compiles("f") == cs.executables("f") == 2
+    assert len(calls) == 3                    # wrapped fn always runs
+    out = r.scrape()
+    assert out["jit_calls_total{fn=f}"] == 3.0
+    assert out["jit_compiles_total{fn=f}"] == 2.0
+    assert out["jit_executables{fn=f}"] == 2.0
+
+
+def test_compile_sentinel_storm_detection_and_recovery():
+    r = MetricsRegistry()
+    clk = _Clock()
+    cs = CompileSentinel(r, storm_threshold=3, storm_window_s=10.0,
+                         clock=clk)
+    f = cs.wrap("hot", lambda x: x)
+    # shape churn: every call a new signature (the unpadded-batch bug)
+    for n in range(3):
+        f(np.ones((n + 1,), np.float32))
+        clk.tick(0.1)
+    assert not cs.storming("hot")             # at threshold, not over
+    f(np.ones((99,), np.float32))
+    assert cs.storming("hot")
+    out = r.scrape()
+    assert out["jit_recompile_storm{fn=hot}"] == 1.0
+    assert out["jit_recompile_storms_total{fn=hot}"] == 1.0
+    # window slides: a lone compile much later is not a storm
+    clk.tick(100.0)
+    f(np.ones((100,), np.float32))
+    assert not cs.storming("hot")
+    assert r.scrape()["jit_recompile_storm{fn=hot}"] == 0.0
+    # rising-edge counter did not double-count within the first storm
+    assert r.scrape()["jit_recompile_storms_total{fn=hot}"] == 1.0
+
+
+def test_compile_sentinel_expect_budget_and_strict():
+    r = MetricsRegistry()
+    cs = CompileSentinel(r, clock=_Clock())
+    f = cs.wrap("tick", lambda x: x)
+    cs.expect("tick", 2)
+    f(np.ones((4,), np.float32))
+    f(np.ones((8,), np.float32))
+    assert "jit_schedule_violations_total{fn=tick}" not in r.scrape()
+    f(np.ones((16,), np.float32))             # 3rd executable: over budget
+    assert r.scrape()["jit_schedule_violations_total{fn=tick}"] == 1.0
+    # retroactive expect trips immediately, strict raises
+    cs2 = CompileSentinel(strict=True, clock=_Clock())
+    g = cs2.wrap("g", lambda x: x)
+    g(np.ones((4,), np.float32))
+    g(np.ones((8,), np.float32))
+    with pytest.raises(RuntimeError, match="schedule violation"):
+        cs2.expect("g", 1)
+
+
+def test_compile_sentinel_on_real_jit_shape_churn():
+    """The sentinel's signature tracks jax's actual recompiles."""
+    compiles = []
+
+    @jax.jit
+    def f(x):
+        compiles.append(x.shape)              # traced once per compile
+        return (x * 2).sum()
+
+    cs = CompileSentinel(clock=_Clock())
+    wf = cs.wrap("f", f)
+    for n in (4, 4, 8, 8, 4, 16):
+        wf(jnp.ones((n,), jnp.float32))
+    assert cs.compiles("f") == len(compiles) == 3
+    assert cs.calls("f") == 6
+
+
+# ------------------------------------------------------------------ SLO burn
+def _slo_rig(*, budget=0.1, min_samples=3):
+    r = MetricsRegistry()
+    g = r.gauge("engine_service_ms_p99")
+    clk = _Clock()
+    ts = TimeSeries(r, capacity=256, interval_s=0.0, clock=clk)
+    obj = SLOObjective("service_p99", "engine_service_ms_p99", 50.0, "<=",
+                       budget=budget)
+    mon = SLOMonitor(ts, [obj], registry=r,
+                     windows=(BurnWindow(10.0, 1.0, 10.0),),
+                     min_samples=min_samples, clock=clk)
+    return r, g, clk, ts, mon
+
+
+def test_slo_fires_on_both_windows_and_resolves():
+    r, g, clk, ts, mon = _slo_rig(budget=0.05)
+    fired, resolved = [], []
+    mon.on_fire.append(lambda a: fired.append(a.slo))
+    mon.on_resolve.append(lambda a: resolved.append(a.slo))
+    # healthy: under threshold, no alert
+    for _ in range(12):
+        g.set(10.0)
+        ts.sample()
+        mon.evaluate()
+        clk.tick(0.25)
+    assert not mon.active() and not fired
+    # incident: every sample violating -> burn = 1/0.05 = 20 > max_burn,
+    # but only once violations fill BOTH the 10s and 1s windows
+    for _ in range(60):
+        g.set(500.0)
+        ts.sample()
+        mon.evaluate()
+        clk.tick(0.25)
+    assert mon.alert("service_p99").active
+    assert fired == ["service_p99"]
+    out = r.scrape()
+    assert out["slo_alert_active{slo=service_p99}"] == 1.0
+    assert out["slo_alerts_total{slo=service_p99}"] == 1.0
+    assert out["slo_burn_rate{slo=service_p99,window=1s}"] > 10.0
+    # recovery: short window clears first, alert resolves
+    for _ in range(60):
+        g.set(10.0)
+        ts.sample()
+        mon.evaluate()
+        clk.tick(0.25)
+    assert not mon.alert("service_p99").active
+    assert resolved == ["service_p99"]
+    assert r.scrape()["slo_alert_active{slo=service_p99}"] == 0.0
+    # state() is JSON-able
+    json.dumps(mon.state())
+
+
+def test_slo_needs_min_samples_and_ignores_missing_metric():
+    r, g, clk, ts, mon = _slo_rig(budget=0.01, min_samples=3)
+    g.set(1e9)
+    ts.sample()
+    clk.tick(0.1)
+    ts.sample()
+    mon.evaluate()
+    assert not mon.active()               # 2 samples < min_samples
+    # a metric that never appears is NaN burn, never fires
+    obj = SLOObjective("ghost", "no_such_metric", 1.0)
+    mon2 = SLOMonitor(ts, [obj], windows=(BurnWindow(10.0, 1.0, 1.0),),
+                      clock=clk)
+    assert mon2.evaluate() == []
+    assert not mon2.active()
+
+
+def test_default_slos_cover_both_engine_families():
+    names = {o.name for o in default_slos()}
+    assert names == {"service_p99", "queue_wait_p99", "tier_hit_rate",
+                     "occupancy"}
+    sharded = default_slos(prefix="sharded_engine")
+    assert any(o.metric == "sharded_engine_service_ms_p99" for o in sharded)
+
+
+# -------------------------------------------------------------- capture hook
+class _FakeEngine:
+    def __init__(self):
+        self._trace_rate = 0.05
+        self.registry = None
+
+
+def test_capture_hook_raises_rate_then_restores(tmp_path):
+    eng = _FakeEngine()
+    hook = CaptureHook(eng, capture_ticks=3, bundle_dir=str(tmp_path))
+    alert = type("A", (), {"slo": "service_p99"})()
+    hook.on_alert(alert)
+    assert eng._trace_rate == 1.0 and hook.capturing
+    hook.on_alert(alert)                  # nested alert: no-op, one restore
+    hook.on_tick()
+    hook.on_tick()
+    assert eng._trace_rate == 1.0        # window still open
+    hook.on_tick()                        # closes: bundle + restore
+    assert eng._trace_rate == 0.05 and not hook.capturing
+    assert hook.last_bundle is not None
+    man = json.loads(open(os.path.join(hook.last_bundle,
+                                       "MANIFEST.json")).read())
+    assert man["reason"] == "slo_alert:service_p99"
+    hook.on_tick()                        # idle ticks are no-ops
+    assert eng._trace_rate == 0.05
+
+
+# --------------------------------------------------------- engine integration
+@pytest.fixture(scope="module")
+def sentinel_obs():
+    # own registry: the session-shared dqf.registry must not accumulate
+    # this module's engine collectors (a drained engine's scrape-time
+    # callback would overwrite the occupancy gauges of engines built by
+    # later test modules over the same dqf)
+    return ObsConfig(registry=MetricsRegistry(), trace_rate=1.0,
+                     timeline=True, sentinel=True,
+                     sentinel_interval_s=0.0, slos=tuple(default_slos()))
+
+
+def test_wave_engine_sentinel_watches_itself(built_dqf, sentinel_obs,
+                                             tmp_path):
+    dqf, wl = built_dqf
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8, obs=sentinel_obs)
+    eng.submit(wl.sample(48))
+    out = eng.run_until_drained()
+    assert len(out["results"]) == 48
+    # the sentinel saw the jitted entry points and they stayed stable
+    cs = eng.sentinel.compile
+    assert cs.calls("wave_tick") >= 1
+    assert cs.executables("wave_tick") == 1      # fixed wave: one signature
+    assert not cs.storming("wave_tick")
+    # hot phase keys on the refill batch shape (varies with free lanes)
+    assert cs.calls("hot_phase_stacked") >= \
+        cs.executables("hot_phase_stacked") >= 1
+    # time series sampled every tick (interval 0) and derived qps
+    ts = eng.sentinel.timeseries
+    assert len(ts) >= 2
+    assert ts.latest("engine_completed_total") == 48.0
+    # debug bundle round-trips as strict JSON
+    bdir = eng.debug_bundle(str(tmp_path / "bundle"), reason="test")
+    man = json.loads(open(os.path.join(bdir, "MANIFEST.json")).read())
+    for name in ("meta.json", "config.json", "scrape.json", "traces.json",
+                 "timeline.json", "timeseries.json", "compile.json",
+                 "slo.json"):
+        assert name in man["written"], (name, man)
+        doc = json.loads(open(os.path.join(bdir, name)).read())
+        assert doc is not None
+    # the timeline section is loadable Chrome trace events
+    tl = json.loads(open(os.path.join(bdir, "timeline.json")).read())
+    evs = tl["traceEvents"]
+    assert evs and all(e["ph"] == "X" and "ts" in e and "dur" in e
+                       for e in evs)
+    assert any(e["name"] == "tick" for e in evs)
+    tr = json.loads(open(os.path.join(bdir, "traces.json")).read())
+    assert tr["total"] == 48 and len(tr["traces"]) == 48
+    cfg = json.loads(open(os.path.join(bdir, "config.json")).read())
+    assert cfg["type"] == "WaveEngine"
+    assert cfg["obs_config"]["sentinel"] is True
+    assert "registry" not in cfg["obs_config"]
+
+
+def test_paged_engine_pow2_compile_schedule(built_dqf, sentinel_obs):
+    """Randomized admission must stay inside the O(log cap) bucket ladder.
+
+    capacity 16 / min_bucket 4 -> widths {4, 8, 16}: at most 3 tick
+    executables no matter how lanes churn, and zero schedule violations.
+    """
+    dqf, wl = built_dqf
+    eng = PagedWaveEngine(dqf, capacity=16, tick_hops=8, min_bucket=4,
+                          obs=sentinel_obs)
+    assert eng._n_widths == 3
+    rng = np.random.default_rng(7)
+    done = 0
+    # randomized trace: bursty arrivals against continuous admission
+    for _ in range(40):
+        n = int(rng.integers(0, 6))
+        if n:
+            eng.submit(wl.sample(n))
+            done += n
+        eng.step()
+    out = eng.run_until_drained()
+    assert len(out["results"]) == done
+    cs = eng.sentinel.compile
+    # the randomized trace exercised multiple widths, never left the ladder
+    assert 2 <= cs.executables("paged_tick") <= eng._n_widths
+    assert cs.calls("paged_tick") > cs.executables("paged_tick")
+    rep = cs.report()["paged_tick"]
+    assert rep["expected"] == 3 and rep["violations"] == 0
+    assert not cs.storming("paged_tick")
+    # admission pads to pow2 too: bounded executables
+    assert cs.executables("paged_admit") <= eng._n_widths
+    # traces: continuous admission still records one per retired query
+    assert len(eng.traces) == done
+    assert {t["rid"] for t in eng.traces} == set(out["results"])
+    for t in eng.traces:
+        assert t["top_id"] == int(out["results"][t["rid"]]["ids"][0])
+        assert t["ticks_in_flight"] >= 1 and t["service_ms"] >= 0.0
+
+
+def test_paged_engine_page_pool_counters(built_dqf, sentinel_obs):
+    dqf, wl = built_dqf
+    eng = PagedWaveEngine(dqf, capacity=8, tick_hops=8, obs=sentinel_obs)
+    eng.submit(wl.sample(24))
+    eng.run_until_drained()
+    out = eng.scrape()
+    alloc = out["page_pool_alloc_total{pool=paged}"]
+    freed = out["page_pool_free_total{pool=paged}"]
+    ppl = eng.pagepool.pages_per_lane
+    assert alloc >= 24 * ppl              # every admitted lane took pages
+    assert freed == alloc                 # drained: all pages returned
+    assert out["page_pool_pages_in_use{pool=paged}"] == 0.0
+    # mid-flight the gauge tracks live lanes
+    eng.submit(wl.sample(4))
+    eng.step()
+    assert eng.scrape()["page_pool_pages_in_use{pool=paged}"] > 0.0
+    eng.run_until_drained()
+    assert eng.scrape()["page_pool_pages_in_use{pool=paged}"] == 0.0
+
+
+def test_page_pool_grow_counter():
+    from repro.serving import paged as pg
+    r = MetricsRegistry()
+    pool = pg.PagePool(4, 600, page_cols=128, registry=r, name="t")
+    assert "page_pool_grow_total{pool=t}" not in r.scrape()  # init ≠ grow
+    pool.reset(600)                           # same size: still not a grow
+    assert "page_pool_grow_total{pool=t}" not in r.scrape()
+    pool.reset(1200)                          # store grew: counted
+    assert r.scrape()["page_pool_grow_total{pool=t}"] == 1.0
+    lanes = pool.alloc(2)
+    out = r.scrape()
+    assert out["page_pool_alloc_total{pool=t}"] == \
+        2.0 * pool.pages_per_lane
+    assert out["page_pool_pages_in_use{pool=t}"] == \
+        2.0 * pool.pages_per_lane
+    pool.free(lanes)
+    out = r.scrape()
+    assert out["page_pool_free_total{pool=t}"] == \
+        out["page_pool_alloc_total{pool=t}"]
+    assert out["page_pool_pages_in_use{pool=t}"] == 0.0
+
+
+def test_engine_alert_triggers_full_rate_capture(built_dqf, tmp_path):
+    """End to end: impossible SLO -> alert -> capture window -> bundle."""
+    dqf, wl = built_dqf
+    slo = SLOObjective("service_p99", "engine_service_ms_p99", 0.0, "<=",
+                       budget=0.01)
+    # the window must outlive seed->retire for lanes admitted at full
+    # rate — sampling is decided at seed time, recorded at retirement
+    obs = ObsConfig(registry=MetricsRegistry(), trace_rate=0.0,
+                    sentinel=True, sentinel_interval_s=0.0,
+                    slos=(slo,), capture_ticks=15,
+                    capture_dir=str(tmp_path))
+    eng = WaveEngine(dqf, wave_size=16, tick_hops=8, obs=obs)
+    eng.submit(wl.sample(64))
+    eng.run_until_drained()
+    eng.submit(wl.sample(64))
+    eng.run_until_drained()
+    assert eng.sentinel.slo.alert("service_p99").fired_total >= 1
+    hook = eng.sentinel.capture
+    assert hook.last_bundle is not None, "capture window never closed"
+    assert eng._trace_rate == 0.0         # restored after the window
+    tr = json.loads(open(os.path.join(hook.last_bundle,
+                                      "traces.json")).read())
+    assert tr["total"] > 0                # full-rate capture traced queries
+    man = json.loads(open(os.path.join(hook.last_bundle,
+                                       "MANIFEST.json")).read())
+    assert man["reason"] == "slo_alert:service_p99"
+
+
+def test_dqf_debug_bundle(built_dqf, tmp_path):
+    dqf, _ = built_dqf
+    bdir = dqf.debug_bundle(str(tmp_path / "dqf"), reason="bare")
+    man = json.loads(open(os.path.join(bdir, "MANIFEST.json")).read())
+    assert "scrape.json" in man["written"]
+    assert "extra.json" in man["written"]
+    extra = json.loads(open(os.path.join(bdir, "extra.json")).read())
+    assert "memory_report" in extra

@@ -16,7 +16,7 @@ from repro.core import ground_truth, recall_at_k
 from repro.core.dqf import DQF
 from repro.core.ssg import SSGParams
 from repro.core.types import DQFConfig
-from repro.obs import MetricsRegistry
+from repro.obs import MetricsRegistry, ObsConfig
 from repro.serving.sharded import build_sharded_index, merge_with_dropout
 from repro.sharding import (ShardConfig, ShardedDQF, ShardedEngine,
                             merge_topk, merge_topk_host)
@@ -344,6 +344,65 @@ def test_sharded_paged_engine_continuous_and_occupancy():
     got = np.stack([out["results"][r]["ids"]
                     for r in range(q.shape[0])])
     assert recall_at_k(np.where(got < 0, 0, got), gt) > 0.6
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_sharded_engine_traces_every_query_at_rate_one(paged):
+    """At rate 1.0 both sharded modes emit exactly one trace per retired
+    query, rid-matched to the merged result (same contract as the wave
+    engine test in tests/test_obs.py)."""
+    sd, x, q = _built(3)
+    sd.warm(q[:8], tenant="a")
+    eng = ShardedEngine(sd, wave_size=8, tick_hops=4, paged=paged,
+                        obs=ObsConfig(trace_rate=1.0, trace_capacity=256))
+    rids_a = eng.submit(q[:10], tenant="a")
+    rids_d = eng.submit(q[10:24])
+    out = eng.run_until_drained()
+    assert eng.stats.completed == 24
+    assert len(eng.traces) == 24 and eng.traces.dropped == 0
+    required = {"rid", "tenant", "seed_tick", "shards", "queue_wait_ms",
+                "service_ms", "total_ms", "full_hops", "shard_hops",
+                "straggled", "ticks_in_flight", "top_id"}
+    assert {tr["rid"] for tr in eng.traces} == set(out["results"])
+    for tr in eng.traces:
+        assert required <= set(tr)
+        res = out["results"][tr["rid"]]
+        # rid <-> merged-result parity: the trace saw the same answer
+        assert tr["top_id"] == int(res["ids"][0])
+        assert tr["tenant"] == res["tenant"]
+        assert tr["full_hops"] == res["hops"] == max(tr["shard_hops"])
+        assert len(tr["shard_hops"]) == tr["shards"] == 3
+        assert tr["service_ms"] >= 0 and tr["queue_wait_ms"] >= 0
+        assert tr["total_ms"] >= tr["service_ms"]
+        assert tr["ticks_in_flight"] >= 1
+    by_rid = {tr["rid"]: tr for tr in eng.traces}
+    assert all(by_rid[r]["tenant"] == "a" for r in rids_a)
+    assert all(by_rid[r]["tenant"] != "a" for r in rids_d)
+
+
+def test_sharded_engine_trace_rate_zero_records_nothing():
+    sd, _, q = _built(2)
+    eng = ShardedEngine(sd, wave_size=8, tick_hops=4,
+                        obs=ObsConfig(trace_rate=0.0))
+    eng.submit(q[:16])
+    eng.run_until_drained()
+    assert eng.stats.completed == 16
+    assert len(eng.traces) == 0 and eng.traces.total == 0
+
+
+def test_sharded_paged_page_pool_counters():
+    """The shared cross-shard pool publishes lifecycle counters."""
+    sd, _, q = _built(2)
+    eng = ShardedEngine(sd, wave_size=4, tick_hops=4, paged=True,
+                        page_cols=128)
+    eng.submit(q)
+    eng.run_until_drained()
+    out = eng.scrape()
+    ppl = eng.pagepool.pages_per_lane
+    assert out["page_pool_alloc_total{pool=sharded}"] >= q.shape[0] * ppl
+    assert out["page_pool_free_total{pool=sharded}"] == \
+        out["page_pool_alloc_total{pool=sharded}"]
+    assert out["page_pool_pages_in_use{pool=sharded}"] == 0.0
 
 
 def test_sharded_engine_rejects_quant():
