@@ -62,6 +62,120 @@ def _open_loop(eng, queries, rate_qps: float, seed: int) -> dict:
             "qps": n / wall}
 
 
+def _open_loop_all(eng, queries, rate_qps: float, seed: int) -> dict:
+    """Like :func:`_open_loop` but tracks every submitted rid explicitly,
+    so it terminates even when requests are shed/dropped at admission
+    (the chaos arm's shed engine never "completes" those)."""
+    from repro.serving.engine import EngineStats
+
+    rng = np.random.default_rng(seed)
+    n = queries.shape[0]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, n))
+    eng.stats = EngineStats()
+    rids = []
+    i = 0
+    t0 = time.perf_counter()
+    while i < n or any(r not in eng._results for r in rids):
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            rids.extend(eng.submit(queries[i:i + 1]))
+            i += 1
+        if i < n and not eng.queue and not eng._any_live():
+            time.sleep(min(arrivals[i] - now, 1e-3))
+            continue
+        eng.step()
+    wall = time.perf_counter() - t0
+    lat = np.asarray(eng.stats.latencies_ms, np.float64)
+    res = [eng._results[r] for r in rids]
+    shed = sum(r["status"] == "shed" for r in res)
+    degraded = sum(r["degraded"] for r in res)
+    return {"p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "qps": n / wall, "shed_rate": shed / n,
+            "degraded_rate": degraded / n}
+
+
+def _bench_chaos(ctx, cap_qps: float):
+    """Degradation under injected faults (chaos ISSUE).
+
+    *Overload*: the same 4x-capacity Poisson stream against an unbounded
+    queue vs a bounded one with shed-oldest — load shedding should buy
+    back most of the queueing tail at an explicit shed rate.  *Tier
+    fault*: a tiered reload of the same index served with injected tier
+    read IOErrors past the retry budget — queries complete with
+    ``degraded=True`` instead of failing.
+    """
+    import dataclasses
+    import os
+    import tempfile
+
+    from repro.chaos import FaultPlan, install_chaos
+    from repro.core import DQF, TierConfig
+    from repro.serving.engine import WaveEngine
+    from repro.serving.status import EngineConfig
+
+    rows = []
+    # 8x capacity with a one-wave queue bound: deep enough into overload
+    # that the bounded engine sheds even when host noise moves the
+    # measured capacity between the calibration and timed phases
+    rate = 8.0 * cap_qps
+    q = ctx.wl.sample(96)
+    variants = {
+        "unbounded": WaveEngine(ctx.dqf, wave_size=WAVE,
+                                tick_hops=TICK_HOPS, prefetch=False),
+        "shed": WaveEngine(ctx.dqf, wave_size=WAVE, tick_hops=TICK_HOPS,
+                           prefetch=False,
+                           engine_cfg=EngineConfig(
+                               max_queue=WAVE,
+                               shed_policy="shed-oldest")),
+    }
+    for name, eng in variants.items():
+        eng.submit(ctx.wl.sample(WAVE))        # warm the tick compile
+        eng.run_until_drained()
+        r = _open_loop_all(eng, q, rate, seed=41)
+        entry = f"chaos_overload_{name}"
+        record_metric("serving", entry,
+                      offered_qps=round(rate, 1),
+                      p99_ms=round(r["p99_ms"], 2),
+                      shed_rate=round(r["shed_rate"], 3))
+        rows.append(
+            f"serving/{entry},{1e6 / max(r['qps'], 1e-9):.0f},"
+            f"p99_ms={r['p99_ms']:.1f};shed={r['shed_rate']:.2f}")
+
+    tmp = tempfile.mkdtemp(prefix="bench-chaos-")
+    ckpt = os.path.join(tmp, "dqf.npz")
+    ctx.dqf.save(ckpt)
+    # one retry at a 25% injected IO rate: enough terminal failures to
+    # exercise the sentinel fallback (default 3 retries at 5% would
+    # absorb essentially every fault and measure a degraded rate of 0)
+    cfg = dataclasses.replace(
+        ctx.dqf.cfg, tier=TierConfig(
+            mode="host", dir=os.path.join(tmp, "tier"),
+            block_rows=64, cache_frac=0.25,
+            fetch_retries=1, fetch_backoff_s=0.0))
+    dqf = DQF.load(ckpt, cfg)
+    eng = WaveEngine(dqf, wave_size=WAVE, tick_hops=TICK_HOPS,
+                     prefetch=False)
+    eng.submit(ctx.wl.sample(WAVE))            # warm the tick compile
+    eng.run_until_drained()
+    install_chaos(eng, FaultPlan(seed=3, tier_io_rate=0.25))
+    qf = ctx.wl.sample(64)
+    t0 = time.perf_counter()
+    eng.submit(qf)
+    out = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    res = list(out["results"].values())
+    degraded = sum(r["degraded"] for r in res) / max(len(res), 1)
+    entry = "chaos_tier_fault"
+    record_metric("serving", entry,
+                  degraded_rate=round(degraded, 3),
+                  p99_ms=round(eng.stats.p99_ms(), 2))
+    rows.append(
+        f"serving/{entry},{1e6 * wall / len(qf):.0f},"
+        f"degraded={degraded:.2f};p99_ms={eng.stats.p99_ms():.1f}")
+    return rows
+
+
 def bench_serving():
     from repro.serving.engine import EngineStats, WaveEngine
     from repro.serving.paged_engine import PagedWaveEngine
@@ -104,6 +218,7 @@ def bench_serving():
                 f"serving/{entry},{1e6 / max(r['qps'], 1e-9):.0f},"
                 f"offered={rate:.0f};p50_ms={r['p50_ms']:.1f};"
                 f"p99_ms={r['p99_ms']:.1f};occ={r['occupancy']:.2f}")
+    rows.extend(_bench_chaos(ctx, cap_qps))
     for row in rows:
         print(row)
     return rows

@@ -1,0 +1,36 @@
+"""repro.chaos — deterministic fault injection for the serving stack.
+
+Production failures are rare, compound, and unreproducible; this package
+makes them cheap, composable, and *seeded*.  A :class:`FaultPlan` is a
+declarative schedule of faults — tier read IOErrors and latency spikes
+keyed on ``(block, fetch_count)``, per-shard stall/fail tick schedules,
+page-pool allocation denials — that the serving stack consults at its
+real fault points:
+
+* :meth:`repro.tiering.cache.BlockCache.host_fetch` (the ``pure_callback``
+  mmap read every tiered gather faults through),
+* :meth:`repro.serving.paged.PagePool.alloc` (lane admission),
+* :meth:`repro.sharding.engine.ShardedEngine._tick` (shard responses).
+
+Every hook is ``None`` by default and checked with one ``is not None``
+branch — chaos off is the exact production code path, byte for byte.
+:func:`install_chaos` walks an engine (or bare DQF) and arms every
+reachable hook; :func:`uninstall_chaos` restores the healthy wiring.
+
+Faults are pure functions of ``(seed, fault-kind, key)`` via splitmix64,
+so a failing trace replays exactly — the property tests in
+``tests/test_chaos.py`` lean on this to assert that fault-free replays
+stay bitwise identical to the no-chaos oracle and that retried-to-success
+fetch faults never perturb results.
+
+:class:`ChaosClock` is the companion virtual clock: engines take a
+``clock=`` callable for their deadline bookkeeping, and a plan with a
+``ChaosClock`` attached turns injected latency (and backoff sleeps) into
+deterministic clock advances instead of real ``time.sleep`` stalls — so
+deadline/latency tests run in microseconds and never flake.
+"""
+
+from .faults import (ChaosClock, FaultPlan, install_chaos,
+                     uninstall_chaos)
+
+__all__ = ["ChaosClock", "FaultPlan", "install_chaos", "uninstall_chaos"]

@@ -47,6 +47,9 @@ persist the tier files alongside the ``.npz``.
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
+import tempfile
 import time
 from typing import Optional
 
@@ -712,9 +715,44 @@ class DQF:
                         tree_value=np.asarray(t.value),
                         tree_depth=np.int64(self.tree.depth),
                         tree_importance=self.tree.feature_importance)
-        np.savez_compressed(path, **arrs)
-        if self.store.tiered:
-            self.store.export_tier(self._tier_sidecar(path))
+        # Crash-safe publish (same tmp-dir protocol as
+        # repro.checkpoint.Checkpointer): everything is staged in a temp
+        # dir in the destination directory and fsynced, the tier sidecar
+        # moves into place first, and the npz rename is the single commit
+        # point — a crash at ANY step leaves either the old checkpoint
+        # fully intact or the new one fully published (``load``
+        # rematerializes the tier from the npz arrays if the sidecar is
+        # missing, so a stale sidecar is never load-bearing).
+        final = str(path)
+        if not final.endswith(".npz"):
+            final += ".npz"
+        dest_dir = os.path.dirname(os.path.abspath(final))
+        tmp_dir = tempfile.mkdtemp(prefix=".dqf-save-", dir=dest_dir)
+        try:
+            tmp_npz = os.path.join(tmp_dir, "checkpoint.npz")
+            with open(tmp_npz, "wb") as f:
+                np.savez_compressed(f, **arrs)
+                f.flush()
+                os.fsync(f.fileno())
+            if self.store.tiered:
+                side = self._tier_sidecar(final)
+                if (self.store.tier_dir is not None
+                        and os.path.abspath(self.store.tier_dir)
+                        == os.path.abspath(side)):
+                    # the live tier already IS the sidecar (post-load):
+                    # renaming it away would orphan the store's open
+                    # block files, so just flush in place
+                    self.store.export_tier(side)
+                else:
+                    tmp_tier = os.path.join(tmp_dir, "tier")
+                    self.store.export_tier(tmp_tier)
+                    if os.path.isdir(side):     # park the old sidecar
+                        os.rename(side,         # for tmp-dir cleanup
+                                  os.path.join(tmp_dir, "tier.old"))
+                    os.rename(tmp_tier, side)
+            os.replace(tmp_npz, final)      # atomic commit
+        finally:
+            shutil.rmtree(tmp_dir, ignore_errors=True)
 
     @staticmethod
     def _tier_sidecar(path) -> str:

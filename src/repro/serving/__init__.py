@@ -8,3 +8,5 @@ Data-parallel serving over mutable per-shard VectorStores lives in
 from .engine import WaveEngine  # noqa: F401
 from .paged_engine import PagedWaveEngine  # noqa: F401
 from .retrieval import RetrievalService, KNNLMHead  # noqa: F401
+from .status import (AdmissionController, EngineConfig,  # noqa: F401
+                     QueryStatus, attach_admission_control)

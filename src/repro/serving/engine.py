@@ -67,6 +67,7 @@ from repro.core.features import feature_matrix, hot_features
 from repro.core.types import DQFConfig, HotFeatures
 from repro.obs import (ObsConfig, PerfSentinel, Timeline, TraceLog,
                        device_annotation, sample_decision)
+from repro.serving.status import EngineConfig, QueryStatus, shed_victim
 from repro.tenancy import DEFAULT_TENANT
 
 __all__ = ["WaveEngine", "EngineStats", "retire_batch"]
@@ -152,15 +153,24 @@ class EngineStats:
     completed: int = 0
     straggled: int = 0
     dropped: int = 0            # requests whose tenant was evicted queued
+    shed: int = 0               # rejected by bounded admission
+    deadline_hit: int = 0       # deadline expiries (queued or in-flight)
+    degraded: int = 0           # served through a sentinel-degraded path
     ticks: int = 0
     total_hops: int = 0
     compactions: int = 0        # background drain-and-compact cycles
+    # terminal-status tallies keyed by QueryStatus value — the single
+    # source for engine_terminal_status_total{status=...}
+    terminal: dict = dataclasses.field(default_factory=dict)
     latencies_ms: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
     # submit→seed wait, recorded when the lane is seeded; splitting it from
     # the end-to-end latency separates queueing from service time
     queue_wait_ms: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+
+    def note_terminal(self, status: "QueryStatus") -> None:
+        self.terminal[status.value] = self.terminal.get(status.value, 0) + 1
 
     def qps(self, wall_s: float) -> float:
         return self.completed / wall_s if wall_s > 0 else 0.0
@@ -188,7 +198,8 @@ class WaveEngine:
     def __init__(self, dqf, *, wave_size: int = 64, tick_hops: int = 8,
                  latency_window: int = LATENCY_WINDOW,
                  auto_compact: bool = True, compact_ratio: float = 0.3,
-                 prefetch: bool = True, obs: Optional[ObsConfig] = None):
+                 prefetch: bool = True, obs: Optional[ObsConfig] = None,
+                 engine_cfg: Optional[EngineConfig] = None, clock=None):
         self.dqf = dqf
         self.cfg: DQFConfig = dqf.cfg
         self.wave = wave_size
@@ -196,6 +207,14 @@ class WaveEngine:
         self.auto_compact = auto_compact
         self.compact_ratio = compact_ratio
         self.prefetch = prefetch
+        # robustness knobs (repro.serving.status): bounded admission with
+        # load shedding + per-query deadlines.  ``clock`` is the engine's
+        # time source for all deadline/latency bookkeeping — injectable
+        # (ChaosClock) so degradation tests are deterministic.
+        self.engine_cfg = engine_cfg if engine_cfg is not None \
+            else EngineConfig()
+        self._clock = clock if clock is not None else time.perf_counter
+        self._shed_scale = 1.0      # tightened by AdmissionController
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats(
             latencies_ms=collections.deque(maxlen=latency_window),
@@ -255,8 +274,14 @@ class WaveEngine:
             self.sentinel.attach_capture(
                 self, capture_ticks=self.obs.capture_ticks,
                 bundle_dir=self.obs.capture_dir)
-        # per-lane (request_id, t_enqueue, t_seed, tenant_name, tenant_gen)
+        # per-lane (request_id, t_enqueue, t_seed, tenant_name, tenant_gen,
+        # deadline_abs-or-None)
         self._lane_meta = [None] * wave_size
+        # per-lane degradation state: a status override set before the
+        # lane retires (deadline force-expiry) and a degraded flag fed by
+        # the tier caches' sentinel fallbacks
+        self._lane_status: list = [None] * wave_size
+        self._lane_degraded = [False] * wave_size
         self._results: dict = {}
         self._state = None
         self._draining = False      # refills paused: compaction pending
@@ -323,12 +348,20 @@ class WaveEngine:
         return jax.jit(tick)
 
     # ---------------------------------------------------------------- public
-    def submit(self, queries: np.ndarray, *,
-               tenant: str = DEFAULT_TENANT) -> list:
+    def submit(self, queries: np.ndarray, *, tenant: str = DEFAULT_TENANT,
+               deadline_ms: Optional[float] = None) -> list:
         """Enqueue queries for one tenant; returns their request ids.
 
         Mixed-tenant waves are the point: interleave ``submit`` calls for
         different tenants and one jitted tick serves them all.
+
+        ``deadline_ms`` bounds each query's end-to-end time (defaulting to
+        ``engine_cfg.default_deadline_ms``): a queued request past its
+        deadline terminates empty, an in-flight lane force-retires with
+        its current best-k — either way ``status="deadline"``.  Every
+        submitted id terminates with *some* explicit status: a bounded
+        queue (``engine_cfg.max_queue``) sheds per ``shed_policy`` and the
+        victim's result lands immediately with ``status="shed"``.
         """
         t = self.dqf.tenants.get(tenant)       # unknown tenant → KeyError
         if t.hot is None:
@@ -340,13 +373,35 @@ class WaveEngine:
             raise ValueError(
                 f"queries must be (B, {self._d}) for this index, got "
                 f"{queries.shape}")
+        if deadline_ms is None:
+            deadline_ms = self.engine_cfg.default_deadline_ms
+        now = self._clock()
+        deadline = now + deadline_ms / 1e3 if deadline_ms is not None \
+            else None
         ids = []
         for q in queries:
             rid = self._next_rid
             self._next_rid += 1
-            self.queue.append((rid, q, time.perf_counter(), t.name, t.gen))
+            entry = (rid, q, now, t.name, t.gen, deadline)
+            limit = self.effective_max_queue()
+            if limit is not None and len(self.queue) >= limit:
+                victim = shed_victim(self.queue, entry,
+                                     self.engine_cfg.shed_policy)
+                self._results[victim[0]] = self._terminal_result(
+                    victim[3], QueryStatus.SHED)
+                self.stats.shed += 1
+                self.stats.note_terminal(QueryStatus.SHED)
+            else:
+                self.queue.append(entry)
             ids.append(rid)
         return ids
+
+    def effective_max_queue(self) -> Optional[int]:
+        """Admission limit after SLO tightening (None = unbounded)."""
+        mq = self.engine_cfg.max_queue
+        if mq is None:
+            return None
+        return max(1, int(mq * self._shed_scale))
 
     def step(self) -> None:
         """Advance the engine exactly one tick (open-loop drivers).
@@ -360,7 +415,7 @@ class WaveEngine:
         self._tick()
 
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
-        t0 = time.perf_counter()
+        t0 = self._clock()
         if self._state is None or not self._any_live():
             self._init_wave()       # idle wave: (re)build for new capacity
         else:
@@ -370,7 +425,7 @@ class WaveEngine:
             self._tick()
         if self._draining and not self._any_live():
             self._do_compact()      # trigger fired on the final retirements
-        wall = time.perf_counter() - t0
+        wall = self._clock() - t0
         return {"results": self._results, "wall_s": wall,
                 "qps": self.stats.qps(wall), "p99_ms": self.stats.p99_ms(),
                 "queue_wait_p99_ms": self.stats.queue_wait_p99_ms(),
@@ -393,21 +448,31 @@ class WaveEngine:
     def _collect_metrics(self) -> dict:
         """Registry scrape-time collector (keyed ``"engine"``)."""
         s = self.stats
-        return {"engine_completed_total": float(s.completed),
-                "engine_straggled_total": float(s.straggled),
-                "engine_dropped_total": float(s.dropped),
-                "engine_ticks_total": float(s.ticks),
-                "engine_hops_total": float(s.total_hops),
-                "engine_compactions_total": float(s.compactions),
-                "engine_queue_depth": float(len(self.queue)),
-                "engine_live_lanes": float(
-                    sum(m is not None for m in self._lane_meta)),
-                "engine_wave_size": float(self.wave),
-                "engine_occupancy_ratio": (
-                    sum(m is not None for m in self._lane_meta)
-                    / float(self.wave)),
-                "engine_traces_recorded": float(self.traces.total),
-                "engine_traces_dropped": float(self.traces.dropped)}
+        limit = self.effective_max_queue()
+        out = {"engine_completed_total": float(s.completed),
+               "engine_straggled_total": float(s.straggled),
+               "engine_dropped_total": float(s.dropped),
+               "engine_shed_total": float(s.shed),
+               "engine_deadline_total": float(s.deadline_hit),
+               "engine_degraded_total": float(s.degraded),
+               "engine_admission_limit": float(limit if limit is not None
+                                               else -1),
+               "engine_ticks_total": float(s.ticks),
+               "engine_hops_total": float(s.total_hops),
+               "engine_compactions_total": float(s.compactions),
+               "engine_queue_depth": float(len(self.queue)),
+               "engine_live_lanes": float(
+                   sum(m is not None for m in self._lane_meta)),
+               "engine_wave_size": float(self.wave),
+               "engine_occupancy_ratio": (
+                   sum(m is not None for m in self._lane_meta)
+                   / float(self.wave)),
+               "engine_traces_recorded": float(self.traces.total),
+               "engine_traces_dropped": float(self.traces.dropped)}
+        for status, count in s.terminal.items():
+            out[f"engine_terminal_status_total{{status={status}}}"] = \
+                float(count)
+        return out
 
     # -------------------------------------------------------------- internals
     def _any_live(self) -> bool:
@@ -507,15 +572,26 @@ class WaveEngine:
         reg = self.dqf.tenants
         free = [i for i, m in enumerate(self._lane_meta) if m is None]
         reqs = []
+        now = self._clock()
         while self.queue and len(reqs) < len(free):
             r = self.queue.popleft()
             name, gen = r[3], r[4]
-            if name in reg and reg.get(name).gen == gen:
+            if name not in reg or reg.get(name).gen != gen:
+                # dead request: drop, keep popping so live ones behind it
+                # still fill this wave's free lanes
+                self._results[r[0]] = self._terminal_result(
+                    name, QueryStatus.DROPPED)
+                self.stats.dropped += 1
+                self.stats.note_terminal(QueryStatus.DROPPED)
+            elif r[5] is not None and now >= r[5]:
+                # expired while queued: terminate empty, never seed a lane
+                self._results[r[0]] = self._terminal_result(
+                    name, QueryStatus.DEADLINE)
+                self.stats.deadline_hit += 1
+                self.stats.note_terminal(QueryStatus.DEADLINE)
+            else:
                 reqs.append(r)
-            else:                     # dead request: drop, keep popping so
-                self._results[r[0]] = self._dropped_result(name)
-                self.stats.dropped += 1       # live ones behind it still
-        if not reqs:                          # fill this wave's free lanes
+        if not reqs:
             return
         lanes = free[:len(reqs)]
         q = jnp.asarray(np.stack([r[1] for r in reqs]))
@@ -541,7 +617,7 @@ class WaveEngine:
             hot_dist = np.asarray(hot_stats.dist_count)
         cache = (self.dqf.store.full_phase_cache()
                  if self.dqf.store.tiered else None)
-        t_seed = time.perf_counter()
+        t_seed = self._clock()
         # splice the new lanes into the wave state device-side: only the
         # refilled rows move, live lanes never roundtrip through the host
         self._state = _splice_lanes(
@@ -553,7 +629,9 @@ class WaveEngine:
             self._evals[lane] = 0
             rid, t_in = reqs[j][0], reqs[j][2]
             self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
-                                     reqs[j][4])
+                                     reqs[j][4], reqs[j][5])
+            self._lane_status[lane] = None
+            self._lane_degraded[lane] = False
             wait_ms = (t_seed - t_in) * 1e3
             self.stats.queue_wait_ms.append(wait_ms)
             if self.registry is not None:
@@ -571,12 +649,14 @@ class WaveEngine:
                 self._lane_trace[lane] = None
         self._update_table()
 
-    def _dropped_result(self, tenant: str) -> dict:
-        """Empty result for a request whose tenant vanished in the queue."""
+    def _terminal_result(self, tenant: str, status: QueryStatus) -> dict:
+        """Empty result for a request that never reached a lane
+        (tenant vanished / shed at admission / expired while queued)."""
         k = self.cfg.k
         return {"ids": np.full(k, self.dqf.store.capacity, np.int32),
                 "dists": np.full(k, np.inf, np.float32),
-                "hops": 0, "tenant": tenant, "dropped": True}
+                "hops": 0, "tenant": tenant, "degraded": False,
+                "status": status.value}
 
     def _retire_batch(self, pool_ids: np.ndarray, pool_dists: np.ndarray,
                       queries: np.ndarray):
@@ -597,6 +677,8 @@ class WaveEngine:
         if not st.tiered:
             return
         cache = st.full_phase_cache()
+        for c in st.tier_caches():      # stale rows from out-of-band
+            c.take_degraded_rows()      # searches don't map to lanes
         live = [i for i, m in enumerate(self._lane_meta) if m is not None]
         if live:
             ids = np.asarray(self._state.pool.ids)[live]
@@ -659,8 +741,30 @@ class WaveEngine:
             self._state = state
             self._evals = np.array(evals)  # writable copy (refill mutates)
             self.stats.ticks += 1
-            active = np.asarray(state.active)
-            now = time.perf_counter()
+            active = np.array(state.active)   # writable: deadlines clear it
+            now = self._clock()
+            # degraded tier reads: the tick's host fetches record the batch
+            # rows (== wave lanes here) whose blocks exhausted retries —
+            # mark those lanes so their results carry degraded=True
+            if self.dqf.store.tiered:
+                for c in self.dqf.store.tier_caches():
+                    for row in c.take_degraded_rows():
+                        if row < self.wave \
+                                and self._lane_meta[row] is not None:
+                            self._lane_degraded[row] = True
+            # per-query deadlines: lanes past deadline are force-expired
+            # and retire this tick with their current best-k
+            expired = [lane for lane, meta in enumerate(self._lane_meta)
+                       if meta is not None and active[lane]
+                       and meta[5] is not None and now >= meta[5]]
+            if expired:
+                idx = jnp.asarray(np.asarray(expired, np.int32))
+                state = state._replace(
+                    active=state.active.at[idx].set(False))
+                self._state = state
+                active[expired] = False
+                for lane in expired:
+                    self._lane_status[lane] = QueryStatus.DEADLINE
             retiring = [lane for lane, meta in enumerate(self._lane_meta)
                         if meta is not None and not active[lane]]
             with tl.span("tick.retire", retiring=len(retiring)):
@@ -705,12 +809,22 @@ class WaveEngine:
         cache = (self.dqf.store.full_phase_cache()
                  if self.dqf.store.tiered else None)
         for j, lane in enumerate(retiring):
-            rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
+            rid, t_in, t_seed, tenant, gen, _ = self._lane_meta[lane]
             ids, dists = batch_ids[j], batch_dists[j]
             hops = int(hops_all[lane])
+            degraded = self._lane_degraded[lane]
+            status = self._lane_status[lane] or (
+                QueryStatus.DEGRADED if degraded else QueryStatus.OK)
             self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
-                                  "tenant": tenant}
+                                  "tenant": tenant,
+                                  "degraded": bool(degraded),
+                                  "status": status.value}
             self.stats.completed += 1
+            self.stats.note_terminal(status)
+            if status is QueryStatus.DEADLINE:
+                self.stats.deadline_hit += 1
+            if degraded:
+                self.stats.degraded += 1
             self.stats.total_hops += hops
             straggled = hops >= self.cfg.max_hops
             if straggled:
@@ -740,6 +854,8 @@ class WaveEngine:
                 self.traces.add(tr)
                 self._lane_trace[lane] = None
             self._lane_meta[lane] = None
+            self._lane_status[lane] = None
+            self._lane_degraded[lane] = False
             # Preference feedback: the retiring lane's results feed its
             # tenant's counter, and a due Alg-2 clock rebuilds that
             # tenant's hot index (safe mid-wave: hot tables are only read

@@ -26,7 +26,9 @@ paged attention restructures ragged KV (:mod:`repro.serving.paged`):
 
 Occupancy (``engine_occupancy_ratio`` = live lanes / lane capacity) is
 published through the same :mod:`repro.obs` registry as the fixed
-engine, under the collector key ``"paged_engine"``.
+engine, under the same collector key ``"engine"`` (the two
+engine kinds publish the same series, so whichever engine was built
+last owns the scrape surface — stale twins are replaced, never merged).
 """
 
 from __future__ import annotations
@@ -49,6 +51,7 @@ from repro.obs import (ObsConfig, PerfSentinel, Timeline, TraceLog,
                        device_annotation, sample_decision)
 from repro.serving import paged as pg
 from repro.serving.engine import LATENCY_WINDOW, EngineStats, retire_batch
+from repro.serving.status import EngineConfig, QueryStatus, shed_victim
 from repro.tenancy import DEFAULT_TENANT
 
 __all__ = ["PagedWaveEngine"]
@@ -68,7 +71,8 @@ class PagedWaveEngine:
                  min_bucket: int = pg.MIN_BUCKET,
                  latency_window: int = LATENCY_WINDOW,
                  auto_compact: bool = True, compact_ratio: float = 0.3,
-                 prefetch: bool = True, obs: Optional[ObsConfig] = None):
+                 prefetch: bool = True, obs: Optional[ObsConfig] = None,
+                 engine_cfg: Optional[EngineConfig] = None, clock=None):
         if min_bucket < 1 or (min_bucket & (min_bucket - 1)):
             raise ValueError("min_bucket must be a power of two")
         self.dqf = dqf
@@ -80,6 +84,10 @@ class PagedWaveEngine:
         self.auto_compact = auto_compact
         self.compact_ratio = compact_ratio
         self.prefetch = prefetch
+        self.engine_cfg = engine_cfg if engine_cfg is not None \
+            else EngineConfig()
+        self._clock = clock if clock is not None else time.perf_counter
+        self._shed_scale = 1.0      # tightened by AdmissionController
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats(
             latencies_ms=collections.deque(maxlen=latency_window),
@@ -109,7 +117,7 @@ class PagedWaveEngine:
             self._g_tick_hit = r.gauge(
                 "tier_tick_hit_rate",
                 "block-cache hit rate over the last tick window")
-            r.register_callback("paged_engine", self._collect_metrics)
+            r.register_callback("engine", self._collect_metrics)
         self._fused = bool(self.cfg.fused) and not dqf.store.tiered
         dqf._sync_device()
         self._d = dqf.store.d
@@ -140,6 +148,8 @@ class PagedWaveEngine:
                 self, capture_ticks=self.obs.capture_ticks,
                 bundle_dir=self.obs.capture_dir)
         self._lane_meta = [None] * self.capacity
+        self._lane_status: list = [None] * self.capacity
+        self._lane_degraded = [False] * self.capacity
         self._results: dict = {}
         self._state: Optional[pg.PagedState] = None
         self._queries = np.zeros((self.capacity + 1, self._d), np.float32)
@@ -223,9 +233,13 @@ class PagedWaveEngine:
         return jax.jit(tick)
 
     # ---------------------------------------------------------------- public
-    def submit(self, queries: np.ndarray, *,
-               tenant: str = DEFAULT_TENANT) -> list:
-        """Enqueue queries for one tenant; returns their request ids."""
+    def submit(self, queries: np.ndarray, *, tenant: str = DEFAULT_TENANT,
+               deadline_ms: Optional[float] = None) -> list:
+        """Enqueue queries for one tenant; returns their request ids.
+
+        Deadline / bounded-admission semantics are identical to
+        :meth:`WaveEngine.submit` (one shared status vocabulary).
+        """
         t = self.dqf.tenants.get(tenant)       # unknown tenant → KeyError
         if t.hot is None:
             raise RuntimeError(
@@ -236,13 +250,35 @@ class PagedWaveEngine:
             raise ValueError(
                 f"queries must be (B, {self._d}) for this index, got "
                 f"{queries.shape}")
+        if deadline_ms is None:
+            deadline_ms = self.engine_cfg.default_deadline_ms
+        now = self._clock()
+        deadline = now + deadline_ms / 1e3 if deadline_ms is not None \
+            else None
         ids = []
         for q in queries:
             rid = self._next_rid
             self._next_rid += 1
-            self.queue.append((rid, q, time.perf_counter(), t.name, t.gen))
+            entry = (rid, q, now, t.name, t.gen, deadline)
+            limit = self.effective_max_queue()
+            if limit is not None and len(self.queue) >= limit:
+                victim = shed_victim(self.queue, entry,
+                                     self.engine_cfg.shed_policy)
+                self._results[victim[0]] = self._terminal_result(
+                    victim[3], QueryStatus.SHED)
+                self.stats.shed += 1
+                self.stats.note_terminal(QueryStatus.SHED)
+            else:
+                self.queue.append(entry)
             ids.append(rid)
         return ids
+
+    def effective_max_queue(self) -> Optional[int]:
+        """Admission limit after SLO tightening (None = unbounded)."""
+        mq = self.engine_cfg.max_queue
+        if mq is None:
+            return None
+        return max(1, int(mq * self._shed_scale))
 
     def step(self) -> None:
         """Advance one tick; seeds lanes from the queue on first use."""
@@ -251,7 +287,7 @@ class PagedWaveEngine:
         self._tick()
 
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
-        t0 = time.perf_counter()
+        t0 = self._clock()
         if self._state is None or not self._any_live():
             self._init_wave()
         else:
@@ -261,7 +297,7 @@ class PagedWaveEngine:
             self._tick()
         if self._draining and not self._any_live():
             self._do_compact()
-        wall = time.perf_counter() - t0
+        wall = self._clock() - t0
         return {"results": self._results, "wall_s": wall,
                 "qps": self.stats.qps(wall), "p99_ms": self.stats.p99_ms(),
                 "queue_wait_p99_ms": self.stats.queue_wait_p99_ms(),
@@ -281,20 +317,30 @@ class PagedWaveEngine:
         return debug_bundle(self, out_dir, reason=reason)
 
     def _collect_metrics(self) -> dict:
-        """Registry scrape-time collector (keyed ``"paged_engine"``)."""
+        """Registry scrape-time collector (keyed ``"engine"``)."""
         s = self.stats
-        return {"engine_completed_total": float(s.completed),
-                "engine_straggled_total": float(s.straggled),
-                "engine_dropped_total": float(s.dropped),
-                "engine_ticks_total": float(s.ticks),
-                "engine_hops_total": float(s.total_hops),
-                "engine_compactions_total": float(s.compactions),
-                "engine_queue_depth": float(len(self.queue)),
-                "engine_live_lanes": float(self.pagepool.live_count),
-                "engine_lane_capacity": float(self.capacity),
-                "engine_occupancy_ratio": self.pagepool.occupancy(),
-                "engine_traces_recorded": float(self.traces.total),
-                "engine_traces_dropped": float(self.traces.dropped)}
+        limit = self.effective_max_queue()
+        out = {"engine_completed_total": float(s.completed),
+               "engine_straggled_total": float(s.straggled),
+               "engine_dropped_total": float(s.dropped),
+               "engine_shed_total": float(s.shed),
+               "engine_deadline_total": float(s.deadline_hit),
+               "engine_degraded_total": float(s.degraded),
+               "engine_admission_limit": float(limit if limit is not None
+                                               else -1),
+               "engine_ticks_total": float(s.ticks),
+               "engine_hops_total": float(s.total_hops),
+               "engine_compactions_total": float(s.compactions),
+               "engine_queue_depth": float(len(self.queue)),
+               "engine_live_lanes": float(self.pagepool.live_count),
+               "engine_lane_capacity": float(self.capacity),
+               "engine_occupancy_ratio": self.pagepool.occupancy(),
+               "engine_traces_recorded": float(self.traces.total),
+               "engine_traces_dropped": float(self.traces.dropped)}
+        for status, count in s.terminal.items():
+            out[f"engine_terminal_status_total{{status={status}}}"] = \
+                float(count)
+        return out
 
     # -------------------------------------------------------------- internals
     def _any_live(self) -> bool:
@@ -403,19 +449,33 @@ class PagedWaveEngine:
         reg = self.dqf.tenants
         free = self.pagepool.free_lane_count
         reqs = []
+        now = self._clock()
         while self.queue and len(reqs) < free:
             r = self.queue.popleft()
             name, gen = r[3], r[4]
-            if name in reg and reg.get(name).gen == gen:
-                reqs.append(r)
-            else:
-                self._results[r[0]] = self._dropped_result(name)
+            if name not in reg or reg.get(name).gen != gen:
+                self._results[r[0]] = self._terminal_result(
+                    name, QueryStatus.DROPPED)
                 self.stats.dropped += 1
+                self.stats.note_terminal(QueryStatus.DROPPED)
+            elif r[5] is not None and now >= r[5]:
+                self._results[r[0]] = self._terminal_result(
+                    name, QueryStatus.DEADLINE)
+                self.stats.deadline_hit += 1
+                self.stats.note_terminal(QueryStatus.DEADLINE)
+            else:
+                reqs.append(r)
         if not reqs:
             return
         m = len(reqs)
         mp = pg.bucket_width(m, self.capacity, self.min_bucket)
-        lanes = self.pagepool.alloc(m)
+        try:
+            lanes = self.pagepool.alloc(m)
+        except pg.PageAllocDenied:
+            # transient injected denial: requeue in arrival order and try
+            # again next tick — the requests stay live, never lost
+            self.queue.extendleft(reversed(reqs))
+            return
         lanes_pad = np.full(mp, self.capacity, np.int32)
         lanes_pad[:m] = lanes
         pt_pad = self.pagepool.page_table[lanes_pad]
@@ -448,13 +508,15 @@ class PagedWaveEngine:
         if any(sampled):
             hot_hops = np.asarray(hot_stats.hops)
             hot_dist = np.asarray(hot_stats.dist_count)
-        t_seed = time.perf_counter()
+        t_seed = self._clock()
         for j, lane in enumerate(lanes):
             lane = int(lane)
             self._queries[lane] = reqs[j][1]
             rid, t_in = reqs[j][0], reqs[j][2]
             self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
-                                     reqs[j][4])
+                                     reqs[j][4], reqs[j][5])
+            self._lane_status[lane] = None
+            self._lane_degraded[lane] = False
             wait_ms = (t_seed - t_in) * 1e3
             self.stats.queue_wait_ms.append(wait_ms)
             if self.registry is not None:
@@ -470,11 +532,12 @@ class PagedWaveEngine:
                 self._lane_trace[lane] = None
         self._table_key = None
 
-    def _dropped_result(self, tenant: str) -> dict:
+    def _terminal_result(self, tenant: str, status: QueryStatus) -> dict:
         k = self.cfg.k
         return {"ids": np.full(k, self.dqf.store.capacity, np.int32),
                 "dists": np.full(k, np.inf, np.float32),
-                "hops": 0, "tenant": tenant, "dropped": True}
+                "hops": 0, "tenant": tenant, "degraded": False,
+                "status": status.value}
 
     def _tier_begin_tick(self):
         """Tier housekeeping: pins follow the allocator's pages.
@@ -489,6 +552,8 @@ class PagedWaveEngine:
         if not st.tiered:
             return
         cache = st.full_phase_cache()
+        for c in st.tier_caches():      # stale rows from out-of-band
+            c.take_degraded_rows()      # searches don't map to lanes
         live = self.pagepool.live_lanes()
         if live.size:
             live_d = jnp.asarray(live)
@@ -556,8 +621,31 @@ class PagedWaveEngine:
                         if tl.enabled:  # make the span cover device time
                             jax.block_until_ready(self._state)
                 self.stats.ticks += 1
-                active = np.asarray(act)
-                now = time.perf_counter()
+                active = np.array(act)  # writable: deadlines clear it
+                now = self._clock()
+                # degraded tier reads: host-fetch batch rows are bucket
+                # rows here — map them through lanes_np to lane slots
+                if self.dqf.store.tiered:
+                    for c in self.dqf.store.tier_caches():
+                        for row in c.take_degraded_rows():
+                            if row < n_live and self._lane_meta[
+                                    lanes_np[row]] is not None:
+                                self._lane_degraded[lanes_np[row]] = True
+                # per-query deadlines: force-expire overdue bucket rows so
+                # they retire this tick with their current best-k
+                expired = [j for j in range(n_live)
+                           if active[j]
+                           and self._lane_meta[lanes_np[j]] is not None
+                           and self._lane_meta[lanes_np[j]][5] is not None
+                           and now >= self._lane_meta[lanes_np[j]][5]]
+                if expired:
+                    lanes_x = lanes_np[expired]
+                    self._state = self._state._replace(
+                        active=self._state.active.at[
+                            jnp.asarray(lanes_x)].set(False))
+                    active[expired] = False
+                    for lane in lanes_x:
+                        self._lane_status[int(lane)] = QueryStatus.DEADLINE
                 retiring = [j for j in range(n_live) if not active[j]
                             and self._lane_meta[lanes_np[j]] is not None]
                 if retiring:
@@ -595,12 +683,22 @@ class PagedWaveEngine:
             term_all = np.asarray(self._state.terminated)
         for i, j in enumerate(retiring):
             lane = rl[i]
-            rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
+            rid, t_in, t_seed, tenant, gen, _ = self._lane_meta[lane]
             ids, dists = batch_ids[i], batch_dists[i]
             hops = int(hops_b[j])
+            degraded = self._lane_degraded[lane]
+            status = self._lane_status[lane] or (
+                QueryStatus.DEGRADED if degraded else QueryStatus.OK)
             self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
-                                  "tenant": tenant}
+                                  "tenant": tenant,
+                                  "degraded": bool(degraded),
+                                  "status": status.value}
             self.stats.completed += 1
+            self.stats.note_terminal(status)
+            if status is QueryStatus.DEADLINE:
+                self.stats.deadline_hit += 1
+            if degraded:
+                self.stats.degraded += 1
             self.stats.total_hops += hops
             straggled = hops >= self.cfg.max_hops
             if straggled:
@@ -626,6 +724,8 @@ class PagedWaveEngine:
                 self.traces.add(tr)
                 self._lane_trace[lane] = None
             self._lane_meta[lane] = None
+            self._lane_status[lane] = None
+            self._lane_degraded[lane] = False
             if tenant in self.dqf.tenants \
                     and self.dqf.tenants.get(tenant).gen == gen:
                 self.dqf.record(ids[None, :], tenant=tenant)

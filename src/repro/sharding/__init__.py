@@ -10,9 +10,10 @@ continuous-batching wave server over it.  See
 """
 
 from .engine import ShardedEngine
+from .health import ShardHealth
 from .merge import merge_topk, merge_topk_host
 from .sharded import ShardedDQF
 from .types import ShardConfig
 
-__all__ = ["ShardConfig", "ShardedDQF", "ShardedEngine",
+__all__ = ["ShardConfig", "ShardedDQF", "ShardedEngine", "ShardHealth",
            "merge_topk", "merge_topk_host"]

@@ -53,9 +53,11 @@ from repro.obs import (ObsConfig, PerfSentinel, Timeline, TraceLog,
                        sample_decision)
 from repro.serving import paged as pg
 from repro.serving.engine import LATENCY_WINDOW, EngineStats
+from repro.serving.status import EngineConfig, QueryStatus, shed_victim
 from repro.tenancy import DEFAULT_TENANT
 from repro.tenancy.registry import _PAD_VALUE
 
+from .health import ShardHealth
 from .merge import merge_topk
 from .sharded import ShardedDQF
 
@@ -72,7 +74,8 @@ class ShardedEngine:
                  paged: bool = False,
                  page_cols: int = pg.DEFAULT_PAGE_COLS,
                  min_bucket: int = pg.MIN_BUCKET,
-                 obs: Optional[ObsConfig] = None):
+                 obs: Optional[ObsConfig] = None,
+                 engine_cfg: Optional[EngineConfig] = None, clock=None):
         sharded._require()
         if not sharded._stacked_ok:
             raise ValueError(
@@ -95,6 +98,10 @@ class ShardedEngine:
         self.page_cols = int(page_cols)
         self.min_bucket = int(min_bucket)
         self.pagepool = None            # built after the stacked sync
+        self.engine_cfg = engine_cfg if engine_cfg is not None \
+            else EngineConfig()
+        self._clock = clock if clock is not None else time.perf_counter
+        self._shed_scale = 1.0      # tightened by AdmissionController
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats(
             latencies_ms=collections.deque(maxlen=latency_window),
@@ -111,6 +118,18 @@ class ShardedEngine:
         self._trace_rate = float(self.obs.trace_rate) if obs_on else 0.0
         self._trace_seed = int(self.obs.trace_seed)
         self._lane_trace: list = [None] * wave_size
+        # Robustness (chaos ISSUE): chaos is armed by install_chaos; the
+        # health tracker quarantines shards after consecutive failures and
+        # the tick routes the merge around them (merge_with_dropout
+        # renormalization contract — results over responding shards).
+        self.chaos = None
+        self.health = ShardHealth(
+            self.S, quarantine_after=self.engine_cfg.quarantine_after,
+            recover_after=self.engine_cfg.recover_after,
+            registry=self.registry)
+        self._last_responding = self.S
+        self._lane_status: list = [None] * wave_size
+        self._lane_degraded = [False] * wave_size
         self._d = sharded.shards[0].dqf.store.d
         self._stk = sharded._sync_stacked()
         self._cap = sharded._stk_cap
@@ -212,12 +231,19 @@ class ShardedEngine:
 
         vtick = jax.vmap(shard_tick, in_axes=(0, 0, 0, 0, None, None))
 
-        def fn(ps, x_pad, adj_pad, live_pad, gid_pad, lanes, pt):
+        def fn(ps, x_pad, adj_pad, live_pad, gid_pad, lanes, pt,
+               shard_live, shard_merge):
             ps, (act, ids, dists, hops) = vtick(ps, x_pad, adj_pad,
                                                 live_pad, lanes, pt)
+            # quarantined shards freeze (their lanes stop burning hops)
+            # and failed/stalled shards miss this tick's merge; with every
+            # shard healthy both masks are all-True and the maskings are
+            # bit-identical no-ops
+            ps = ps._replace(active=ps.active & shard_live[:, None])
+            act = act & shard_live[:, None]
             g = jax.vmap(lambda g_, i_: g_[i_])(gid_pad, ids)
             alive = jax.vmap(lambda l_, i_: l_[i_])(live_pad, ids)
-            bad = (g < 0) | ~alive
+            bad = (g < 0) | ~alive | ~shard_merge[:, None, None]
             d = jnp.where(bad, INF_DIST, dists)
             g = jnp.where(bad, -1, g)
             m_ids, m_dists = merge_topk(d, g, self.cfg.k)
@@ -281,9 +307,13 @@ class ShardedEngine:
                          in_axes=(0, 0, 0, 0, None, 0, 0, 0))
 
         def fn(state, x_pad, adj_pad, live_pad, gid_pad, queries,
-               hot_first, hot_ratio, evals):
+               hot_first, hot_ratio, evals, shard_live, shard_merge):
             state, evals = vtick(state, x_pad, adj_pad, live_pad, queries,
                                  hot_first, hot_ratio, evals)
+            # quarantined shards freeze and failed/stalled shards miss
+            # this tick's merge (all-True masks = bit-identical no-ops)
+            state = state._replace(
+                active=state.active & shard_live[:, None])
             # cross-shard merge of the FULL wave (S, W, L) → (W, k): gid
             # gather maps per-shard rows to global ids, the stacked live
             # table drops rows tombstoned mid-flight, and invalid slots
@@ -291,7 +321,7 @@ class ShardedEngine:
             ids = state.pool.ids
             g = jax.vmap(lambda g_, i_: g_[i_])(gid_pad, ids)
             alive = jax.vmap(lambda l_, i_: l_[i_])(live_pad, ids)
-            bad = (g < 0) | ~alive
+            bad = (g < 0) | ~alive | ~shard_merge[:, None, None]
             d = jnp.where(bad, INF_DIST, state.pool.dists)
             g = jnp.where(bad, -1, g)
             m_ids, m_dists = merge_topk(d, g, self.cfg.k)
@@ -300,9 +330,15 @@ class ShardedEngine:
         return jax.jit(fn)
 
     # ---------------------------------------------------------------- public
-    def submit(self, queries: np.ndarray, *,
-               tenant: str = DEFAULT_TENANT) -> list:
-        """Enqueue queries for one tenant; returns their request ids."""
+    def submit(self, queries: np.ndarray, *, tenant: str = DEFAULT_TENANT,
+               deadline_ms: Optional[float] = None) -> list:
+        """Enqueue queries for one tenant; returns their request ids.
+
+        Same degradation contract as :meth:`WaveEngine.submit`:
+        ``deadline_ms`` bounds end-to-end time (``status="deadline"``),
+        and a bounded queue (``engine_cfg.max_queue``) sheds per
+        ``shed_policy`` (``status="shed"``).
+        """
         for sh in self.sharded.shards:
             t = sh.dqf.tenants.get(tenant)      # unknown → KeyError
             if t.hot is None:
@@ -314,23 +350,45 @@ class ShardedEngine:
         if queries.ndim != 2 or queries.shape[1] != self._d:
             raise ValueError(
                 f"queries must be (B, {self._d}), got {queries.shape}")
+        if deadline_ms is None:
+            deadline_ms = self.engine_cfg.default_deadline_ms
+        now = self._clock()
+        deadline = now + deadline_ms / 1e3 if deadline_ms is not None \
+            else None
         ids = []
         for q in queries:
             rid = self._next_rid
             self._next_rid += 1
-            self.queue.append((rid, q, time.perf_counter(), tenant, gen))
+            entry = (rid, q, now, tenant, gen, deadline)
+            limit = self.effective_max_queue()
+            if limit is not None and len(self.queue) >= limit:
+                victim = shed_victim(self.queue, entry,
+                                     self.engine_cfg.shed_policy)
+                self._results[victim[0]] = self._terminal_result(
+                    victim[3], QueryStatus.SHED)
+                self.stats.shed += 1
+                self.stats.note_terminal(QueryStatus.SHED)
+            else:
+                self.queue.append(entry)
             ids.append(rid)
         return ids
 
+    def effective_max_queue(self) -> Optional[int]:
+        """Admission limit after SLO tightening (None = unbounded)."""
+        mq = self.engine_cfg.max_queue
+        if mq is None:
+            return None
+        return max(1, int(mq * self._shed_scale))
+
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
-        t0 = time.perf_counter()
+        t0 = self._clock()
         self._init_wave()
         while (self.queue or self._any_live()) \
                 and self.stats.ticks < max_ticks:
             self._tick()
         if self._draining and not self._any_live():
             self._do_compact()
-        wall = time.perf_counter() - t0
+        wall = self._clock() - t0
         return {"results": self._results, "wall_s": wall,
                 "qps": self.stats.qps(wall), "p99_ms": self.stats.p99_ms(),
                 "queue_wait_p99_ms": self.stats.queue_wait_p99_ms(),
@@ -353,17 +411,59 @@ class ShardedEngine:
         s = self.stats
         live = (self.pagepool.live_count if self.paged
                 else sum(m is not None for m in self._lane_meta))
-        return {"sharded_engine_completed_total": float(s.completed),
-                "sharded_engine_straggled_total": float(s.straggled),
-                "sharded_engine_dropped_total": float(s.dropped),
-                "sharded_engine_ticks_total": float(s.ticks),
-                "sharded_engine_compactions_total": float(s.compactions),
-                "sharded_engine_queue_depth": float(len(self.queue)),
-                "sharded_engine_live_lanes": float(live),
-                "sharded_engine_wave_size": float(self.wave),
-                "sharded_engine_occupancy_ratio": live / float(self.wave),
-                "sharded_engine_traces_recorded": float(self.traces.total),
-                "sharded_engine_traces_dropped": float(self.traces.dropped)}
+        limit = self.effective_max_queue()
+        out = {"sharded_engine_completed_total": float(s.completed),
+               "sharded_engine_straggled_total": float(s.straggled),
+               "sharded_engine_dropped_total": float(s.dropped),
+               "sharded_engine_shed_total": float(s.shed),
+               "sharded_engine_deadline_total": float(s.deadline_hit),
+               "sharded_engine_degraded_total": float(s.degraded),
+               "sharded_engine_admission_limit": float(
+                   limit if limit is not None else -1),
+               "sharded_engine_shards_responding": float(
+                   self._last_responding),
+               "sharded_engine_ticks_total": float(s.ticks),
+               "sharded_engine_compactions_total": float(s.compactions),
+               "sharded_engine_queue_depth": float(len(self.queue)),
+               "sharded_engine_live_lanes": float(live),
+               "sharded_engine_wave_size": float(self.wave),
+               "sharded_engine_occupancy_ratio": live / float(self.wave),
+               "sharded_engine_traces_recorded": float(self.traces.total),
+               "sharded_engine_traces_dropped": float(self.traces.dropped)}
+        for status, count in s.terminal.items():
+            out["sharded_engine_terminal_status_total"
+                f"{{status={status}}}"] = float(count)
+        return out
+
+    def _shard_masks(self):
+        """Per-tick ``(live, merge)`` shard masks from chaos + health.
+
+        Consults the armed fault plan for this tick's shard events, folds
+        them into the quarantine state machine, and probes quarantined
+        shards for re-admission (a plan-free engine probes clean, so a
+        quarantined shard recovers after ``recover_after`` ticks once the
+        fault source is gone).  With no chaos and nothing quarantined the
+        fast path returns all-True without touching the state machine.
+        """
+        if self.chaos is None and not self.health.quarantined.any():
+            self._last_responding = self.S
+            live = np.ones(self.S, bool)
+            return live, live
+        tick = self.stats.ticks
+        events = {}
+        if self.chaos is not None:
+            for s in range(self.S):
+                if not self.health.quarantined[s]:
+                    ev = self.chaos.shard_event(s, tick)
+                    if ev is not None:
+                        events[s] = ev
+        live, merge = self.health.observe(events)
+        for s in np.flatnonzero(self.health.quarantined):
+            ok = (self.chaos.shard_ok(int(s), tick)
+                  if self.chaos is not None else True)
+            self.health.probe(int(s), ok)
+        self._last_responding = self.health.responding(merge)
+        return live, merge
 
     # -------------------------------------------------------------- internals
     def _any_live(self) -> bool:
@@ -594,19 +694,33 @@ class ShardedEngine:
         reg0 = self.sharded.shards[0].dqf.tenants
         free = self.pagepool.free_lane_count
         reqs = []
+        now = self._clock()
         while self.queue and len(reqs) < free:
             r = self.queue.popleft()
             name, gen = r[3], r[4]
-            if name in reg0 and reg0.get(name).gen == gen:
-                reqs.append(r)
-            else:
-                self._results[r[0]] = self._dropped_result(name)
+            if name not in reg0 or reg0.get(name).gen != gen:
+                self._results[r[0]] = self._terminal_result(
+                    name, QueryStatus.DROPPED)
                 self.stats.dropped += 1
+                self.stats.note_terminal(QueryStatus.DROPPED)
+            elif r[5] is not None and now >= r[5]:
+                # expired while queued: terminate empty, never seed a lane
+                self._results[r[0]] = self._terminal_result(
+                    name, QueryStatus.DEADLINE)
+                self.stats.deadline_hit += 1
+                self.stats.note_terminal(QueryStatus.DEADLINE)
+            else:
+                reqs.append(r)
         if not reqs:
             return
         m = len(reqs)
         mp = pg.bucket_width(m, self.wave, self.min_bucket)
-        lanes = self.pagepool.alloc(m)
+        try:
+            lanes = self.pagepool.alloc(m)
+        except pg.PageAllocDenied:
+            # injected denial: requeue in arrival order, retry next tick
+            self.queue.extendleft(reversed(reqs))
+            return
         lanes_pad = np.full(mp, self.wave, np.int32)
         lanes_pad[:m] = lanes
         pt_pad = self.pagepool.page_table[lanes_pad]
@@ -629,12 +743,14 @@ class ShardedEngine:
             self._state, xs, adjs, ents, mask, hids, jnp.asarray(tidx),
             self._stk["live_pad"], jnp.asarray(lanes_pad),
             jnp.asarray(pt_pad), jnp.asarray(qs), jnp.asarray(admit_mask))
-        t_seed = time.perf_counter()
+        t_seed = self._clock()
         for j, lane in enumerate(lanes):
             lane = int(lane)
             rid, t_in = reqs[j][0], reqs[j][2]
             self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
-                                     reqs[j][4])
+                                     reqs[j][4], reqs[j][5])
+            self._lane_status[lane] = None
+            self._lane_degraded[lane] = False
             self.stats.queue_wait_ms.append((t_seed - t_in) * 1e3)
             self._lane_trace[lane] = self._trace_begin(rid, reqs[j][3])
 
@@ -664,14 +780,22 @@ class ShardedEngine:
         reg0 = self.sharded.shards[0].dqf.tenants
         free = [i for i, m in enumerate(self._lane_meta) if m is None]
         reqs = []
+        now = self._clock()
         while self.queue and len(reqs) < len(free):
             r = self.queue.popleft()
             name, gen = r[3], r[4]
-            if name in reg0 and reg0.get(name).gen == gen:
-                reqs.append(r)
-            else:
-                self._results[r[0]] = self._dropped_result(name)
+            if name not in reg0 or reg0.get(name).gen != gen:
+                self._results[r[0]] = self._terminal_result(
+                    name, QueryStatus.DROPPED)
                 self.stats.dropped += 1
+                self.stats.note_terminal(QueryStatus.DROPPED)
+            elif r[5] is not None and now >= r[5]:
+                self._results[r[0]] = self._terminal_result(
+                    name, QueryStatus.DEADLINE)
+                self.stats.deadline_hit += 1
+                self.stats.note_terminal(QueryStatus.DEADLINE)
+            else:
+                reqs.append(r)
         if not reqs:
             return
         if self._seed_fn is None or self._seed_cap != self._cap:
@@ -683,7 +807,7 @@ class ShardedEngine:
         xs, adjs, ents, mask, hids = self._hot_stacks()
         lanes = free[:len(reqs)]
         refill = np.zeros(self.wave, bool)
-        t_seed = time.perf_counter()
+        t_seed = self._clock()
         for j, lane in enumerate(lanes):
             refill[lane] = True
             self._queries[lane] = reqs[j][1]
@@ -691,7 +815,9 @@ class ShardedEngine:
                 self._tidx[s, lane] = sh.dqf.tenants.slot_of(reqs[j][3])
             rid, t_in = reqs[j][0], reqs[j][2]
             self._lane_meta[lane] = (rid, t_in, t_seed, reqs[j][3],
-                                     reqs[j][4])
+                                     reqs[j][4], reqs[j][5])
+            self._lane_status[lane] = None
+            self._lane_degraded[lane] = False
             self.stats.queue_wait_ms.append((t_seed - t_in) * 1e3)
             self._lane_trace[lane] = self._trace_begin(rid, reqs[j][3])
         (self._state, self._evals, self._hot_first,
@@ -701,11 +827,14 @@ class ShardedEngine:
             self._stk["live_pad"], jnp.asarray(self._queries),
             jnp.asarray(refill))
 
-    def _dropped_result(self, tenant: str) -> dict:
+    def _terminal_result(self, tenant: str, status: QueryStatus) -> dict:
+        """Empty result for a request that never reached a lane
+        (tenant vanished / shed at admission / expired while queued)."""
         k = self.cfg.k
         return {"ids": np.full(k, -1, np.int64),
                 "dists": np.full(k, np.inf, np.float32),
-                "hops": 0, "tenant": tenant, "dropped": True}
+                "hops": 0, "tenant": tenant, "degraded": False,
+                "status": status.value, "shards_responding": 0}
 
     def _do_compact(self):
         """Drained compaction (and Quake-style rebalance) at a safe tick
@@ -729,20 +858,35 @@ class ShardedEngine:
             return self._tick_paged()
         tl = self.timeline
         with tl.span("tick", tick=self.stats.ticks):
+            live_m, merge_m = self._shard_masks()
             with tl.span("tick.jit", hops=self.tick_hops, shards=self.S):
                 state, evals, m_ids, m_dists = self._tick_fn(
                     self._state, self._stk["x_pad"], self._stk["adj_pad"],
                     self._stk["live_pad"], self._stk["gid_pad"],
                     jnp.asarray(self._queries), self._hot_first,
-                    self._hot_ratio, self._evals)
+                    self._hot_ratio, self._evals,
+                    jnp.asarray(live_m), jnp.asarray(merge_m))
                 if tl.enabled:          # make the span cover device time
                     jax.block_until_ready(state)
             self._state = state
             self._evals = evals
             self.stats.ticks += 1
             active = np.asarray(state.active)           # (S, W)
-            lane_live = active.any(axis=0)
-            now = time.perf_counter()
+            lane_live = np.array(active.any(axis=0))    # writable
+            now = self._clock()
+            # per-query deadlines: lanes past deadline are force-expired
+            # and retire this tick with their current best-k
+            expired = [lane for lane, meta in enumerate(self._lane_meta)
+                       if meta is not None and lane_live[lane]
+                       and meta[5] is not None and now >= meta[5]]
+            if expired:
+                idx = jnp.asarray(np.asarray(expired, np.int32))
+                state = state._replace(
+                    active=state.active.at[:, idx].set(False))
+                self._state = state
+                lane_live[expired] = False
+                for lane in expired:
+                    self._lane_status[lane] = QueryStatus.DEADLINE
             retiring = [lane for lane, meta in enumerate(self._lane_meta)
                         if meta is not None and not lane_live[lane]]
             if retiring:
@@ -771,19 +915,36 @@ class ShardedEngine:
             lanes_np, pt_np, n_live = self.pagepool.live_bucket(
                 self.min_bucket)
             if n_live:
+                live_m, merge_m = self._shard_masks()
                 with tl.span("tick.jit", bucket=len(lanes_np),
                              live=n_live, shards=self.S):
                     state, (act, hops_b), m_ids, m_dists = self._tick_fn(
                         self._state, self._stk["x_pad"],
                         self._stk["adj_pad"], self._stk["live_pad"],
                         self._stk["gid_pad"], jnp.asarray(lanes_np),
-                        jnp.asarray(pt_np))
+                        jnp.asarray(pt_np), jnp.asarray(live_m),
+                        jnp.asarray(merge_m))
                     if tl.enabled:      # make the span cover device time
                         jax.block_until_ready(state)
                 self._state = state
                 self.stats.ticks += 1
-                lane_live = np.asarray(act).any(axis=0)     # (B,)
-                now = time.perf_counter()
+                lane_live = np.array(np.asarray(act).any(axis=0))   # (B,)
+                now = self._clock()
+                # deadline force-expiry over live bucket rows
+                expired = [
+                    j for j in range(n_live) if lane_live[j]
+                    and self._lane_meta[int(lanes_np[j])] is not None
+                    and self._lane_meta[int(lanes_np[j])][5] is not None
+                    and now >= self._lane_meta[int(lanes_np[j])][5]]
+                if expired:
+                    lanes_x = lanes_np[expired]
+                    self._state = self._state._replace(
+                        active=self._state.active.at[
+                            :, jnp.asarray(lanes_x)].set(False))
+                    lane_live[expired] = False
+                    for lane in lanes_x:
+                        self._lane_status[int(lane)] = \
+                            QueryStatus.DEADLINE
                 retiring = [
                     j for j in range(n_live) if not lane_live[j]
                     and self._lane_meta[int(lanes_np[j])] is not None]
@@ -818,14 +979,26 @@ class ShardedEngine:
         for j in retiring:
             lane = int(lanes_np[j])
             rl.append(lane)
-            rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
+            rid, t_in, t_seed, tenant, gen, _ = self._lane_meta[lane]
             ids = m_ids[j].astype(np.int64)
             dists = np.where(ids < 0, np.inf,
                              m_dists[j]).astype(np.float32)
             hops = int(hops_b[:, j].max())
+            responding = self._last_responding
+            degraded = self._lane_degraded[lane] or responding < self.S
+            status = self._lane_status[lane] or (
+                QueryStatus.DEGRADED if degraded else QueryStatus.OK)
             self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
-                                  "tenant": tenant}
+                                  "tenant": tenant,
+                                  "degraded": bool(degraded),
+                                  "status": status.value,
+                                  "shards_responding": responding}
             self.stats.completed += 1
+            self.stats.note_terminal(status)
+            if status is QueryStatus.DEADLINE:
+                self.stats.deadline_hit += 1
+            if degraded:
+                self.stats.degraded += 1
             self.stats.total_hops += int(hops_b[:, j].sum())
             if hops >= self.cfg.max_hops:
                 self.stats.straggled += 1
@@ -844,6 +1017,8 @@ class ShardedEngine:
                 self.traces.add(tr)
                 self._lane_trace[lane] = None
             self._lane_meta[lane] = None
+            self._lane_status[lane] = None
+            self._lane_degraded[lane] = False
             feed.setdefault((tenant, gen), []).append(ids)
         self.pagepool.free(np.asarray(rl, np.int32))
         reg0 = self.sharded.shards[0].dqf.tenants
@@ -857,14 +1032,26 @@ class ShardedEngine:
         hops_all = np.asarray(state.stats.hops)     # (S, W)
         feed = {}                                   # (tenant, gen) -> [ids]
         for lane in retiring:
-            rid, t_in, t_seed, tenant, gen = self._lane_meta[lane]
+            rid, t_in, t_seed, tenant, gen, _ = self._lane_meta[lane]
             ids = m_ids[lane].astype(np.int64)
             dists = np.where(ids < 0, np.inf,
                              m_dists[lane]).astype(np.float32)
             hops = int(hops_all[:, lane].max())
+            responding = self._last_responding
+            degraded = self._lane_degraded[lane] or responding < self.S
+            status = self._lane_status[lane] or (
+                QueryStatus.DEGRADED if degraded else QueryStatus.OK)
             self._results[rid] = {"ids": ids, "dists": dists, "hops": hops,
-                                  "tenant": tenant}
+                                  "tenant": tenant,
+                                  "degraded": bool(degraded),
+                                  "status": status.value,
+                                  "shards_responding": responding}
             self.stats.completed += 1
+            self.stats.note_terminal(status)
+            if status is QueryStatus.DEADLINE:
+                self.stats.deadline_hit += 1
+            if degraded:
+                self.stats.degraded += 1
             self.stats.total_hops += int(hops_all[:, lane].sum())
             if hops >= self.cfg.max_hops:
                 self.stats.straggled += 1
@@ -883,6 +1070,8 @@ class ShardedEngine:
                 self.traces.add(tr)
                 self._lane_trace[lane] = None
             self._lane_meta[lane] = None
+            self._lane_status[lane] = None
+            self._lane_degraded[lane] = False
             feed.setdefault((tenant, gen), []).append(ids)
         # merged global ids feed the owning shards' counters ONCE per
         # query: every shard's Alg-2 clock sees one query per lane,

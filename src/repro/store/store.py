@@ -175,7 +175,9 @@ class VectorStore:
                                      name="rows", prefetch=t.prefetch,
                                      track_rows=self.quant is None,
                                      tally_decay_every=t.tally_decay_every,
-                                     registry=self.registry)
+                                     registry=self.registry,
+                                     fetch_retries=t.fetch_retries,
+                                     fetch_backoff_s=t.fetch_backoff_s)
         if self.quant is not None:
             cbf = BlockFile(os.path.join(d, "codes.bin"), self.capacity,
                             self._codes.shape[1], self._codes.dtype,
@@ -188,7 +190,9 @@ class VectorStore:
                 cbf, self._cache_slots(cbf), name="codes",
                 prefetch=t.prefetch, track_rows=True,
                 tally_decay_every=t.tally_decay_every,
-                registry=self.registry)
+                registry=self.registry,
+                fetch_retries=t.fetch_retries,
+                fetch_backoff_s=t.fetch_backoff_s)
 
     def _cache_slots(self, bf: BlockFile) -> int:
         t = self.tier
@@ -421,9 +425,12 @@ class VectorStore:
                          prefetch=self.tier.prefetch,
                          track_rows=old._track_rows,
                          tally_decay_every=self.tier.tally_decay_every,
-                         registry=self.registry)
+                         registry=self.registry,
+                         fetch_retries=old.fetch_retries,
+                         fetch_backoff_s=old.fetch_backoff_s)
         new.counters = old.counters
         new._snap_prev = dict(old._snap_prev)   # snapshot window survives
+        new.chaos = old.chaos       # an armed fault plan survives growth
         return new
 
     def _encode(self, rows: np.ndarray) -> np.ndarray:

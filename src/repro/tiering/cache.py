@@ -29,6 +29,7 @@ do — can only see current bytes.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Iterable, Optional
 
 import jax.numpy as jnp
@@ -38,13 +39,26 @@ from .blockfile import BlockFile
 
 __all__ = ["BlockCache"]
 
+_MASK64 = (1 << 64) - 1
+
+
+def _backoff_unit(a: int, b: int) -> float:
+    """Deterministic jitter in [0, 1) for one retry backoff (splitmix64;
+    local copy — the tier sits below repro.obs/repro.chaos)."""
+    x = ((a & _MASK64) * 0x9E3779B97F4A7C15 + b + 0x632BE59BD9B4E019) \
+        & _MASK64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return ((x ^ (x >> 31)) >> 11) * (1.0 / (1 << 53))
+
 
 class BlockCache:
     """Bounded device arena + clock eviction + miss-driven admission."""
 
     def __init__(self, bf: BlockFile, slots: int, *, name: str = "",
                  prefetch: bool = False, track_rows: bool = False,
-                 tally_decay_every: int = 0, registry=None):
+                 tally_decay_every: int = 0, registry=None,
+                 fetch_retries: int = 3, fetch_backoff_s: float = 0.002):
         self.bf = bf
         self.slots = max(1, min(int(slots), bf.n_blocks))
         self.name = name
@@ -83,7 +97,18 @@ class BlockCache:
         self._hit_tally = np.zeros(bf.n_blocks, np.int64)
         self.counters = dict(hits=0, misses=0, evictions=0, admissions=0,
                              invalidations=0, prefetch_issued=0,
-                             prefetch_applied=0, relayouts=0)
+                             prefetch_applied=0, relayouts=0,
+                             fetch_retries=0, fetch_failures=0)
+        # Fault handling for the host-fetch disk reads: bounded retries
+        # with jittered exponential backoff, then per-row sentinel
+        # fallback.  ``chaos`` is the zero-overhead injection hook — None
+        # keeps the exact healthy read path (repro.chaos.install_chaos
+        # arms it); degraded batch rows accumulate for the serving engine
+        # to drain after the tick and mark on the affected queries.
+        self.fetch_retries = int(fetch_retries)
+        self.fetch_backoff_s = float(fetch_backoff_s)
+        self.chaos = None
+        self._degraded_rows: set = set()
         # windowed-stats baseline for stats_snapshot() deltas
         self._snap_prev = dict(self.counters)
         # re-home the counters on a metrics registry (repro.obs): scraped
@@ -142,7 +167,12 @@ class BlockCache:
         valid = cols < self.bf.capacity
         miss = valid & ~hit
         if miss.any():
-            out[miss] = self.bf.rows[cols[miss]]     # file stays logical
+            # batch row (first axis) per missed element, aligned with the
+            # C-order flattening of cols[miss] — the engines map these
+            # back to lanes when a read degrades to the sentinel
+            brow = (np.nonzero(miss)[0] if cols.ndim >= 2
+                    else np.zeros(int(miss.sum()), np.int64))
+            out[miss] = self._read_missed(cols[miss], brow)
             np.add.at(self._miss_tally, bid[miss], 1)
         got = valid & hit
         if got.any():
@@ -152,6 +182,64 @@ class BlockCache:
         self.counters["hits"] += int(got.sum())
         self.counters["misses"] += int(miss.sum())
         return out
+
+    def _read_missed(self, cols: np.ndarray,
+                     batch_rows: np.ndarray) -> np.ndarray:
+        """Serve missed rows from the mmap, surviving read faults.
+
+        Healthy path (``chaos is None`` and the read succeeds): the exact
+        single vectorized read the cache always did — byte for byte.
+        With chaos armed, or when the vectorized read raises a real
+        ``OSError``, reads fall back to one attempt loop per unique block
+        (bounded retries, jittered exponential backoff); a block that
+        exhausts its retries serves zero rows (the sentinel fallback —
+        their garbage scores lose every top-k comparison) and its batch
+        rows are recorded for :meth:`take_degraded_rows`.
+        """
+        if self.chaos is None:
+            try:
+                return np.array(self.bf.rows[cols])
+            except OSError:
+                pass                     # real IO fault: per-block retries
+        out = np.zeros((cols.shape[0], self.bf.width), self.bf.dtype)
+        bid = np.minimum(self._perm[cols] >> self.bf.log2_block,
+                         self.bf.n_blocks)
+        for b in np.unique(bid):
+            sel = bid == b
+            rows = self._fetch_block_rows(int(b), cols[sel])
+            if rows is None:
+                self.counters["fetch_failures"] += 1
+                self._degraded_rows.update(
+                    int(r) for r in np.unique(batch_rows[sel]))
+            else:
+                out[sel] = rows
+        return out
+
+    def _fetch_block_rows(self, bid: int,
+                          cols: np.ndarray) -> Optional[np.ndarray]:
+        """One block's missed rows, retried to success or None."""
+        attempts = self.fetch_retries + 1
+        for attempt in range(attempts):
+            try:
+                if self.chaos is not None:
+                    self.chaos.tier_read(bid)   # may raise injected IOError
+                return np.array(self.bf.rows[cols])
+            except OSError:
+                if attempt == attempts - 1:
+                    return None
+                self.counters["fetch_retries"] += 1
+                delay = (self.fetch_backoff_s * (1 << attempt)
+                         * (0.5 + 0.5 * _backoff_unit(bid, attempt)))
+                if self.chaos is not None:
+                    self.chaos.sleep(delay)     # virtual under a ChaosClock
+                elif delay > 0:
+                    time.sleep(delay)
+        return None
+
+    def take_degraded_rows(self) -> set:
+        """Drain the batch rows whose reads fell back to the sentinel."""
+        rows, self._degraded_rows = self._degraded_rows, set()
+        return rows
 
     def _load_block(self, bid: int) -> np.ndarray:
         """Gather one block's rows from the file via the current layout."""

@@ -40,6 +40,13 @@ class TierConfig:
     # ``relayout_tier`` clusters around recent traffic, not all-time
     # counts (0 = never decay, the pre-decay behaviour).
     tally_decay_every: int = 64
+    # Host-fetch fault handling: a failed mmap read is retried up to
+    # ``fetch_retries`` times with jittered exponential backoff starting
+    # at ``fetch_backoff_s``; exhausted retries fall back to sentinel
+    # rows and mark the affected queries degraded instead of killing the
+    # jitted tick (0 retries = fail to sentinel on the first error).
+    fetch_retries: int = 3
+    fetch_backoff_s: float = 0.002
 
     def __post_init__(self):
         if self.mode not in ("none", "host"):
@@ -53,6 +60,10 @@ class TierConfig:
             raise ValueError("cache_frac must be in (0, 1]")
         if self.tally_decay_every < 0:
             raise ValueError("tally_decay_every must be >= 0")
+        if self.fetch_retries < 0:
+            raise ValueError("fetch_retries must be >= 0")
+        if self.fetch_backoff_s < 0:
+            raise ValueError("fetch_backoff_s must be >= 0")
 
     @property
     def enabled(self) -> bool:

@@ -1,0 +1,414 @@
+"""Chaos harness + graceful degradation (repro.chaos).
+
+The contract under test: with no fault armed every degraded path is a
+bit-identical no-op; with faults armed no engine tick ever raises, every
+submitted query terminates with an explicit status (ok / dropped / shed /
+deadline / degraded), and each degradation mechanism does what it says —
+deadlines retire with current best-k, bounded queues shed per policy,
+tier fetches retry to success (bit-identity) or fall back to sentinels
+(``degraded=True``), failed shards are quarantined and routed around
+with merge-with-dropout renormalization, then probed back in.
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosClock, FaultPlan, install_chaos
+from repro.core import DQF, DQFConfig, TierConfig, ZipfWorkload
+from repro.serving import PagedWaveEngine, WaveEngine
+from repro.serving.status import (SHED_POLICIES, EngineConfig, QueryStatus,
+                                  shed_victim)
+from repro.sharding import ShardConfig, ShardedDQF, ShardedEngine
+
+from tests._hypothesis_compat import given, settings, st
+from tests.conftest import make_clustered
+
+STATUSES = {s.value for s in QueryStatus}
+
+
+# ------------------------------------------------------------------- units
+def _entry(rid, tenant="default"):
+    return (rid, None, 0.0, tenant, 0, None)
+
+
+def test_shed_policy_reject_newest():
+    q = collections.deque([_entry(0), _entry(1)])
+    victim = shed_victim(q, _entry(2), "reject-newest")
+    assert victim[0] == 2
+    assert [e[0] for e in q] == [0, 1]
+
+
+def test_shed_policy_shed_oldest():
+    q = collections.deque([_entry(0), _entry(1)])
+    victim = shed_victim(q, _entry(2), "shed-oldest")
+    assert victim[0] == 0
+    assert [e[0] for e in q] == [1, 2]
+
+
+def test_shed_policy_tenant_fair():
+    # "a" dominates the queue → its newest entry is the victim, the
+    # light tenant's newcomer is admitted
+    q = collections.deque([_entry(0, "a"), _entry(1, "a"), _entry(2, "a"),
+                           _entry(3, "b")])
+    victim = shed_victim(q, _entry(4, "b"), "tenant-fair")
+    assert victim[0] == 2
+    assert [e[0] for e in q] == [0, 1, 3, 4]
+    # the newcomer's own tenant is heaviest → it is the victim itself
+    q2 = collections.deque([_entry(0, "a"), _entry(1, "a"), _entry(2, "b")])
+    victim = shed_victim(q2, _entry(3, "a"), "tenant-fair")
+    assert victim[0] == 3
+    assert [e[0] for e in q2] == [0, 1, 2]
+
+
+def test_engine_config_validates():
+    with pytest.raises(ValueError):
+        EngineConfig(shed_policy="nope")
+    with pytest.raises(ValueError):
+        EngineConfig(max_queue=0)
+    with pytest.raises(ValueError):
+        EngineConfig(quarantine_after=0)
+    assert EngineConfig().shed_policy in SHED_POLICIES
+
+
+def test_fault_plan_replay_is_deterministic():
+    def trace(plan):
+        out = []
+        for block in range(32):
+            for _ in range(3):
+                try:
+                    plan.tier_read(block)
+                    out.append((block, True))
+                except IOError:
+                    out.append((block, False))
+        return out
+
+    plan = FaultPlan(seed=11, tier_io_rate=0.5)
+    first = trace(plan)
+    assert any(not ok for _, ok in first)
+    plan.reset()
+    assert trace(plan) == first
+    assert trace(FaultPlan(seed=11, tier_io_rate=0.5)) == first
+
+
+def test_chaos_clock_sleep_is_virtual():
+    clk = ChaosClock()
+    plan = FaultPlan(seed=0, tier_latency_rate=1.0, tier_latency_s=0.25,
+                     clock=clk)
+    plan.tier_read(3)
+    assert clk.slept == pytest.approx(0.25)
+    assert clk() == clk.now() == pytest.approx(0.25)
+    with pytest.raises(IOError):
+        FaultPlan(seed=0, tier_broken_blocks=frozenset([7])).tier_read(7)
+
+
+# -------------------------------------------------------- deadlines / shed
+def test_deadline_retires_in_flight_with_best_k(built_dqf):
+    dqf, wl = built_dqf
+    clk = ChaosClock()
+    eng = WaveEngine(dqf, wave_size=8, tick_hops=1, clock=clk)
+    rids = eng.submit(wl.sample(8), deadline_ms=50.0)
+    eng.step()                       # seed + 1 hop: nobody finishes yet
+    live = [r for r in rids if r not in eng._results]
+    assert live, "one tick_hops=1 tick should not finish 8 queries"
+    clk.advance(1.0)                 # blow every deadline
+    eng.step()
+    for r in live:
+        res = eng._results[r]
+        assert res["status"] == "deadline"
+        assert res["ids"].shape == (dqf.cfg.k,)
+    assert eng.stats.deadline_hit >= len(live)
+    assert not eng._any_live()
+
+
+def test_deadline_expires_queued_requests_empty(built_dqf):
+    dqf, wl = built_dqf
+    clk = ChaosClock()
+    eng = WaveEngine(dqf, wave_size=4, tick_hops=2, clock=clk)
+    rids = eng.submit(wl.sample(12), deadline_ms=10.0)
+    clk.advance(1.0)                 # expire before anything is seeded
+    out = eng.run_until_drained()
+    assert set(rids) <= set(out["results"])
+    for r in rids:
+        res = out["results"][r]
+        assert res["status"] == "deadline"
+    # never-seeded requests carry the empty sentinel result
+    assert eng.stats.completed == 0
+
+
+def test_bounded_queue_sheds_with_explicit_status(built_dqf):
+    dqf, wl = built_dqf
+    eng = WaveEngine(dqf, wave_size=4, tick_hops=4,
+                     engine_cfg=EngineConfig(max_queue=4,
+                                             shed_policy="reject-newest"))
+    rids = eng.submit(wl.sample(12))
+    assert eng.stats.shed == 8
+    shed_now = [r for r in rids if r in eng._results]
+    assert len(shed_now) == 8
+    assert all(eng._results[r]["status"] == "shed" for r in shed_now)
+    out = eng.run_until_drained()
+    assert set(rids) <= set(out["results"])     # every rid terminates
+    served = [r for r in rids if out["results"][r]["status"] == "ok"]
+    assert len(served) == 4
+    assert eng.stats.terminal["shed"] == 8
+
+
+def test_admission_tightens_while_alert_fires(built_dqf):
+    dqf, _ = built_dqf
+
+    class _FakeMonitor:
+        def __init__(self):
+            self.on_fire, self.on_resolve = [], []
+
+    from repro.serving.status import attach_admission_control
+    eng = WaveEngine(dqf, wave_size=4,
+                     engine_cfg=EngineConfig(max_queue=10))
+    mon = _FakeMonitor()
+    attach_admission_control(eng, mon, factor=0.5)
+    assert eng.effective_max_queue() == 10
+    for cb in mon.on_fire:
+        cb("slo_burn")
+    assert eng.effective_max_queue() == 5
+    for cb in mon.on_resolve:
+        cb("slo_burn")
+    assert eng.effective_max_queue() == 10
+
+
+# ----------------------------------------------------------- tier failures
+N, D = 900, 16
+
+
+@pytest.fixture(scope="module")
+def tier_world(tmp_path_factory):
+    x = make_clustered(n=N, d=D, clusters=10, seed=21)
+    cfg = DQFConfig(dim=D, knn_k=10, out_degree=10, index_ratio=0.02, k=8,
+                    hot_pool=16, full_pool=32, max_hops=120,
+                    n_query_trigger=10 ** 6)
+    dqf = DQF(cfg).build(x)
+    wl = ZipfWorkload(x, beta=1.5, sigma=0.05, seed=22)
+    _, t = wl.sample(2000, with_targets=True)
+    dqf.counter.record(t)
+    dqf.rebuild_hot()
+    path = str(tmp_path_factory.mktemp("ckpt") / "dqf.npz")
+    dqf.save(path)
+    return {"cfg": cfg, "path": path, "wl": wl, "tmp": tmp_path_factory}
+
+
+def _load_tiered(world, name, **tier_over):
+    import dataclasses
+    kw = dict(mode="host", dir=str(world["tmp"].mktemp(name)),
+              block_rows=16, cache_frac=0.25, fetch_backoff_s=0.0)
+    kw.update(tier_over)
+    cfg = dataclasses.replace(world["cfg"], tier=TierConfig(**kw))
+    return DQF.load(world["path"], cfg)
+
+
+def test_tier_fault_retried_to_success_is_bit_identical(tier_world):
+    q = tier_world["wl"].sample(48)
+    plain = _load_tiered(tier_world, "plain")
+    faulty = _load_tiered(tier_world, "faulty")
+    plan = FaultPlan(seed=5, tier_fail_first_fetch=True)
+    install_chaos(faulty, plan)
+    a = plain.search(q, record=False)
+    b = faulty.search(q, record=False)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists),
+                                  np.asarray(b.dists))
+    assert plan.injected["tier_io"] > 0
+    counters = faulty.store.full_phase_cache().counters
+    assert counters["fetch_retries"] > 0
+    assert counters["fetch_failures"] == 0
+
+
+def test_tier_fault_past_retries_degrades_not_raises(tier_world):
+    dqf = _load_tiered(tier_world, "broken", fetch_retries=1)
+    plan = FaultPlan(seed=5, tier_io_rate=1.0)     # every attempt fails
+    install_chaos(dqf, plan)
+    eng = WaveEngine(dqf, wave_size=8, tick_hops=4)
+    rids = eng.submit(tier_world["wl"].sample(24))
+    out = eng.run_until_drained()                  # must not raise
+    assert set(rids) <= set(out["results"])
+    degraded = [r for r in rids if out["results"][r]["degraded"]]
+    assert degraded, "injected always-fail tier reads must mark results"
+    assert all(out["results"][r]["status"] == "degraded"
+               for r in degraded)
+    counters = dqf.store.full_phase_cache().counters
+    assert counters["fetch_failures"] > 0
+    assert eng.stats.degraded == len(degraded)
+
+
+def test_tier_metrics_published(tier_world):
+    dqf = _load_tiered(tier_world, "metrics")
+    install_chaos(dqf, FaultPlan(seed=1, tier_fail_first_fetch=True))
+    dqf.search(tier_world["wl"].sample(16), record=False)
+    keys = " ".join(dqf.scrape())
+    assert "tier_fetch_retries_total" in keys
+    assert "tier_fetch_failures_total" in keys
+
+
+# -------------------------------------------------------------- page pool
+def test_pool_denial_is_transient(built_dqf):
+    dqf, wl = built_dqf
+    eng = PagedWaveEngine(dqf, capacity=8, tick_hops=4)
+    plan = FaultPlan(seed=9, pool_deny_rate=0.6)
+    install_chaos(eng, plan)
+    rids = eng.submit(wl.sample(24))
+    out = eng.run_until_drained()
+    assert set(rids) <= set(out["results"])
+    assert all(out["results"][r]["status"] in STATUSES for r in rids)
+    assert eng.stats.completed == 24
+    assert plan.injected["pool_deny"] > 0
+
+
+# ------------------------------------------------------------------ shards
+SD_CFG = dict(dim=D, k=5, hot_pool=16, full_pool=32, max_hops=100,
+              n_query_trigger=10 ** 6)
+
+
+def _sharded(num_shards=3, seed=0):
+    x = make_clustered(n=600, d=D, clusters=8, seed=seed)
+    rng = np.random.default_rng(seed)
+    q = x[rng.choice(600, 32, replace=False)] \
+        + 0.05 * rng.standard_normal((32, D)).astype(np.float32)
+    sd = ShardedDQF(DQFConfig(**SD_CFG),
+                    ShardConfig(num_shards=num_shards)).build(x)
+    sd.warm(q[:8])
+    return sd, x, q
+
+
+def test_shard_failure_quarantines_and_routes_around():
+    sd, x, q = _sharded()
+    eng = ShardedEngine(sd, wave_size=16, tick_hops=4)
+    plan = FaultPlan(seed=2,
+                     shard_fail_ticks={1: frozenset(range(100_000))})
+    install_chaos(eng, plan)
+    rids = eng.submit(q)
+    out = eng.run_until_drained()                  # must not raise
+    assert set(rids) <= set(out["results"])
+    for r in rids:
+        res = out["results"][r]
+        assert res["shards_responding"] == 2
+        assert res["degraded"]
+        assert res["status"] == "degraded"
+    assert eng.health.quarantined[1]
+    assert eng.health.quarantines == 1
+    # route-around excludes the dead shard's rows entirely
+    dead_rows = set(
+        sd.shards[1].dqf.store.ext_ids[
+            :sd.shards[1].dqf.store.n].tolist())
+    got = np.stack([out["results"][r]["ids"] for r in rids])
+    assert not (set(got[got >= 0].tolist()) & dead_rows)
+    # renormalization contract: same recall ballpark as the explicit
+    # merge-with-dropout over the responding shards
+    ids_deg, _, cov = sd.search_degraded(q, [True, False, True])
+    assert cov == pytest.approx(2 / 3)
+    from repro.core import ground_truth, recall_at_k
+    gt = ground_truth(x, q, sd.cfg.k)
+    r_eng = recall_at_k(np.where(got < 0, 0, got), gt)
+    r_ref = recall_at_k(np.where(ids_deg < 0, 0, ids_deg), gt)
+    assert r_eng > r_ref - 0.08
+
+
+def test_shard_recovers_after_probes():
+    sd, x, q = _sharded(seed=3)
+    eng = ShardedEngine(
+        sd, wave_size=4, tick_hops=4,
+        engine_cfg=EngineConfig(quarantine_after=2, recover_after=2))
+    plan = FaultPlan(seed=4, shard_fail_ticks={2: frozenset(range(2))})
+    install_chaos(eng, plan)
+    rids = eng.submit(q)
+    out = eng.run_until_drained()
+    assert set(rids) <= set(out["results"])
+    assert eng.health.quarantines == 1
+    assert eng.health.readmissions == 1
+    assert not eng.health.quarantined.any()
+    responding = [out["results"][r]["shards_responding"] for r in rids]
+    # lanes retiring after the re-admission see full coverage again;
+    # whether any retired DURING the short outage is tick-timing, so
+    # only the bounds are asserted
+    assert max(responding) == 3
+    assert min(responding) >= 2
+
+
+def test_sharded_chaos_off_bit_identical():
+    """Mask plumbing is a no-op with every shard healthy."""
+    sa, x, q = _sharded(seed=5)
+    sb, _, _ = _sharded(seed=5)
+    ea = ShardedEngine(sa, wave_size=8, tick_hops=4)
+    eb = ShardedEngine(sb, wave_size=8, tick_hops=4)
+    install_chaos(eb, FaultPlan(seed=0))    # all-zero rates: no faults
+    ra, rb = ea.submit(q), eb.submit(q)
+    oa, ob = ea.run_until_drained(), eb.run_until_drained()
+    for i in range(q.shape[0]):
+        a, b = oa["results"][ra[i]], ob["results"][rb[i]]
+        np.testing.assert_array_equal(a["ids"], b["ids"])
+        np.testing.assert_array_equal(a["dists"], b["dists"])
+        assert b["status"] == "ok" and b["shards_responding"] == 3
+        assert not b["degraded"]
+
+
+# ------------------------------------------------------ property (hypothesis)
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_no_tick_raises_and_every_rid_terminates(built_dqf, seed):
+    """Randomized fault plans: the engine never raises mid-tick and every
+    submitted query lands in ``_results`` with an explicit status."""
+    dqf, wl = built_dqf
+    rng = np.random.default_rng(seed)
+    clk = ChaosClock()
+    eng = PagedWaveEngine(
+        dqf, capacity=8, tick_hops=4, clock=clk,
+        engine_cfg=EngineConfig(
+            max_queue=int(rng.integers(2, 12)),
+            shed_policy=SHED_POLICIES[seed % len(SHED_POLICIES)]))
+    plan = FaultPlan(seed=seed,
+                     pool_deny_rate=float(rng.uniform(0.0, 0.7)),
+                     clock=clk)
+    install_chaos(eng, plan)
+    rids = []
+    for batch in range(3):
+        dl = float(rng.uniform(5.0, 50.0)) if batch % 2 else None
+        rids += eng.submit(wl.sample(8), deadline_ms=dl)
+        eng.step()
+        clk.advance(float(rng.uniform(0.0, 0.05)))
+    out = eng.run_until_drained(max_ticks=2000)
+    assert set(rids) <= set(out["results"])
+    for r in rids:
+        assert out["results"][r]["status"] in STATUSES
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=3, deadline=None)
+def test_zero_rate_plan_is_bitwise_noop(built_dqf, seed):
+    """A fault-free replay is bitwise identical to the no-chaos oracle."""
+    dqf, wl = built_dqf
+    q = wl.sample(16)
+    ea = WaveEngine(dqf, wave_size=8, tick_hops=4)
+    eb = WaveEngine(dqf, wave_size=8, tick_hops=4)
+    install_chaos(eb, FaultPlan(seed=seed))
+    ra, rb = ea.submit(q), eb.submit(q)
+    oa, ob = ea.run_until_drained(), eb.run_until_drained()
+    for i in range(q.shape[0]):
+        a, b = oa["results"][ra[i]], ob["results"][rb[i]]
+        np.testing.assert_array_equal(a["ids"], b["ids"])
+        np.testing.assert_array_equal(a["dists"], b["dists"])
+        assert a["status"] == b["status"] == "ok"
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=3, deadline=None)
+def test_tiered_retry_to_success_property(tier_world, seed):
+    """Every injected fetch fault that is retried to success leaves the
+    tiered search bit-identical to the fault-free twin."""
+    q = tier_world["wl"].sample(24)
+    plain = _load_tiered(tier_world, f"p{seed % 977}")
+    faulty = _load_tiered(tier_world, f"f{seed % 977}")
+    plan = FaultPlan(seed=seed, tier_fail_first_fetch=True)
+    install_chaos(faulty, plan)
+    a = plain.search(q, record=False)
+    b = faulty.search(q, record=False)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists),
+                                  np.asarray(b.dists))
+    assert faulty.store.full_phase_cache().counters["fetch_failures"] == 0

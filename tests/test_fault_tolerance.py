@@ -44,6 +44,36 @@ def test_restore_rejects_missing_key(tmp_path):
         ck.restore(jax.eval_shape(lambda: bigger))
 
 
+def test_dqf_save_crash_mid_publish_keeps_old_checkpoint(
+        tmp_path, built_dqf, monkeypatch):
+    """DQF.save stages in a temp dir and commits via one atomic rename —
+    a crash at the commit point must leave the previous checkpoint
+    bit-identical and no temp litter behind."""
+    import glob
+
+    from repro.core.dqf import DQF
+
+    dqf, wl = built_dqf
+    path = str(tmp_path / "ckpt.npz")
+    dqf.save(path)
+    good = open(path, "rb").read()
+
+    def boom(src, dst):
+        raise OSError("chaos: crash at the atomic publish")
+
+    monkeypatch.setattr("repro.core.dqf.os.replace", boom)
+    with pytest.raises(OSError, match="atomic publish"):
+        dqf.save(path)
+    monkeypatch.undo()
+    assert open(path, "rb").read() == good      # old checkpoint intact
+    assert not glob.glob(str(tmp_path / ".dqf-save-*"))  # tmp cleaned
+    loaded = DQF.load(path, dqf.cfg)
+    q = wl.sample(8)
+    a = dqf.search(q, record=False)
+    b = loaded.search(q, record=False)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
 def test_async_save_error_surfaces(tmp_path):
     """IO failures in the background writer must raise on the next wait()
     (chmod tricks don't work as root, so break the path structurally: a

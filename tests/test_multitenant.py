@@ -293,10 +293,10 @@ def test_engine_survives_eviction_of_queued_tenant(mt_world):
     out = eng.run_until_drained()
     assert len(out["results"]) == 16
     for r in dead_rids:
-        assert out["results"][r].get("dropped", False)
+        assert out["results"][r]["status"] == "dropped"
         assert (out["results"][r]["ids"] >= dqf.store.n).all()
     for r in live_rids:
-        assert not out["results"][r].get("dropped", False)
+        assert out["results"][r]["status"] != "dropped"
     assert eng.stats.dropped == 8
     assert dqf.tenants.get("doomed").counter.since_rebuild == fed_before
     dqf.evict_tenant("doomed")

@@ -170,9 +170,9 @@ def test_evicted_tenant_drops_under_continuous_admission(world_x):
     out = eng.run_until_drained()
     assert len(out["results"]) == 16
     for r in dead_rids:
-        assert out["results"][r].get("dropped", False)
+        assert out["results"][r]["status"] == "dropped"
     for r in live_rids:
-        assert not out["results"][r].get("dropped", False)
+        assert out["results"][r]["status"] != "dropped"
     assert eng.stats.dropped == 8
     assert dqf.tenants.get("doomed").counter.since_rebuild == fed_before
     dqf.evict_tenant("doomed")
